@@ -1,0 +1,27 @@
+"""Figure 14: FPGA runtime vs. off-chip bandwidth (cycle model sweep).
+
+The paper's finding: larger workloads become bandwidth-bound (except LRMF,
+which stays compute-heavy). We sweep the model's I/O bandwidth x{1,2,4} at
+full dataset size and report the bound classification."""
+from __future__ import annotations
+
+from benchmarks.workloads import fpga_model
+from repro.data.synthetic import WORKLOADS
+
+PICK = ("remote_sensing_lr", "sn_logistic", "se_svm", "sn_lrmf", "se_lrmf")
+
+
+def run(csv_rows: list[str]):
+    for name in PICK:
+        w = WORKLOADS[name]
+        base = None
+        for bw in (1.0, 2.0, 4.0):
+            _, rt = fpga_model(w, epochs=1, bandwidth_scale=bw)
+            if base is None:
+                base = rt["total_s"]
+            csv_rows.append(
+                f"fig14_bandwidth/{name}_x{bw:g},0,"
+                f"total_s={rt['total_s']:.4f};bound={rt['bound']}"
+                f";speedup_vs_x1={base/rt['total_s']:.2f}"
+            )
+    return csv_rows

@@ -1,0 +1,68 @@
+"""Kernel microbenchmarks: strider decode, fused GLM engine, WKV chunk core —
+the per-component numbers behind the system-level tables."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.db.page import PageLayout, build_pages
+from repro.kernels.engine import ops as engine_ops
+from repro.kernels.strider import ops as strider_ops
+from repro.models import ssm
+
+
+def _time(fn, reps=5):
+    fn()  # compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        jax.block_until_ready(fn())
+    return (time.perf_counter() - t0) / reps
+
+
+def run(csv_rows: list[str]):
+    # strider decode throughput across widths
+    for d in (54, 520, 2000):
+        lo = PageLayout(n_features=d)
+        rng = np.random.default_rng(0)
+        n = lo.tuples_per_page * 64
+        pages = jnp.asarray(build_pages(
+            rng.normal(size=(n, d)).astype(np.float32),
+            rng.normal(size=n).astype(np.float32), lo,
+        ))
+        s = _time(lambda: strider_ops.decode_pages(pages, lo))
+        mb = pages.nbytes / 2**20
+        csv_rows.append(
+            f"kernels/strider_d{d},{s*1e6:.0f},MBps={mb/s:.0f};tuples={n}"
+        )
+
+    # fused GLM engine vs unfused reference
+    for act in ("linear", "logistic", "svm"):
+        rng = np.random.default_rng(1)
+        x = jnp.asarray(rng.normal(size=(8192, 512)).astype(np.float32))
+        y = jnp.asarray(np.sign(rng.normal(size=8192)).astype(np.float32))
+        w = jnp.asarray(rng.normal(size=512).astype(np.float32))
+        m = jnp.ones(8192, jnp.float32)
+        s = _time(lambda: engine_ops.glm_grad(x, y, w, m, act=act))
+        gflops = 2 * 2 * 8192 * 512 / s / 1e9
+        csv_rows.append(f"kernels/glm_{act},{s*1e6:.0f},GFLOPs={gflops:.1f}")
+
+    # WKV chunked vs sequential scan
+    rng = np.random.default_rng(2)
+    b, t, h, k = 4, 512, 8, 64
+    mk = lambda *sh: jnp.asarray(rng.normal(size=sh).astype(np.float32))
+    r, kk, v = mk(b, t, h, k), mk(b, t, h, k), mk(b, t, h, k)
+    lw = jnp.clip(jnp.asarray(-np.exp(rng.normal(-1, 1, (b, t, h, k)))), -8, -1e-4
+                  ).astype(jnp.float32)
+    u = mk(h, k)
+    s0 = jnp.zeros((b, h, k, k), jnp.float32)
+    chunked = jax.jit(lambda: ssm.wkv_chunked(r, kk, v, lw, u, s0, 32)[0])
+    seq = jax.jit(lambda: ssm.wkv_scan(r, kk, v, lw, u, s0)[0])
+    sc, ss = _time(chunked), _time(seq)
+    csv_rows.append(
+        f"kernels/wkv_chunked,{sc*1e6:.0f},seq_us={ss*1e6:.0f}"
+        f";chunked_speedup_x={ss/sc:.1f}"
+    )
+    return csv_rows

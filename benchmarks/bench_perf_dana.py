@@ -1,0 +1,76 @@
+"""§Perf (measured): hillclimbing the DAnA pipeline itself on this host.
+
+Iterations (each toggles ONE mechanism, steady-state timing, same math):
+  P0  paper-faithful baseline: host page decode + general hDFG engine
+      (vmapped update-rule threads + tree merge)
+  P1  + Striders: device page decode (the paper's access engine)
+  P2  + fused GLM kernel (the hardware generator's specialized datapath)
+  P3  + int8-quantized pages (beyond-paper: the strider dequantizes on
+      device — 4x fewer page bytes through the pool/interconnect, the
+      precision-vs-bandwidth trade of Kara et al. [25] made automatic)
+
+Reported: wall seconds per epoch + speedup ladder + P3 accuracy cost. The
+FPGA cycle model's corresponding ladder is in bench_tabla/bench_threads;
+this one is executed.
+"""
+from __future__ import annotations
+
+import os
+import time
+
+import numpy as np
+
+from benchmarks.workloads import BENCH_DIR, build_heap, traced
+from repro.core import solver
+from repro.core.engine import make_engine
+from repro.data.synthetic import WORKLOADS, generate
+from repro.db.heap import HeapFile, write_table
+
+
+def _run(w, heap, mode, fused, epochs=3):
+    g, part = traced(w)
+    eng = make_engine(g, part, use_fused_kernel=fused)
+    solver.train(g, part, heap, mode=mode, engine=eng, max_epochs=1)  # warm
+    t0 = time.perf_counter()
+    res = solver.train(g, part, heap, mode=mode, engine=eng, max_epochs=epochs)
+    return (time.perf_counter() - t0) / epochs, res
+
+
+def _quantized_heap(w, scale, seed=0):
+    path = os.path.join(BENCH_DIR, f"{w.name}_{scale:g}_q8.heap")
+    if not os.path.exists(path):
+        feats, labels = generate(w, scale=scale, seed=seed)
+        write_table(path, feats, labels, page_bytes=w.page_bytes,
+                    quantized=True)
+    return HeapFile(path)
+
+
+def run(csv_rows: list[str]):
+    for name, scale in (("remote_sensing_lr", 0.05), ("sn_linear", 0.01)):
+        w = WORKLOADS[name]
+        heap = build_heap(w, scale)
+        p0, _ = _run(w, heap, "dana-nostrider", fused=False)
+        p1, _ = _run(w, heap, "dana", fused=False)
+        p2, r2 = _run(w, heap, "dana", fused=True)
+        heap_q = _quantized_heap(w, scale)
+        p3, r3 = _run(w, heap_q, "dana", fused=True)
+        gnorm_gap = abs(r3.grad_norms[-1] - r2.grad_norms[-1]) / max(
+            abs(r2.grad_norms[-1]), 1e-9
+        )
+        csv_rows.append(
+            f"perf_dana/{name}_P0_baseline,{p0*1e6:.0f},speedup_x=1.00"
+        )
+        csv_rows.append(
+            f"perf_dana/{name}_P1_striders,{p1*1e6:.0f},speedup_x={p0/p1:.2f}"
+        )
+        csv_rows.append(
+            f"perf_dana/{name}_P2_fused,{p2*1e6:.0f},speedup_x={p0/p2:.2f}"
+            f";decode_s={r2.decode_s:.3f};compute_s={r2.compute_s:.3f}"
+        )
+        csv_rows.append(
+            f"perf_dana/{name}_P3_int8_pages,{p3*1e6:.0f},"
+            f"speedup_x={p0/p3:.2f}"
+            f";page_bytes_ratio={heap_q.n_pages/heap.n_pages:.2f}"
+            f";gradnorm_rel_gap={gnorm_gap:.4f}"
+        )
+    return csv_rows

@@ -1,0 +1,30 @@
+"""Roofline summary from dry-run artifacts (the LM-scale side of the repo):
+per-cell three-term roofline + bound classification, printed as CSV."""
+from __future__ import annotations
+
+from repro.launch.dryrun import ARTIFACT_DIR
+from repro.roofline.analysis import load_records, roofline_terms
+
+
+def run(csv_rows: list[str]):
+    recs = [r for r in load_records(ARTIFACT_DIR) if r.get("mesh") == "pod16x16"]
+    if not recs:
+        csv_rows.append("roofline/none,0,run_dryrun_first=1")
+        return csv_rows
+    for r in recs:
+        if r.get("status") == "skipped":
+            csv_rows.append(f"roofline/{r['arch']}__{r['shape']},0,skipped=1")
+            continue
+        if r.get("status") != "ok":
+            csv_rows.append(f"roofline/{r['arch']}__{r['shape']},0,error=1")
+            continue
+        t = roofline_terms(r)
+        step_us = max(t["compute_s"], t["memory_s"], t["collective_s"]) * 1e6
+        csv_rows.append(
+            f"roofline/{r['arch']}__{r['shape']},{step_us:.0f},"
+            f"bound={t['bound']};compute_s={t['compute_s']:.3e}"
+            f";memory_s={t['memory_s']:.3e};collective_s={t['collective_s']:.3e}"
+            f";roofline_frac={t['roofline_fraction']:.3f}"
+            f";useful_ratio={t['useful_flops_ratio']:.2f}"
+        )
+    return csv_rows

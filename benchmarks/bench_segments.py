@@ -1,0 +1,69 @@
+"""Figure 13: Greenplum segment scaling analogue.
+
+Greenplum = multi-segment parallel MADlib. Our analogue shards the table
+across N worker threads (numpy releases the GIL in BLAS), each runs the
+update rule on its shard per batch, merging per epoch — measured speedup vs
+1 segment. The paper finds 8 segments best with sub-linear scaling."""
+from __future__ import annotations
+
+import time
+from concurrent.futures import ThreadPoolExecutor
+
+import numpy as np
+
+from benchmarks.workloads import bench_workloads, build_heap, traced
+from repro.core.engine import default_metas, init_models
+from repro.core.jax_backend import compile_hdfg
+from repro.db.page import parse_page
+
+
+def _segment_epoch(models, feats, labels, pre_fn, post_fn, metas, coef):
+    acc = None
+    for s in range(0, feats.shape[0], coef):
+        xb, yb = feats[s : s + coef], labels[s : s + coef]
+        grads = [np.asarray(pre_fn(models, xb[i], yb[i], metas)) for i in
+                 range(xb.shape[0])]
+        g = np.sum(grads, axis=0)
+        acc = g if acc is None else acc + g
+    return acc
+
+
+def run(csv_rows: list[str]):
+    w, scale = next(
+        (w, s) for w, s in bench_workloads() if w.name == "patient"
+    )
+    heap = build_heap(w, scale)
+    pages = heap.read_all()
+    feats, labels = [], []
+    for p in pages:
+        f, l, _ = parse_page(p, heap.layout)
+        feats.append(f)
+        labels.append(l)
+    feats = np.concatenate(feats)[:2000]
+    labels = np.concatenate(labels)[:2000]
+
+    g, part = traced(w)
+    pre_fn, post_fn, _, spec = compile_hdfg(g, part)
+    metas = default_metas(g)
+    models = [np.asarray(m) for m in init_models(g)]
+    coef = spec[1] if spec else 64
+
+    base = None
+    for segs in (1, 2, 4, 8, 16):
+        shards = np.array_split(np.arange(feats.shape[0]), segs)
+        t0 = time.perf_counter()
+        with ThreadPoolExecutor(max_workers=segs) as ex:
+            futs = [
+                ex.submit(_segment_epoch, models, feats[idx], labels[idx],
+                          pre_fn, post_fn, metas, coef)
+                for idx in shards
+            ]
+            merged = np.sum([f.result() for f in futs], axis=0)
+        dt = time.perf_counter() - t0
+        if base is None:
+            base = dt
+        csv_rows.append(
+            f"fig13_segments/patient_s{segs},{dt*1e6:.0f},"
+            f"speedup_vs_1seg={base/dt:.2f}"
+        )
+    return csv_rows

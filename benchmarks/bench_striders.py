@@ -1,0 +1,65 @@
+"""Figure 11: DAnA with and without Striders.
+
+Without striders = the CPU transforms training tuples and ships them to the
+execution engine (host per-tuple page parse); with striders = page-granular
+on-device decode. The paper reports 10.7x vs 2.3x over MADlib (striders
+contribute 4.6x); we measure the same ratio structure on scaled data, plus a
+pure decode-throughput microbenchmark of the strider kernel path."""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.workloads import bench_workloads, build_heap, time_mode
+from repro.db.page import parse_page
+from repro.kernels.strider import ops as strider_ops
+
+
+def run(csv_rows: list[str]):
+    ratios = []
+    for w, scale in bench_workloads():
+        if w.algorithm == "lrmf":
+            continue
+        heap = build_heap(w, scale)
+        if heap.n_tuples > 6000:
+            continue
+        madlib_s, _ = time_mode(w, heap, "madlib", epochs=1)
+        with_s, _ = time_mode(w, heap, "dana", epochs=1)
+        without_s, _ = time_mode(w, heap, "dana-nostrider", epochs=1)
+        x_with = madlib_s / with_s
+        x_without = madlib_s / without_s
+        ratios.append(x_with / x_without)
+        csv_rows.append(
+            f"fig11_striders/{w.name},{with_s*1e6:.0f},"
+            f"with_x={x_with:.1f};without_x={x_without:.1f}"
+            f";strider_gain_x={x_with/x_without:.1f}"
+        )
+    if ratios:
+        g = float(np.exp(np.mean(np.log(ratios))))
+        csv_rows.append(
+            f"fig11_striders/geomean_gain,0,strider_gain_x={g:.2f};paper_x=4.6"
+        )
+
+    # decode-throughput microbench: device page decode vs host per-tuple parse
+    w, scale = bench_workloads()[0]
+    heap = build_heap(w, scale)
+    pages_np = heap.read_all()
+    jpages = jax.numpy.asarray(pages_np)
+    strider_ops.decode_pages(jpages, heap.layout)  # compile
+    t0 = time.perf_counter()
+    for _ in range(5):
+        jax.block_until_ready(strider_ops.decode_pages(jpages, heap.layout))
+    dev_s = (time.perf_counter() - t0) / 5
+    t0 = time.perf_counter()
+    for p in pages_np:
+        parse_page(p, heap.layout)
+    host_s = time.perf_counter() - t0
+    mb = pages_np.nbytes / 2**20
+    csv_rows.append(
+        f"fig11_striders/decode_microbench,{dev_s*1e6:.0f},"
+        f"device_MBps={mb/dev_s:.0f};host_MBps={mb/host_s:.0f}"
+        f";device_gain_x={host_s/dev_s:.1f}"
+    )
+    return csv_rows

@@ -1,0 +1,50 @@
+"""Figure 16: DAnA vs TABLA.
+
+TABLA (the authors' earlier framework) = single-threaded acceleration with no
+strider interleaving: its model is our cycle estimator pinned to one thread
+with access/execute serialized instead of overlapped. The paper reports DAnA
+4.7x faster on average; we reproduce the ratio from the same design-space."""
+from __future__ import annotations
+
+import math
+
+import numpy as np
+
+from benchmarks.workloads import fpga_model, traced
+from repro.core import hwgen
+from repro.data.synthetic import WORKLOADS
+from repro.db.page import PageLayout
+from repro.core.striders import strider_cycles_per_page
+
+PICK = ("remote_sensing_lr", "wlan", "patient", "blog_feedback", "netflix",
+        "sn_logistic", "sn_svm", "sn_linear")
+
+
+def run(csv_rows: list[str]):
+    ratios = []
+    for name in PICK:
+        w = WORKLOADS[name]
+        # DAnA: best design point, access/execute overlapped (max)
+        point, rt = fpga_model(w, epochs=1)
+        dana_cycles = point.est_epoch_cycles
+        # TABLA: single thread, serialized access + execute (sum)
+        g, part = traced(w)
+        layout = PageLayout(n_features=w.n_features, page_bytes=w.page_bytes)
+        spec = hwgen.FPGASpec()
+        coef = g.node(g.merge_id).attrs["coef"] if g.merge_id else 1
+        tp = hwgen._estimate(
+            g, part, layout, w.n_tuples, spec, 1,
+            max(hwgen._max_aus(spec) // 8, 1), coef,
+            sum(4 * g.node(m).size for m in g.model_ids),
+        )
+        access = math.ceil(
+            layout.n_pages(w.n_tuples) * strider_cycles_per_page(layout)
+        )
+        exec_c = math.ceil(w.n_tuples / coef) * tp.cycles_per_batch
+        tabla_cycles = access + exec_c  # serialized, single-threaded
+        x = tabla_cycles / dana_cycles
+        ratios.append(x)
+        csv_rows.append(f"fig16_tabla/{name},0,dana_vs_tabla_x={x:.2f}")
+    g = float(np.exp(np.mean(np.log(ratios))))
+    csv_rows.append(f"fig16_tabla/geomean,0,dana_vs_tabla_x={g:.2f};paper_x=4.7")
+    return csv_rows

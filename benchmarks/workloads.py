@@ -1,0 +1,129 @@
+"""Shared benchmark harness: build scaled Table 3 workloads as heap files,
+wire each to its DSL algorithm, and time the three execution modes.
+
+Scaling: the paper's datasets are up to 38 GB; on this CPU container each
+benchmark uses a --scale fraction (default sized for seconds-level runs) with
+identical geometry (feature width, page layout). The FPGA cycle model runs at
+FULL size (it's analytic), so Table 5's modeled column uses the real tuple
+counts.
+"""
+from __future__ import annotations
+
+import os
+import time
+
+import numpy as np
+
+from repro.algorithms import linear_regression, logistic_regression, lrmf, svm
+from repro.core import hwgen, solver
+from repro.core.engine import make_engine
+from repro.core.translator import trace
+from repro.data.synthetic import WORKLOADS, Workload, generate
+from repro.db.bufferpool import BufferPool
+from repro.db.heap import write_table
+
+BENCH_DIR = os.environ.get("REPRO_BENCH_DIR", "artifacts/bench_data")
+
+# benchmark-friendly knobs per algorithm
+ALGO = {
+    "linear": lambda d: linear_regression(d, lr=0.05, merge_coef=256, epochs=1),
+    "logistic": lambda d: logistic_regression(d, lr=0.1, merge_coef=256, epochs=1),
+    "svm": lambda d: svm(d, lr=0.05, merge_coef=256, epochs=1),
+    "lrmf": lambda d: lrmf(d, rank=10, lr=1e-3, merge_coef=8, epochs=1),
+}
+
+# MADlib's tuple-at-a-time python loop needs smaller tuple counts to finish
+MADLIB_CAP = 2_000
+
+
+def build_heap(w: Workload, scale: float, seed: int = 0):
+    os.makedirs(BENCH_DIR, exist_ok=True)
+    path = os.path.join(BENCH_DIR, f"{w.name}_{scale:g}.heap")
+    if not os.path.exists(path):
+        feats, labels = generate(w, scale=scale, seed=seed)
+        write_table(path, feats, labels, page_bytes=w.page_bytes)
+    from repro.db.heap import HeapFile
+
+    return HeapFile(path)
+
+
+def traced(w: Workload):
+    return trace(lambda: ALGO[w.algorithm](w.n_features))
+
+
+_CACHE: dict = {}
+
+
+def time_mode(w: Workload, heap, mode: str, epochs: int = 1, warm: bool = True):
+    """Returns (seconds, TrainResult). Warm cache preloads the buffer pool.
+
+    Device modes reuse one jitted engine per (workload, tuples) and
+    pre-compile it before timing: accelerator synthesis / jit compilation is
+    an offline, catalog-time cost in DAnA's design (the FPGA is programmed
+    before the query runs), so measured runtimes are steady-state query
+    executions."""
+    key = (w.name, heap.n_tuples)
+    if key not in _CACHE:
+        g, part = traced(w)
+        _CACHE[key] = (g, part, make_engine(g, part))
+    g, part, engine = _CACHE[key]
+    pool = BufferPool(pool_bytes=max(heap.n_pages, 1) * heap.layout.page_bytes,
+                      page_bytes=heap.layout.page_bytes)
+    if warm:
+        pool.warm(heap)
+    else:
+        pool.clear()
+    if mode == "madlib":
+        t0 = time.perf_counter()
+        res = solver.madlib_train(g, part, heap, max_epochs=epochs)
+        return time.perf_counter() - t0, res
+    wkey = (w.name, mode, heap.n_tuples)
+    if wkey not in _CACHE:
+        solver.train(g, part, heap, pool=pool, mode=mode, engine=engine,
+                     max_epochs=1)
+        _CACHE[wkey] = True
+        if warm:
+            pool.warm(heap)
+        else:
+            pool.clear()
+    t0 = time.perf_counter()
+    res = solver.train(g, part, heap, pool=pool, mode=mode, engine=engine,
+                       max_epochs=epochs)
+    return time.perf_counter() - t0, res
+
+
+def fpga_model(w: Workload, epochs: int = 1, bandwidth_scale: float = 1.0,
+               n_threads: int | None = None, warm: bool = True):
+    """Paper-fidelity analytic runtime at FULL dataset size (150 MHz VU9P)."""
+    from repro.db.page import PageLayout
+
+    g, part = traced(w)
+    layout = PageLayout(n_features=w.n_features, page_bytes=w.page_bytes)
+    if n_threads is None:
+        point = hwgen.explore(g, part, layout, n_tuples=w.n_tuples)
+    else:
+        coef = g.node(g.merge_id).attrs["coef"] if g.merge_id else 1
+        point = hwgen._estimate(
+            g, part, layout, w.n_tuples, hwgen.FPGASpec(), n_threads,
+            max(hwgen._max_aus(hwgen.FPGASpec()) // max(n_threads, 1) // 8, 1),
+            coef, sum(4 * g.node(m).size for m in g.model_ids),
+        )
+    if point is None:  # design point does not fit the FPGA (BRAM/AU budget)
+        return None, None
+    rt = hwgen.modeled_runtime_s(point, layout, w.n_tuples, epochs,
+                                 bandwidth_scale=bandwidth_scale, warm_cache=warm)
+    return point, rt
+
+
+def bench_workloads(scale_public=0.01, scale_sn=0.004, scale_se=0.001):
+    """The workload list each benchmark iterates, with per-tier scales."""
+    out = []
+    for name, w in WORKLOADS.items():
+        if not w.synthetic:
+            s = scale_public
+        elif name.startswith("sn_"):
+            s = scale_sn
+        else:
+            s = scale_se
+        out.append((w, s))
+    return out

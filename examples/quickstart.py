@@ -1,0 +1,68 @@
+"""Quickstart: the paper's §4.3 flow, end to end.
+
+1. Define linear regression in DAnA's Python-embedded DSL (update rule,
+   merge function, convergence).
+2. Load a training table into the RDBMS substrate (slotted pages, heap file).
+3. Register the compiled accelerator artifact (hDFG + Strider program +
+   design point) in the catalog.
+4. Train it with the SQL query `SELECT * FROM dana.linearR('table')`.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+import os
+import sys
+import tempfile
+
+import numpy as np
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.algorithms import linear_regression
+from repro.core import hwgen
+from repro.db.catalog import Catalog
+from repro.db.heap import write_table
+from repro.db.query import register_udf_from_trace, run_query
+
+
+def main():
+    tmp = tempfile.mkdtemp(prefix="dana_quickstart_")
+
+    # --- make a training table: y = w.x with 10 features -------------------
+    rng = np.random.default_rng(0)
+    w_true = rng.normal(0, 1, 10).astype(np.float32)
+    X = rng.normal(0, 1, (20_000, 10)).astype(np.float32)
+    y = X @ w_true
+    heap = write_table(os.path.join(tmp, "training_data.heap"), X, y)
+    print(f"table: {heap.n_tuples} tuples in {heap.n_pages} x 32KB pages")
+
+    # --- register the UDF: DSL -> hDFG -> strider program -> design point ---
+    catalog = Catalog(os.path.join(tmp, "catalog"))
+    catalog.register_table("training_data_table", heap.path, {"n_features": 10})
+    artifact = register_udf_from_trace(
+        catalog,
+        "linearR",
+        lambda: linear_regression(10, lr=0.2, merge_coef=64,
+                                  conv_factor=0.01, epochs=200),
+        layout=heap.layout,
+    )
+    dp = artifact["design_point"]
+    print(f"hardware generator chose {dp.n_threads} threads x "
+          f"{dp.acs_per_thread} ACs ({dp.total_aus} AUs), "
+          f"{dp.n_striders} striders, {dp.bram_used/2**20:.1f} MB BRAM")
+    print(f"strider program: {len(artifact['strider_program'])} instructions "
+          f"(22-bit ISA)")
+
+    # --- the query -----------------------------------------------------------
+    res = run_query("SELECT * FROM dana.linearR('training_data_table');",
+                    catalog, mode="dana")
+    err = float(np.max(np.abs(res.models[0] - w_true)))
+    print(f"converged={res.converged} after {res.epochs_run} epochs; "
+          f"max |w - w*| = {err:.4f}")
+    print(f"timings: io={res.io_s:.3f}s decode={res.decode_s:.3f}s "
+          f"compute={res.compute_s:.3f}s total={res.total_s:.3f}s")
+    assert err < 0.05
+    print("OK")
+
+
+if __name__ == "__main__":
+    main()

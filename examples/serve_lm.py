@@ -1,0 +1,43 @@
+"""Serving example: batched decode with KV caches over the reduced configs of
+three different architecture families (GQA, MLA, and O(1)-state RWKV).
+
+Run:  PYTHONPATH=src python examples/serve_lm.py
+"""
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import numpy as np
+
+from repro.configs import get_reduced_config
+from repro.models import model_zoo
+from repro.serve.serving import BatchedServer, Request
+
+
+def main():
+    rng = np.random.default_rng(0)
+    for arch in ("internlm2-20b", "minicpm3-4b", "rwkv6-3b"):
+        cfg = get_reduced_config(arch)
+        params, _ = model_zoo.init_params(cfg, jax.random.PRNGKey(1))
+        server = BatchedServer(cfg, params, batch_slots=8, max_seq=96,
+                               temperature=0.7, seed=0)
+        for i in range(8):
+            prompt = rng.integers(1, cfg.vocab_size, 16).tolist()
+            server.submit(Request(rid=i, prompt=prompt, max_new_tokens=48))
+        t0 = time.perf_counter()
+        done = server.run()
+        dt = time.perf_counter() - t0
+        toks = sum(len(r.out) for r in done)
+        cache_kind = {"mla": "latent (absorbed)", "gqa": "KV",
+                      "none": "O(1) recurrent state"}[cfg.attn_kind]
+        print(f"{arch:>18} [{cache_kind:>22} cache]: {toks} tokens / {dt:.1f}s "
+              f"= {toks/dt:6.1f} tok/s (batch 8)")
+        assert len(done) == 8 and toks == 8 * 48
+    print("OK")
+
+
+if __name__ == "__main__":
+    main()

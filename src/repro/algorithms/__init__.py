@@ -1,0 +1,14 @@
+"""Paper workloads expressed in DAnA's DSL (Table 3 algorithms)."""
+from repro.algorithms.linear_regression import linear_regression
+from repro.algorithms.logistic_regression import logistic_regression
+from repro.algorithms.svm import svm
+from repro.algorithms.lrmf import lrmf
+
+ALGORITHMS = {
+    "linear": linear_regression,
+    "logistic": logistic_regression,
+    "svm": svm,
+    "lrmf": lrmf,
+}
+
+__all__ = ["linear_regression", "logistic_regression", "svm", "lrmf", "ALGORITHMS"]

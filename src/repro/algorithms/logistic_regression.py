@@ -1,0 +1,30 @@
+"""Logistic regression: sigmoid hypothesis, cross-entropy gradient."""
+from repro.core import dsl as dana
+
+
+def logistic_regression(
+    n_features: int,
+    lr: float = 0.1,
+    merge_coef: int = 8,
+    conv_factor: float | None = None,
+    epochs: int = 20,
+):
+    mo = dana.model([n_features])
+    inp = dana.input([n_features])
+    out = dana.output()  # labels in {0, 1}
+    mu = dana.meta(lr)
+
+    logit = dana.algo(mo, inp, out)
+    z = dana.sigma(mo * inp, 1)
+    p = dana.sigmoid(z)
+    er = p - out
+    grad = er * inp
+    grad = logit.merge(grad, merge_coef, "+")
+    mo_up = mo - mu * (grad / merge_coef)
+    logit.setModel(mo_up)
+
+    if conv_factor is not None:
+        n = dana.norm(grad / merge_coef)
+        logit.setConvergence(n < dana.meta(conv_factor))
+    logit.setEpochs(epochs)
+    return logit

@@ -1,0 +1,7 @@
+"""DAnA core: DSL -> hDFG -> scheduled, merged, accelerated execution."""
+from repro.core import dsl
+from repro.core.translator import trace, translate
+from repro.core.engine import make_engine, init_models
+from repro.core.hdfg import HDFG
+
+__all__ = ["dsl", "trace", "translate", "make_engine", "init_models", "HDFG"]

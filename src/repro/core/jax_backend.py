@@ -1,0 +1,181 @@
+"""hDFG -> executable JAX functions.
+
+The backend emits three pure functions from the partitioned graph:
+
+  pre_fn(models, x, y, metas)        -> merge-input value(s), per tuple
+  post_fn(models, merged, metas)     -> updated models
+  conv_fn(models, merged, metas)     -> bool convergence flag
+
+These are the semantic core of DAnA's execution engine: ``pre_fn`` is one
+accelerator *thread*; the engine vmaps it over the merge coefficient and folds
+results with the merge operator (the tree bus). Everything is jax.lax-friendly
+(no Python control flow on traced values), so the whole epoch can live under
+jit / shard_map.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.hdfg import HDFG
+from repro.core.translator import Partition
+
+_BINOPS = {
+    "add": jnp.add,
+    "sub": jnp.subtract,
+    "mul": jnp.multiply,
+    "div": jnp.divide,
+    "gt": lambda a, b: (a > b).astype(jnp.float32),
+    "lt": lambda a, b: (a < b).astype(jnp.float32),
+}
+_UNOPS = {
+    "neg": jnp.negative,
+    "sigmoid": jax.nn.sigmoid,
+    "gaussian": lambda x: jnp.exp(-jnp.square(x)),
+    "sqrt": jnp.sqrt,
+    "exp": jnp.exp,
+    "log": jnp.log,
+    "relu": jax.nn.relu,
+    "sign": jnp.sign,
+    "abs": jnp.abs,
+}
+MERGE_OPS = {
+    "+": lambda v, mask, axis: jnp.sum(v * mask, axis=axis),
+    "*": lambda v, mask, axis: jnp.prod(jnp.where(mask > 0, v, 1.0), axis=axis),
+    "max": lambda v, mask, axis: jnp.max(
+        jnp.where(mask > 0, v, -jnp.inf), axis=axis
+    ),
+}
+
+
+def _outer_broadcast(a, b, out_shape):
+    """Realize the DSL's outer-replication semantics (see dsl._broadcast)."""
+    if a.shape == b.shape:
+        return a, b
+    if a.ndim != b.ndim:
+        return jnp.broadcast_to(a, out_shape), jnp.broadcast_to(b, out_shape)
+    # equal rank, outer replication: a -> prefix_a x 1s x suffix, b -> 1s x prefix_b x suffix
+    k = 0
+    while k < a.ndim and a.shape[a.ndim - 1 - k] == b.shape[b.ndim - 1 - k]:
+        k += 1
+    if len(out_shape) > a.ndim:
+        pa, pb = a.ndim - k, b.ndim - k
+        a = a.reshape(a.shape[:pa] + (1,) * pb + a.shape[pa:])
+        b = b.reshape((1,) * pa + b.shape)
+    return jnp.broadcast_to(a, out_shape), jnp.broadcast_to(b, out_shape)
+
+
+def _eval_nodes(g: HDFG, node_ids, env):
+    for nid in node_ids:
+        n = g.node(nid)
+        if n.op in _BINOPS:
+            a, b = env[n.inputs[0]], env[n.inputs[1]]
+            a, b = _outer_broadcast(jnp.asarray(a), jnp.asarray(b), n.shape)
+            env[nid] = _BINOPS[n.op](a, b)
+        elif n.op in _UNOPS:
+            env[nid] = _UNOPS[n.op](env[n.inputs[0]])
+        elif n.op in ("sigma", "pi", "norm"):
+            x = env[n.inputs[0]]
+            axis = n.attrs.get("axis")
+            ax = None if axis is None else axis - 1
+            if n.op == "sigma":
+                env[nid] = jnp.sum(x, axis=ax)
+            elif n.op == "pi":
+                env[nid] = jnp.prod(x, axis=ax)
+            else:
+                env[nid] = jnp.sqrt(jnp.sum(jnp.square(x), axis=ax))
+        elif n.op == "const":
+            env[nid] = jnp.float32(n.attrs["value"])
+        elif n.op == "merge":
+            pass  # handled by the engine between pre_fn and post_fn
+        elif n.op == "leaf":
+            if nid not in env:
+                raise ValueError(f"unbound leaf {n}")
+        else:
+            raise NotImplementedError(f"op {n.op}")
+    return env
+
+
+def _leaf_env(g: HDFG, models, x, y, metas):
+    env: dict[int, jnp.ndarray] = {}
+    for k, mid in enumerate(g.model_ids):
+        env[mid] = models[k]
+    if x is not None:
+        for k, iid in enumerate(g.input_ids):
+            xv = x if len(g.input_ids) == 1 else x[k]
+            shape = g.node(iid).shape
+            env[iid] = jnp.reshape(xv, shape) if shape else xv
+    if y is not None:
+        for k, oid in enumerate(g.output_ids):
+            env[oid] = y if len(g.output_ids) == 1 else y[k]
+    for k, nid in enumerate(g.meta_ids):
+        env[nid] = metas[k]
+    return env
+
+
+def compile_hdfg(g: HDFG, part: Partition):
+    """Returns (pre_fn, post_fn, conv_fn, merge_spec).
+
+    merge_spec = (op_name, coef) or None when the UDF has no merge (pure
+    sequential SGD). Without a merge, pre_fn directly returns updated models
+    and post_fn is identity.
+    """
+    merge_spec = None
+    if g.merge_id is not None:
+        mnode = g.node(g.merge_id)
+        merge_spec = (mnode.attrs["op"], mnode.attrs["coef"])
+        merge_src = mnode.inputs[0]
+
+        def pre_fn(models, x, y, metas):
+            env = _leaf_env(g, models, x, y, metas)
+            env = _eval_nodes(g, part.pre_merge, env)
+            return env[merge_src]
+
+        def post_fn(models, merged, metas):
+            env = _leaf_env(g, models, None, None, metas)
+            env[g.merge_id] = merged
+            env = _eval_nodes(g, [i for i in part.post_merge if i != g.merge_id], env)
+            return [env[nid] for nid in g.new_model_ids]
+
+    else:
+
+        def pre_fn(models, x, y, metas):
+            env = _leaf_env(g, models, x, y, metas)
+            env = _eval_nodes(g, part.pre_merge, env)
+            return [env[nid] for nid in g.new_model_ids]
+
+        def post_fn(models, merged, metas):
+            return merged
+
+    def conv_fn(models, merged, metas):
+        if g.convergence_id is None:
+            return jnp.bool_(False)
+        env = _leaf_env(g, models, None, None, metas)
+        if g.merge_id is not None:
+            env[g.merge_id] = merged
+            env = _eval_nodes(g, [i for i in part.post_merge if i != g.merge_id], env)
+        env = _eval_nodes(g, part.convergence, env)
+        return env[g.convergence_id] > 0
+
+    return pre_fn, post_fn, conv_fn, merge_spec
+
+
+def reference_sgd(g: HDFG, part: Partition):
+    """Sequential tuple-at-a-time reference (merge coefficient 1): the oracle
+    the multi-threaded engine is validated against, and the semantic model of
+    the paper's single-thread baseline (TABLA-style)."""
+    pre_fn, post_fn, conv_fn, merge_spec = compile_hdfg(g, part)
+
+    def step(models, xi, yi, metas):
+        v = pre_fn(models, xi, yi, metas)
+        if merge_spec is None:
+            return v
+        op, _ = merge_spec
+        # a single tuple merging with itself is identity for +/max; for "+"
+        # with averaging semantics the post function handles the coefficient
+        return post_fn(models, v, metas)
+
+    return step

@@ -1,0 +1,187 @@
+"""End-to-end in-database training driver.
+
+Ties the stack together the way Figure 2 of the paper draws it: the query
+layer resolves the UDF from the catalog, the buffer pool streams pages, the
+access engine (strider kernel or host path) decodes tuples, and the execution
+engine runs the epochs until the terminator fires.
+
+Execution modes (the paper's evaluation axes):
+  "dana"            device-side page decode (strider kernel) + threaded engine
+  "dana-nostrider"  host-side per-page decode + threaded engine (Fig 11 ablation)
+  "madlib"          tuple-at-a-time host baseline (MADlib+PostgreSQL analogue)
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.engine import Engine, default_metas, init_models, make_engine
+from repro.core.hdfg import HDFG
+from repro.core.translator import Partition
+from repro.db.bufferpool import BufferPool
+from repro.db.heap import HeapFile
+from repro.db.page import parse_page
+
+MAX_RESIDENT_PAGES = 512  # pages decoded per device chunk (16 MB of 32 KB pages)
+
+
+@dataclasses.dataclass
+class TrainResult:
+    models: list[np.ndarray]
+    epochs_run: int
+    converged: bool
+    grad_norms: list[float]
+    decode_s: float
+    compute_s: float
+    io_s: float
+    total_s: float
+
+
+def _batches(feats, labels, mask, coef):
+    """Pad tuple stream to whole merge batches -> (nb, coef, ...) arrays."""
+    n = feats.shape[0]
+    nb = -(-n // coef)
+    pad = nb * coef - n
+    if pad:
+        feats = jnp.pad(feats, ((0, pad), (0, 0)))
+        labels = jnp.pad(labels, (0, pad))
+        mask = jnp.pad(mask, (0, pad))
+    return (
+        feats.reshape(nb, coef, -1),
+        labels.reshape(nb, coef),
+        mask.reshape(nb, coef),
+    )
+
+
+def _decode_chunk(pages_np, heap, mode):
+    layout = heap.layout
+    if mode == "dana":
+        from repro.kernels.strider import ops as strider_ops
+
+        feats, labels, mask = strider_ops.decode_pages(
+            jnp.asarray(pages_np), layout
+        )
+        t = feats.shape[0] * feats.shape[1]
+        return (
+            feats.reshape(t, layout.n_features),
+            labels.reshape(t),
+            mask.reshape(t),
+        )
+    # host decode (the "without striders" CPU data-transformation path)
+    fs, ls = [], []
+    for p in pages_np:
+        f, l, _ = parse_page(p, layout)
+        fs.append(f)
+        ls.append(l)
+    feats = np.concatenate(fs)
+    labels = np.concatenate(ls)
+    return (
+        jnp.asarray(feats),
+        jnp.asarray(labels),
+        jnp.ones(feats.shape[0], dtype=jnp.float32),
+    )
+
+
+def train(
+    g: HDFG,
+    part: Partition,
+    heap: HeapFile,
+    pool: BufferPool | None = None,
+    mode: str = "dana",
+    engine: Engine | None = None,
+    max_epochs: int | None = None,
+    merge_coef: int | None = None,
+    models=None,
+    seed: int = 0,
+) -> TrainResult:
+    t_start = time.perf_counter()
+    engine = engine or make_engine(g, part, merge_coef=merge_coef)
+    pool = pool or BufferPool(pool_bytes=MAX_RESIDENT_PAGES * heap.layout.page_bytes)
+    models = (
+        models
+        if models is not None
+        else init_models(g, np.random.default_rng(seed), scale=0.01)
+    )
+    models = [jnp.asarray(m) for m in models]
+
+    epochs = max_epochs or g.epochs or 100
+    coef = engine.merge_coef
+    grad_norms: list[float] = []
+    decode_s = io_s = compute_s = 0.0
+    converged = False
+    epochs_run = 0
+
+    page_chunks = [
+        np.arange(s, min(s + MAX_RESIDENT_PAGES, heap.n_pages))
+        for s in range(0, heap.n_pages, MAX_RESIDENT_PAGES)
+    ]
+
+    for epoch in range(epochs):
+        last_gnorm = None
+        for chunk_ids in page_chunks:
+            t0 = time.perf_counter()
+            pages_np = pool.fetch_batch(heap, chunk_ids)
+            t1 = time.perf_counter()
+            feats, labels, mask = _decode_chunk(pages_np, heap, mode)
+            feats.block_until_ready()
+            t2 = time.perf_counter()
+            X, Y, M = _batches(feats, labels, mask, coef)
+            models, gnorms = engine.run_epoch(models, X, Y, M)
+            jax.block_until_ready(models)
+            t3 = time.perf_counter()
+            io_s += t1 - t0
+            decode_s += t2 - t1
+            compute_s += t3 - t2
+            last_gnorm = float(gnorms[-1])
+        grad_norms.append(last_gnorm if last_gnorm is not None else float("nan"))
+        epochs_run = epoch + 1
+        if g.convergence_id is not None and last_gnorm is not None:
+            # convergence is evaluated once per epoch (paper §4.4) on the last
+            # merged value; reconstruct it cheaply via the conv graph
+            if _check_convergence(engine, models, heap, pool, mode, coef):
+                converged = True
+                break
+    total_s = time.perf_counter() - t_start
+    return TrainResult(
+        models=[np.asarray(m) for m in models],
+        epochs_run=epochs_run,
+        converged=converged,
+        grad_norms=grad_norms,
+        decode_s=decode_s,
+        compute_s=compute_s,
+        io_s=io_s,
+        total_s=total_s,
+    )
+
+
+def _check_convergence(engine, models, heap, pool, mode, coef) -> bool:
+    """Evaluate the terminator on a fresh merged value from the first batch."""
+    ids = np.arange(min(heap.n_pages, 4))
+    pages_np = pool.fetch_batch(heap, ids)
+    feats, labels, mask = _decode_chunk(pages_np, heap, mode)
+    X, Y, M = _batches(feats, labels, mask, coef)
+    _, merged = engine.batch_step(models, X[0], Y[0], M[0])
+    return engine.converged(models, merged)
+
+
+# ---------------------------------------------------------------------------
+def madlib_train(
+    g: HDFG,
+    part: Partition,
+    heap: HeapFile,
+    max_epochs: int | None = None,
+    models=None,
+    seed: int = 0,
+    batch: int | None = None,
+) -> TrainResult:
+    """MADlib+PostgreSQL analogue: tuple-at-a-time host execution. Pages are
+    parsed tuple by tuple on the host and the update rule runs per mini-batch
+    with numpy — no device, no page-granular decode."""
+    from repro.baselines.madlib import run as madlib_run
+
+    return madlib_run(g, part, heap, max_epochs=max_epochs, models=models, seed=seed,
+                      batch=batch)

@@ -1,0 +1,105 @@
+"""Strider program compiler: PageLayout -> assembled Strider ISA program.
+
+This is the compiler half of the paper's access engine: 'The compiler converts
+the database page configuration into a set of Strider instructions that
+process the page and tuple headers and transform user data into a floating
+point format.' The generated program is stored in the catalog and (a) executed
+by the ISA interpreter as the bit-level oracle, (b) its derived static
+geometry parameterizes the Pallas strider kernel.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import isa
+from repro.db.page import HEADER_BYTES, PageLayout, TUPLE_HEADER_BYTES
+
+
+def compile_strider_program(layout: PageLayout) -> np.ndarray:
+    """Emit the page-walk program for one page of ``layout``.
+
+    Register map:
+      %cr0 n_tuples   %cr1 upper       %cr2 special     %cr3 slot0 offset
+      %cr4 tuple_len  %cr5 stride      %cr6 hdr bytes   %cr7 payload+label bytes
+      %cr8 line-ptr base address
+      %t0 scratch     %t1 cursor       %t2 count        %t3 payload addr
+    """
+    payload_and_label = layout.payload_bytes + 4
+    prog: list[tuple] = []
+    # -- page header processing (paper's first phase) -------------------------
+    prog += [
+        ("readB", 16, 4, "%cr0"),  # n_tuples   (header word 4)
+        ("readB", 12, 4, "%cr1"),  # upper      (header word 3)
+        ("readB", 20, 4, "%cr2"),  # special    (header word 5)
+    ]
+    # -- tuple pointer processing: only the first line pointer (paper §5.1.2:
+    #    'all the training data tuples are expected to be identical') ----------
+    prog += isa.load_imm("%cr8", HEADER_BYTES)
+    prog += [
+        ("readB", "%cr8", 4, "%t0"),  # line pointer 0
+        ("extrB", "%t0", 2, "%cr3"),  # slot 0 offset (MAXALIGN units)
+        ("mul", "%cr3", 8, "%cr3"),  # -> bytes
+        ("cln", "%t0", 16, "%cr4"),  # allocated length (units)
+        ("mul", "%cr4", 8, "%cr4"),  # -> bytes (== stride)
+    ]
+    # -- static constants derived from the catalog's schema -------------------
+    prog += isa.load_imm("%cr5", layout.stride)
+    prog += isa.load_imm("%cr6", TUPLE_HEADER_BYTES)
+    prog += isa.load_imm("%cr7", payload_and_label)
+    # -- tuple extraction loop (downward packing: descend by stride) ----------
+    prog += [
+        ("ad", "%cr3", 0, "%t1"),  # cursor = slot 0 offset
+        ("ins", "%t2", 0, 0),  # count = 0
+        ("bentr",),
+        ("ad", "%t1", "%cr6", "%t3"),  # skip tuple header
+        ("writeB", "%t3", "%cr7", 0),  # stream payload + label to FIFO
+        ("sub", "%t1", "%cr5", "%t1"),  # next tuple (lower address)
+        ("ad", "%t2", 1, "%t2"),
+        ("bexit", 0, "%t2", "%cr0"),  # exit when count >= n_tuples
+    ]
+    return isa.assemble(prog)
+
+
+def run_strider(
+    program: np.ndarray, page_words: np.ndarray, layout: PageLayout
+) -> tuple[np.ndarray, np.ndarray, int]:
+    """Interpret ``program`` over one page -> (features, labels, cycles).
+
+    The FIFO holds n_tuples x (payload + label) raw bytes; the post-stage
+    converts to float32 (dequantizing int8 payloads with the scale stored in
+    the page's special space) — the ISA's 'transform user data into a floating
+    point format' step.
+    """
+    interp = isa.StriderInterpreter(program)
+    page_bytes = np.asarray(page_words, dtype=np.uint32).view(np.uint8)
+    st = interp.run(page_bytes)
+    width = layout.payload_bytes + 4
+    raw = np.asarray(st.fifo, dtype=np.uint8)
+    if raw.size % width:
+        raise ValueError("FIFO is not a whole number of tuples")
+    raw = raw.reshape(-1, width)
+    labels = raw[:, layout.payload_bytes :].copy().view(np.float32).reshape(-1)
+    if layout.quantized:
+        hdr_special = int(np.asarray(page_words).reshape(-1)[5])  # header word 5
+        scale = page_bytes[hdr_special : hdr_special + 4].view(np.float32)[0]
+        q = raw[:, : layout.n_features].astype(np.int32) - 128
+        feats = q.astype(np.float32) * scale
+    else:
+        feats = (
+            raw[:, : layout.payload_bytes].copy().view(np.float32)
+            [:, : layout.n_features]
+        )
+    return feats, labels, st.cycles
+
+
+def strider_cycles_per_page(layout: PageLayout) -> int:
+    """Static cycle estimate for the access engine (hwgen's model): header +
+    per-tuple loop body. Matches the interpreter's count for full pages."""
+    program_overhead = 3 + len(isa.load_imm("%cr8", HEADER_BYTES)) + 5
+    consts = (
+        len(isa.load_imm("%cr5", layout.stride))
+        + len(isa.load_imm("%cr6", TUPLE_HEADER_BYTES))
+        + len(isa.load_imm("%cr7", layout.payload_bytes + 4))
+    )
+    loop = 5 * layout.tuples_per_page + 1  # bentr + 5 insns/iteration
+    return program_overhead + consts + 2 + loop

@@ -1,0 +1,84 @@
+"""Data pipelines, including the paper's technique applied to LM training.
+
+``PageTokenDataset`` packs token sequences into the SAME 32 KB slotted-page
+format the RDBMS uses (tokens as int32 'features'), and the training input
+pipeline decodes pages on-device with the strider kernel — the storage-format
+boundary lives on the accelerator, exactly DAnA's thesis, now feeding any of
+the 10 assigned architectures (``--data-path=pages`` in launch/train.py).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.db.bufferpool import BufferPool
+from repro.db.heap import HeapFile, write_table
+from repro.data.synthetic import lm_token_batch
+
+
+class PageTokenDataset:
+    """Token sequences stored as DB pages; decoded on-device per batch."""
+
+    def __init__(self, path: str, n_seqs: int, seq_len: int, vocab: int,
+                 seed: int = 0, page_bytes: int = 32 * 1024):
+        rows = []
+        labels = np.zeros(n_seqs, np.float32)
+        for i in range(n_seqs):
+            b = lm_token_batch(seed * 131 + i, 1, seq_len, vocab)
+            # pack tokens+targets as the tuple's feature payload (int32 bits
+            # stored via float32 view — the strider decodes raw words)
+            row = np.concatenate([b["tokens"][0], b["targets"][0]]).astype(np.int32)
+            rows.append(row.view(np.float32))
+        feats = np.stack(rows)
+        self.seq_len = seq_len
+        self.heap = write_table(path, feats, labels, page_bytes=page_bytes)
+        self.pool = BufferPool(pool_bytes=64 * page_bytes, page_bytes=page_bytes)
+
+    def batch(self, step: int, batch_size: int):
+        """Decode a batch of sequences from pages on-device (strider path)."""
+        import jax.numpy as jnp
+
+        from repro.kernels.strider import ops as strider_ops
+
+        tpp = self.heap.layout.tuples_per_page
+        n_pages_needed = -(-batch_size // tpp)
+        start = (step * n_pages_needed) % max(self.heap.n_pages, 1)
+        ids = [(start + i) % self.heap.n_pages for i in range(n_pages_needed)]
+        pages = self.pool.fetch_batch(self.heap, np.asarray(ids))
+        feats, _, mask = strider_ops.decode_pages(jnp.asarray(pages),
+                                                  self.heap.layout)
+        import jax
+
+        flat = feats.reshape(-1, self.heap.layout.n_features)[:batch_size]
+        words = jax.lax.bitcast_convert_type(flat, jnp.int32)
+        s = self.seq_len
+        return {
+            "tokens": words[:, :s],
+            "targets": words[:, s : 2 * s],
+            "loss_mask": jnp.ones((batch_size, s), jnp.float32),
+        }
+
+
+def synthetic_data_fn(cfg, batch: int, seq: int, shard: int = 0):
+    """Deterministic (step, shard)-keyed batch function for the train loop."""
+    import jax.numpy as jnp
+
+    def fn(step: int):
+        b = lm_token_batch(step, batch, seq, cfg.vocab_size, shard)
+        out = {k: jnp.asarray(v) for k, v in b.items()}
+        if cfg.vis_tokens:
+            rng = np.random.default_rng(step)
+            out["tokens"] = out["tokens"][:, : seq - cfg.vis_tokens]
+            out["targets"] = out["targets"][:, : seq - cfg.vis_tokens]
+            out["loss_mask"] = out["loss_mask"][:, : seq - cfg.vis_tokens]
+            out["patches"] = jnp.asarray(
+                rng.normal(0, 1, (batch, cfg.vis_tokens, cfg.d_model)),
+                jnp.float32,
+            )
+        if cfg.family == "encdec":
+            rng = np.random.default_rng(step + 7)
+            out["frames"] = jnp.asarray(
+                rng.normal(0, 1, (batch, seq, cfg.d_model)), jnp.float32
+            )
+        return out
+
+    return fn

@@ -1,0 +1,10 @@
+"""Relational substrate: slotted pages, heap files, buffer pool, catalog, query layer."""
+from repro.db.page import PageLayout, build_pages, parse_page, page_header
+from repro.db.heap import HeapFile, write_table
+from repro.db.bufferpool import BufferPool
+from repro.db.catalog import Catalog
+
+__all__ = [
+    "PageLayout", "build_pages", "parse_page", "page_header",
+    "HeapFile", "write_table", "BufferPool", "Catalog",
+]

@@ -1,0 +1,104 @@
+"""Buffer pool: fixed-size frame cache over heap files with LRU replacement.
+
+The pool is the RDBMS side of DAnA's data handoff: queries fill frames, and
+``fetch_batch`` hands *whole pages* (a batched uint32 array) to the accelerator
+— page-granular transfer, exactly the paper's amortization argument.
+"""
+from __future__ import annotations
+
+from collections import OrderedDict
+
+import numpy as np
+
+from repro.db.heap import HeapFile
+
+
+class BufferPool:
+    def __init__(self, pool_bytes: int = 8 * 1024 * 1024 * 1024 // 1024, page_bytes: int = 32 * 1024):
+        # default pool sized in pages; callers normally pass pool_pages directly
+        self.page_bytes = page_bytes
+        self.capacity = max(1, pool_bytes // page_bytes)
+        self._frames: OrderedDict[tuple[str, int], np.ndarray] = OrderedDict()
+        self._pins: dict[tuple[str, int], int] = {}
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+
+    # -- core API ------------------------------------------------------------
+    def get_page(self, heap: HeapFile, page_id: int, pin: bool = False) -> np.ndarray:
+        key = (heap.path, page_id)
+        frame = self._frames.get(key)
+        if frame is not None:
+            self.hits += 1
+            self._frames.move_to_end(key)
+        else:
+            self.misses += 1
+            frame = heap.read_page(page_id)
+            self._insert(key, frame)
+        if pin:
+            self._pins[key] = self._pins.get(key, 0) + 1
+        return frame
+
+    def unpin(self, heap: HeapFile, page_id: int) -> None:
+        key = (heap.path, page_id)
+        if key in self._pins:
+            self._pins[key] -= 1
+            if self._pins[key] <= 0:
+                del self._pins[key]
+
+    def fetch_batch(self, heap: HeapFile, page_ids: np.ndarray) -> np.ndarray:
+        """Batched page fetch -> (n, page_words) uint32, ready for the device.
+
+        Misses are read from disk in one pass; all requested pages end up
+        resident (subject to capacity)."""
+        page_ids = np.asarray(page_ids)
+        out = np.empty((len(page_ids), heap.layout.page_words), dtype=np.uint32)
+        miss_pos, miss_ids = [], []
+        for k, pid in enumerate(page_ids):
+            key = (heap.path, int(pid))
+            frame = self._frames.get(key)
+            if frame is not None:
+                self.hits += 1
+                self._frames.move_to_end(key)
+                out[k] = frame
+            else:
+                self.misses += 1
+                miss_pos.append(k)
+                miss_ids.append(int(pid))
+        if miss_ids:
+            fetched = heap.read_pages(np.array(miss_ids))
+            for k, pid, frame in zip(miss_pos, miss_ids, fetched):
+                out[k] = frame
+                self._insert((heap.path, pid), frame.copy())
+        return out
+
+    def warm(self, heap: HeapFile) -> int:
+        """Preload as much of the heap as fits (the paper's warm-cache setup).
+        Returns the number of resident pages of this heap."""
+        n = min(heap.n_pages, self.capacity)
+        ids = np.arange(heap.n_pages - n, heap.n_pages)  # keep the tail, like a scan would
+        self.fetch_batch(heap, ids)
+        return n
+
+    def clear(self) -> None:
+        """Cold-cache setup."""
+        self._frames.clear()
+        self._pins.clear()
+
+    @property
+    def resident(self) -> int:
+        return len(self._frames)
+
+    # -- internals -----------------------------------------------------------
+    def _insert(self, key, frame) -> None:
+        while len(self._frames) >= self.capacity:
+            evicted = False
+            for victim in self._frames:
+                if victim not in self._pins:
+                    del self._frames[victim]
+                    self.evictions += 1
+                    evicted = True
+                    break
+            if not evicted:
+                raise RuntimeError("buffer pool exhausted: all frames pinned")
+        self._frames[key] = frame

@@ -1,0 +1,63 @@
+"""RDBMS catalog: tables + compiled UDF accelerator artifacts.
+
+Mirrors the paper's design — 'DAnA stores accelerator metadata (Strider and
+execution engine instruction schedules) in the RDBMS's catalog along with the
+name of a UDF to be invoked from the query'. Artifacts are stored with pickle
+(schedules, hDFGs, design points) next to a JSON index.
+"""
+from __future__ import annotations
+
+import json
+import os
+import pickle
+
+
+class Catalog:
+    def __init__(self, root: str):
+        self.root = root
+        os.makedirs(root, exist_ok=True)
+        self._index_path = os.path.join(root, "catalog.json")
+        self._index = {"tables": {}, "udfs": {}}
+        if os.path.exists(self._index_path):
+            with open(self._index_path) as f:
+                self._index = json.load(f)
+
+    def _flush(self) -> None:
+        tmp = self._index_path + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump(self._index, f, indent=1)
+        os.replace(tmp, self._index_path)
+
+    # -- tables ---------------------------------------------------------------
+    def register_table(self, name: str, heap_path: str, schema: dict) -> None:
+        self._index["tables"][name] = {"heap": heap_path, "schema": schema}
+        self._flush()
+
+    def table(self, name: str) -> dict:
+        try:
+            return self._index["tables"][name]
+        except KeyError:
+            raise KeyError(f"catalog: unknown table {name!r}") from None
+
+    # -- UDF accelerator artifacts ---------------------------------------------
+    def register_udf(self, name: str, artifact: dict) -> None:
+        path = os.path.join(self.root, f"udf_{name}.pkl")
+        with open(path + ".tmp", "wb") as f:
+            pickle.dump(artifact, f)
+        os.replace(path + ".tmp", path)
+        self._index["udfs"][name] = {"artifact": path}
+        self._flush()
+
+    def udf(self, name: str) -> dict:
+        try:
+            entry = self._index["udfs"][name]
+        except KeyError:
+            raise KeyError(f"catalog: unknown UDF {name!r}") from None
+        with open(entry["artifact"], "rb") as f:
+            return pickle.load(f)
+
+    def udfs(self) -> list[str]:
+        return sorted(self._index["udfs"])
+
+    def tables(self) -> list[str]:
+        return sorted(self._index["tables"])

@@ -1,0 +1,60 @@
+"""Query layer: invoke accelerated UDFs from SQL (paper §4.3).
+
+    SELECT * FROM dana.linearR('training_data_table');
+
+The RDBMS treats the UDF as a black box: we parse the call, pull the compiled
+accelerator artifact (hDFG + partition + design point + strider program) from
+the catalog, and hand execution to the solver.
+"""
+from __future__ import annotations
+
+import re
+
+from repro.core import solver
+from repro.db.bufferpool import BufferPool
+from repro.db.catalog import Catalog
+from repro.db.heap import HeapFile
+
+_QUERY_RE = re.compile(
+    r"^\s*SELECT\s+\*\s+FROM\s+dana\.(\w+)\s*\(\s*'([^']+)'\s*\)\s*;?\s*$",
+    re.IGNORECASE,
+)
+
+
+def run_query(
+    sql: str,
+    catalog: Catalog,
+    pool: BufferPool | None = None,
+    mode: str = "dana",
+    **train_kwargs,
+):
+    m = _QUERY_RE.match(sql)
+    if not m:
+        raise ValueError(f"unsupported query (expected SELECT * FROM dana.udf('t')): {sql!r}")
+    udf_name, table_name = m.group(1), m.group(2)
+
+    artifact = catalog.udf(udf_name)
+    table = catalog.table(table_name)
+    heap = HeapFile(table["heap"])
+
+    g, part = artifact["hdfg"], artifact["partition"]
+    return solver.train(g, part, heap, pool=pool, mode=mode, **train_kwargs)
+
+
+def register_udf_from_trace(catalog: Catalog, name: str, fn, layout=None) -> dict:
+    """Compile a DSL UDF end to end and store the artifact in the catalog:
+    hDFG, partition, strider program, design point, and schedules — what the
+    paper keeps in the RDBMS catalog for the query executor."""
+    from repro.core import hwgen
+    from repro.core.striders import compile_strider_program
+    from repro.core.translator import trace
+
+    g, part = trace(fn)
+    artifact = {"hdfg": g, "partition": part}
+    if layout is not None:
+        artifact["strider_program"] = compile_strider_program(layout)
+        artifact["design_point"] = hwgen.explore(
+            g, part, layout, n_tuples=layout.tuples_per_page
+        )
+    catalog.register_udf(name, artifact)
+    return artifact

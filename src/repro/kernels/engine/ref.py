@@ -1,0 +1,26 @@
+"""Pure-jnp oracle for the fused GLM execution-engine kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+ACTS = ("linear", "logistic", "svm")
+
+
+def glm_error(z: jnp.ndarray, y: jnp.ndarray, act: str) -> jnp.ndarray:
+    if act == "linear":
+        return z - y
+    if act == "logistic":
+        return jax.nn.sigmoid(z) - y
+    if act == "svm":
+        return jnp.where(y * z < 1.0, -y, 0.0)
+    raise ValueError(f"unknown GLM activation {act!r}")
+
+
+def glm_grad_ref(
+    x: jnp.ndarray, y: jnp.ndarray, w: jnp.ndarray, mask: jnp.ndarray, act: str
+) -> jnp.ndarray:
+    """Merged (summed) gradient over the batch: X' e, e = err(act(Xw), y)."""
+    z = x.astype(jnp.float32) @ w.astype(jnp.float32)
+    e = glm_error(z, y.astype(jnp.float32), act) * mask.astype(jnp.float32)
+    return e @ x.astype(jnp.float32)

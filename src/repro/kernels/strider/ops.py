@@ -1,0 +1,54 @@
+"""Jitted public wrapper for the strider kernel.
+
+Chooses the execution path per backend: the Pallas kernel (interpret=True on
+CPU — kernel-body semantics validated against ref.py and the ISA interpreter;
+compiled natively on TPU), with a VMEM working-set check the hardware
+generator performs before 'synthesis'.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.db.page import PageLayout
+from repro.kernels.strider import ref
+from repro.kernels.strider.strider import strider_decode
+
+VMEM_BYTES = 16 * 1024 * 1024  # v5e per-core VMEM
+
+
+def vmem_working_set(layout: PageLayout) -> int:
+    t, d = layout.tuples_per_page, layout.n_features
+    return layout.page_bytes + 4 * (t * d + 2 * t)
+
+
+def check_vmem(layout: PageLayout) -> None:
+    ws = vmem_working_set(layout)
+    if ws > VMEM_BYTES:
+        raise ValueError(
+            f"strider working set {ws} B exceeds VMEM ({VMEM_BYTES} B); "
+            f"use a smaller page or feature tile"
+        )
+
+
+@partial(jax.jit, static_argnums=(1, 2))
+def _decode_jit(pages, layout: PageLayout, use_kernel: bool):
+    if use_kernel:
+        interpret = jax.default_backend() == "cpu"
+        return strider_decode(pages, layout, interpret=interpret)
+    return ref.decode_pages_ref(pages, layout)
+
+
+def decode_pages(pages: jnp.ndarray, layout: PageLayout, use_kernel: bool | None = None):
+    """Decode a batch of pages on-device.
+
+    use_kernel=None picks the Pallas kernel on TPU and the (numerically
+    identical, faster-to-trace) vectorized jnp path on CPU — both are the
+    same algorithm; tests assert their equivalence on every shape swept.
+    """
+    check_vmem(layout)
+    if use_kernel is None:
+        use_kernel = jax.default_backend() == "tpu"
+    return _decode_jit(jnp.asarray(pages, dtype=jnp.uint32), layout, bool(use_kernel))

@@ -1,0 +1,62 @@
+"""Pure-jnp oracle for the strider page-decode kernel.
+
+Vectorized, but algorithmically identical to the Pallas kernel: affine slot
+extraction (static geometry from the compiled Strider program) + per-page
+dynamic tuple-count masking. Bit-level ground truth comes from the Strider ISA
+interpreter (core/isa.py); this oracle is what the kernel is allclose-tested
+against on full batches.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.db.page import TUPLE_HEADER_BYTES, PageLayout
+
+
+def _split_bytes(words: jnp.ndarray) -> jnp.ndarray:
+    """(..., W) uint32 -> (..., 4W) int32 little-endian bytes."""
+    shifts = jnp.array([0, 8, 16, 24], dtype=jnp.uint32)
+    b = (words[..., None] >> shifts) & jnp.uint32(0xFF)
+    return b.reshape(*words.shape[:-1], words.shape[-1] * 4).astype(jnp.int32)
+
+
+def decode_pages_ref(
+    pages: jnp.ndarray, layout: PageLayout
+) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """pages: (P, page_words) uint32 -> (feats (P,T,D) f32, labels (P,T) f32,
+    mask (P,T) f32)."""
+    pages = jnp.asarray(pages, dtype=jnp.uint32)
+    p = pages.shape[0]
+    t = layout.tuples_per_page
+    stride_w = layout.stride // 4
+    hdr_w = TUPLE_HEADER_BYTES // 4
+    payload_w = layout.payload_bytes // 4
+    region_start_w = (layout.data_end - t * layout.stride) // 4
+
+    n_tuples = pages[:, 4]  # header word 4
+    region = pages[:, region_start_w : region_start_w + t * stride_w]
+    # ascending addresses hold slots T-1..0 (downward packing) -> reverse
+    tup = region.reshape(p, t, stride_w)[:, ::-1, :]
+
+    payload = tup[:, :, hdr_w : hdr_w + payload_w]
+    if layout.quantized:
+        raw = _split_bytes(payload)[:, :, : layout.n_features]
+        scale = jax.lax.bitcast_convert_type(
+            pages[:, layout.data_end // 4], jnp.float32
+        )
+        feats = (raw - 128).astype(jnp.float32) * scale[:, None, None]
+    else:
+        feats = jax.lax.bitcast_convert_type(payload, jnp.float32)
+        feats = feats[:, :, : layout.n_features]
+
+    labels = jax.lax.bitcast_convert_type(tup[:, :, hdr_w + payload_w], jnp.float32)
+
+    live = jnp.arange(t, dtype=jnp.uint32)[None, :] < n_tuples[:, None]
+    mask = live.astype(jnp.float32)
+    # select (not multiply): feature words may be arbitrary bit patterns
+    # (e.g. int32 tokens viewed as f32 denormals/NaNs) that arithmetic would
+    # destroy via FTZ/NaN propagation
+    feats = jnp.where(live[:, :, None], feats, 0.0)
+    labels = jnp.where(live, labels, 0.0)
+    return feats, labels, mask

@@ -1,0 +1,95 @@
+"""Pallas strider kernel: on-device database-page decode (TPU target).
+
+The TPU incarnation of the paper's access engine. One grid step = one page =
+one Strider: the BlockSpec streams a 32 KB page from HBM into VMEM (the analogue
+of a BRAM page buffer), the kernel parses the dynamic header fields, extracts
+the tuple payloads at the compiler-derived static stride, converts to float32
+(dequantizing int8 payloads), and writes dense (tuples, features) tiles for
+the execution engine — data never bounces through the host.
+
+Static geometry (slot stride, payload width, region offset) comes from the
+same compiled Strider program the ISA interpreter runs; per-page dynamic state
+(n_tuples) is read from the page header in-kernel, mirroring the ISA's
+readB/extrB header-processing phase.
+
+VMEM budget per grid step (v5e, 16 MiB/core):
+  page block (page_bytes) + feats tile (T*D*4) + labels/mask tiles (T*4 each)
+  = 32 KiB + O(T*D*4); checked by ops.py before launch.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.db.page import TUPLE_HEADER_BYTES, PageLayout
+
+
+def _strider_kernel(
+    page_ref, feat_ref, label_ref, mask_ref, *, layout: PageLayout
+):
+    t = layout.tuples_per_page
+    stride_w = layout.stride // 4
+    hdr_w = TUPLE_HEADER_BYTES // 4
+    payload_w = layout.payload_bytes // 4
+    region_start_w = (layout.data_end - t * layout.stride) // 4
+
+    words = page_ref[0, :]  # (page_words,) uint32 — one page in VMEM
+
+    # --- page header processing (dynamic per-page state) --------------------
+    n_tuples = words[4]
+
+    # --- affine tuple extraction (static geometry from the Strider program) --
+    region = jax.lax.slice(words, (region_start_w,), (region_start_w + t * stride_w,))
+    tup = region.reshape(t, stride_w)[::-1, :]  # slot order 0..T-1
+
+    payload = tup[:, hdr_w : hdr_w + payload_w]
+    if layout.quantized:
+        shifts = jax.lax.broadcasted_iota(jnp.uint32, (1, 1, 4), 2) * jnp.uint32(8)
+        raw = (payload[:, :, None] >> shifts) & jnp.uint32(0xFF)
+        raw = raw.reshape(t, payload_w * 4)[:, : layout.n_features].astype(jnp.int32)
+        scale = jax.lax.bitcast_convert_type(words[layout.data_end // 4], jnp.float32)
+        feats = (raw - 128).astype(jnp.float32) * scale
+    else:
+        feats = jax.lax.bitcast_convert_type(payload, jnp.float32)
+        feats = feats[:, : layout.n_features]
+
+    labels = jax.lax.bitcast_convert_type(tup[:, hdr_w + payload_w], jnp.float32)
+
+    # --- cleanse: mask dead slots (partial last page). Select, not multiply:
+    # payload words may be arbitrary bit patterns (int32 tokens stored as f32
+    # denormals) that float arithmetic would flush or NaN-propagate ---------
+    live = jnp.arange(t, dtype=jnp.uint32) < n_tuples
+    feat_ref[0, :, :] = jnp.where(live[:, None], feats, 0.0)
+    label_ref[0, :] = jnp.where(live, labels, 0.0)
+    mask_ref[0, :] = live.astype(jnp.float32)
+
+
+def strider_decode(
+    pages: jnp.ndarray, layout: PageLayout, interpret: bool = False
+) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """pages (P, page_words) uint32 -> (feats (P,T,D), labels (P,T), mask (P,T))."""
+    p = pages.shape[0]
+    t = layout.tuples_per_page
+    d = layout.n_features
+    pw = layout.page_words
+
+    kernel = functools.partial(_strider_kernel, layout=layout)
+    return pl.pallas_call(
+        kernel,
+        grid=(p,),
+        in_specs=[pl.BlockSpec((1, pw), lambda i: (i, 0))],
+        out_specs=[
+            pl.BlockSpec((1, t, d), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, t), lambda i: (i, 0)),
+            pl.BlockSpec((1, t), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((p, t, d), jnp.float32),
+            jax.ShapeDtypeStruct((p, t), jnp.float32),
+            jax.ShapeDtypeStruct((p, t), jnp.float32),
+        ],
+        interpret=interpret,
+    )(pages)

@@ -1,0 +1,18 @@
+"""Public WKV entry point: Pallas kernel on TPU, chunked-jnp on CPU; both
+validated against the sequential-scan oracle (ref.py)."""
+from __future__ import annotations
+
+import jax
+
+
+def wkv(r, k, v, lw, u, state, chunk: int, use_kernel: bool | None = None):
+    if use_kernel is None:
+        use_kernel = jax.default_backend() == "tpu"
+    if use_kernel:
+        from repro.kernels.wkv.wkv import wkv_pallas
+
+        interpret = jax.default_backend() == "cpu"
+        return wkv_pallas(r, k, v, lw, u, state, chunk, interpret=interpret)
+    from repro.models.ssm import wkv_chunked
+
+    return wkv_chunked(r, k, v, lw, u, state, chunk)

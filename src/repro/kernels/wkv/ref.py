@@ -1,0 +1,9 @@
+"""Oracle for the WKV6 kernel: per-token sequential recurrence.
+
+    y_t = r_t . S_{t-1}  +  (r_t * u * k_t) . v_t
+    S_t = diag(exp(lw_t)) S_{t-1} + k_t v_t^T
+
+Defined independently in repro.models.ssm (wkv_scan); re-exported here as the
+kernel package's ref entry point.
+"""
+from repro.models.ssm import wkv_scan as wkv_ref  # noqa: F401

@@ -1,0 +1,1 @@
+"""Assigned LM architectures: configs, layers, and model assembly."""

@@ -1,0 +1,336 @@
+"""Attention: GQA (full/sliding-window/bidirectional), MLA (latent), decode
+paths with sharded KV caches.
+
+Decode-time design (flash-decode without shard_map): the KV cache's sequence
+dimension carries the ``kv_seq`` logical axis, mapped to the ``model`` mesh
+axis. Scores/softmax/value contractions over that dimension then lower to
+partial reductions + small (B,H)-sized cross-shard combines under GSPMD —
+the distributed flash-decode pattern — instead of ever all-gathering the
+multi-GB cache.
+
+MLA serving uses the absorbed-latent form (queries projected into the KV
+latent space), so the cache is only (kv_lora + rope) wide per token — the
+deployment trick that makes 32k-cache decode cheap for minicpm3/deepseek-v3.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.meshes import shard_act
+from repro.models.config import ModelConfig
+from repro.models.layers import apply_norm, apply_rope, make_norm, rope_tables
+from repro.models.params import Maker
+
+NEG = -1e9
+
+
+def _mask(sq: int, skv: int, kind: str, window: int, offset: int = 0):
+    """(sq, skv) additive mask. offset = kv position of query row 0."""
+    if kind == "bidir":
+        return jnp.zeros((sq, skv), jnp.float32)
+    qpos = jnp.arange(sq)[:, None] + offset
+    kpos = jnp.arange(skv)[None, :]
+    ok = kpos <= qpos
+    if kind == "swa":
+        ok &= (qpos - kpos) < window
+    return jnp.where(ok, 0.0, NEG).astype(jnp.float32)
+
+
+def _sdpa(q, k, v, mask, scale):
+    """q (B,Sq,KVH,G,D), k/v (B,Skv,KVH,D), mask (Sq,Skv) or (B,1,1,Sq,Skv)."""
+    scores = jnp.einsum("bqkgd,bskd->bkgqs", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    scores = scores + (mask if mask.ndim > 2 else mask[None, None, None])
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", probs, v.astype(jnp.float32))
+    return out
+
+
+def _sdpa_qchunk(q, k, v, kind, window, scale, q_chunk, qk_bf16: bool = False):
+    """Query-chunked attention (flash-style memory behavior, exact math).
+
+    Scores materialize one (B, KVH, G, q_chunk, Skv) tile at a time inside a
+    scan with a checkpointed body: peak live memory drops from O(Sq*Skv) to
+    O(q_chunk*Skv) per layer, and the backward pass recomputes per tile. This
+    is the §Perf lever that converts the naive-attention memory-bound cells
+    to compute-bound; on TPU the tile shapes are MXU-aligned by construction
+    (q_chunk multiple of 128).
+    """
+    b, sq, kvh, g, d = q.shape
+    q_chunk = min(q_chunk, sq)
+    pad = (-sq) % q_chunk
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0), (0, 0)))
+    nq = q.shape[1] // q_chunk
+    qt = q.reshape(b, nq, q_chunk, kvh, g, d).transpose(1, 0, 2, 3, 4, 5)
+    # qk_bf16: MXU-native bf16 operands with f32 accumulation — halves the
+    # attention bytes; softmax statistics stay in f32
+    cdt = jnp.bfloat16 if qk_bf16 else jnp.float32
+    kf = k.astype(cdt)
+    vf = v.astype(cdt)
+
+    @jax.checkpoint
+    def block(qb, idx):
+        mask = _mask(q_chunk, kf.shape[1], kind, window, offset=idx * q_chunk)
+        s = jnp.einsum("bqkgd,bskd->bkgqs", qb.astype(cdt), kf,
+                       preferred_element_type=jnp.float32) * scale
+        s = s + mask[None, None, None]
+        p = jax.nn.softmax(s, axis=-1)
+        return jnp.einsum("bkgqs,bskd->bqkgd", p.astype(cdt), vf,
+                          preferred_element_type=jnp.float32)
+
+    def body(_, inp):
+        qb, idx = inp
+        return None, block(qb, idx)
+
+    _, blocks = jax.lax.scan(body, None, (qt, jnp.arange(nq)))
+    dv = v.shape[-1]  # may differ from the q/k dim (MLA)
+    out = blocks.transpose(1, 0, 2, 3, 4, 5).reshape(b, sq + pad, kvh, g, dv)
+    return out[:, :sq]
+
+
+# =============================== GQA =========================================
+def make_gqa(m: Maker, cfg: ModelConfig, d_in: int | None = None):
+    d = d_in or cfg.d_model
+    hd = cfg.hd
+    return {
+        "wq": m.param((d, cfg.n_heads, hd), ("embed", "heads", "head_dim")),
+        "wk": m.param((d, cfg.n_kv_heads, hd), ("embed", "kv_heads", "head_dim")),
+        "wv": m.param((d, cfg.n_kv_heads, hd), ("embed", "kv_heads", "head_dim")),
+        "wo": m.param((cfg.n_heads, hd, d), ("heads", "head_dim", "embed")),
+    }
+
+
+def gqa_project(p, x, cfg: ModelConfig, positions):
+    dt = x.dtype
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(dt))
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(dt))
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(dt))
+    q = shard_act(q, ("batch", "seq", "heads", "head_dim"), "q")
+    k = shard_act(k, ("batch", "seq", "kv_heads", "head_dim"), "k")
+    cos, sin = rope_tables(positions, cfg.hd, cfg.rope_theta)
+    cos, sin = cos[:, :, None, :], sin[:, :, None, :]
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+    return q, k, v
+
+
+def gqa_attend(p, q, k, v, cfg: ModelConfig, kind, window):
+    b, sq, h, hd = q.shape
+    kvh = cfg.n_kv_heads
+    g = h // kvh
+    qg = q.reshape(b, sq, kvh, g, hd)
+    scale = 1.0 / math.sqrt(hd)
+    if cfg.attn_q_chunk:
+        out = _sdpa_qchunk(qg, k, v, kind, window, scale, cfg.attn_q_chunk,
+                           qk_bf16=cfg.attn_qk_bf16)
+    else:
+        out = _sdpa(qg, k, v, _mask(sq, k.shape[1], kind, window), scale)
+    out = out.reshape(b, sq, h, hd).astype(q.dtype)
+    out = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(q.dtype))
+    return shard_act(out, ("batch", "seq", "embed"), "attn_out")
+
+
+def gqa_train(p, x, cfg: ModelConfig, positions, kind="causal", window=0):
+    q, k, v = gqa_project(p, x, cfg, positions)
+    return gqa_attend(p, q, k, v, cfg, kind, window)
+
+
+def gqa_decode(p, x, cache, pos, cfg: ModelConfig, window=0):
+    """x (B,1,d); cache {k,v}: (B,S,KVH,D) (full) or (B,W,KVH,D) (SWA ring).
+    Returns (out (B,1,d), new_cache). ``pos`` is the current position."""
+    b = x.shape[0]
+    dt = x.dtype
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(dt))
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(dt))
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(dt))
+    cos, sin = rope_tables(jnp.full((b, 1), pos), cfg.hd, cfg.rope_theta)
+    cos, sin = cos[:, :, None, :], sin[:, :, None, :]
+    q, k = apply_rope(q, cos, sin), apply_rope(k, cos, sin)
+
+    s = cache["k"].shape[1]
+    slot = pos % s if window else jnp.minimum(pos, s - 1)
+    ck = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype),
+                                      (0, slot, 0, 0))
+    cv = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype),
+                                      (0, slot, 0, 0))
+    ck = shard_act(ck, ("batch", "kv_seq", "kv_heads", "head_dim"), "ck")
+    cv = shard_act(cv, ("batch", "kv_seq", "kv_heads", "head_dim"), "cv")
+
+    kvh, hd = cfg.n_kv_heads, cfg.hd
+    g = cfg.n_heads // kvh
+    # validity: ring buffers are fully valid once warm; full caches valid <= pos
+    kpos = jnp.arange(s)
+    valid = (kpos <= pos) if not window else (kpos >= 0)
+    mask = jnp.where(valid, 0.0, NEG).astype(jnp.float32)[None, None, None, None, :]
+    out = _sdpa(q.reshape(b, 1, kvh, g, hd), ck, cv, mask, 1.0 / math.sqrt(hd))
+    out = out.reshape(b, 1, cfg.n_heads, hd).astype(dt)
+    out = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(dt))
+    return out, {"k": ck, "v": cv}
+
+
+def init_gqa_cache(cfg: ModelConfig, batch: int, seq: int, window=0,
+                   abstract=False, d_in=None):
+    w = min(window, seq) if window else seq
+    shape = (batch, w, cfg.n_kv_heads, cfg.hd)
+    if abstract:
+        z = jax.ShapeDtypeStruct(shape, jnp.bfloat16)
+    else:
+        z = jnp.zeros(shape, jnp.bfloat16)
+    return {"k": z, "v": z}
+
+
+# =============================== MLA =========================================
+def make_mla(m: Maker, cfg: ModelConfig):
+    d = cfg.d_model
+    qk = cfg.qk_nope_head_dim + cfg.qk_rope_head_dim
+    p = {}
+    if cfg.q_lora_rank:
+        p["wq_a"] = m.param((d, cfg.q_lora_rank), ("embed", "lora"))
+        p["q_norm"] = make_norm(m, cfg.q_lora_rank)
+        p["wq_b"] = m.param(
+            (cfg.q_lora_rank, cfg.n_heads, qk), ("lora", "heads", "qk_dim")
+        )
+    else:
+        p["wq"] = m.param((d, cfg.n_heads, qk), ("embed", "heads", "qk_dim"))
+    p["wkv_a"] = m.param(
+        (d, cfg.kv_lora_rank + cfg.qk_rope_head_dim), ("embed", "lora")
+    )
+    p["kv_norm"] = make_norm(m, cfg.kv_lora_rank)
+    p["wkv_b"] = m.param(
+        (cfg.kv_lora_rank, cfg.n_heads, cfg.qk_nope_head_dim + cfg.v_head_dim),
+        ("lora", "heads", "qk_dim"),
+    )
+    p["wo"] = m.param(
+        (cfg.n_heads, cfg.v_head_dim, d), ("heads", "head_dim", "embed")
+    )
+    return p
+
+
+def _mla_q(p, x, cfg: ModelConfig, positions):
+    dt = x.dtype
+    if cfg.q_lora_rank:
+        cq = jnp.einsum("bsd,dr->bsr", x, p["wq_a"].astype(dt))
+        cq = apply_norm(p["q_norm"], cq, cfg.norm_eps)
+        q = jnp.einsum("bsr,rhk->bshk", cq, p["wq_b"].astype(dt))
+    else:
+        q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(dt))
+    qn = q[..., : cfg.qk_nope_head_dim]
+    qr = q[..., cfg.qk_nope_head_dim :]
+    cos, sin = rope_tables(positions, cfg.qk_rope_head_dim, cfg.rope_theta)
+    qr = apply_rope(qr, cos[:, :, None, :], sin[:, :, None, :])
+    return qn, qr
+
+
+def _mla_latent(p, x, cfg: ModelConfig, positions):
+    dt = x.dtype
+    kv = jnp.einsum("bsd,dr->bsr", x, p["wkv_a"].astype(dt))
+    c_kv = apply_norm(p["kv_norm"], kv[..., : cfg.kv_lora_rank], cfg.norm_eps)
+    kr = kv[..., cfg.kv_lora_rank :][:, :, None, :]  # single shared rope head
+    cos, sin = rope_tables(positions, cfg.qk_rope_head_dim, cfg.rope_theta)
+    kr = apply_rope(kr, cos[:, :, None, :], sin[:, :, None, :])
+    return c_kv, kr[:, :, 0, :]
+
+
+def mla_train(p, x, cfg: ModelConfig, positions, kind="causal", window=0):
+    dt = x.dtype
+    b, s, _ = x.shape
+    qn, qr = _mla_q(p, x, cfg, positions)
+    c_kv, kr = _mla_latent(p, x, cfg, positions)
+    kv = jnp.einsum("bsr,rhk->bshk", c_kv, p["wkv_b"].astype(dt))
+    kn = kv[..., : cfg.qk_nope_head_dim]
+    v = kv[..., cfg.qk_nope_head_dim :]
+    k = jnp.concatenate(
+        [kn, jnp.broadcast_to(kr[:, :, None, :], (*kn.shape[:3], cfg.qk_rope_head_dim))],
+        axis=-1,
+    )
+    q = jnp.concatenate([qn, qr], axis=-1)
+    q = shard_act(q, ("batch", "seq", "heads", "qk_dim"), "mla_q")
+    k = shard_act(k, ("batch", "seq", "heads", "qk_dim"), "mla_k")
+    scale = 1.0 / math.sqrt(cfg.qk_nope_head_dim + cfg.qk_rope_head_dim)
+    qg = q.reshape(b, s, cfg.n_heads, 1, q.shape[-1])
+    if cfg.attn_q_chunk:
+        out = _sdpa_qchunk(qg, k, v, kind, window, scale, cfg.attn_q_chunk,
+                           qk_bf16=cfg.attn_qk_bf16)
+    else:
+        out = _sdpa(qg, k, v, _mask(s, s, kind, window), scale)
+    out = out.reshape(b, s, cfg.n_heads, cfg.v_head_dim)
+    out = jnp.einsum("bshk,hkd->bsd", out.astype(dt), p["wo"].astype(dt))
+    return shard_act(out, ("batch", "seq", "embed"), "attn_out")
+
+
+def mla_decode(p, x, cache, pos, cfg: ModelConfig):
+    """Absorbed-latent decode: cache {c (B,S,kv_lora), kr (B,S,rope)}."""
+    dt = x.dtype
+    b = x.shape[0]
+    qn, qr = _mla_q(p, x, cfg, jnp.full((b, 1), pos))
+    c_t, kr_t = _mla_latent(p, x, cfg, jnp.full((b, 1), pos))
+
+    c = jax.lax.dynamic_update_slice(cache["c"], c_t.astype(cache["c"].dtype),
+                                     (0, pos, 0))
+    kr = jax.lax.dynamic_update_slice(cache["kr"], kr_t.astype(cache["kr"].dtype),
+                                      (0, pos, 0))
+    c = shard_act(c, ("batch", "kv_seq", "lora"), "mla_c")
+    kr = shard_act(kr, ("batch", "kv_seq", "head_dim"), "mla_kr")
+
+    w_uk = p["wkv_b"][..., : cfg.qk_nope_head_dim].astype(dt)  # (r, H, nope)
+    w_uv = p["wkv_b"][..., cfg.qk_nope_head_dim :].astype(dt)  # (r, H, v)
+    q_lat = jnp.einsum("bthk,rhk->bthr", qn, w_uk)  # absorb: query -> latent
+    scores = jnp.einsum("bthr,bsr->bhs", q_lat, c.astype(dt))
+    scores = scores + jnp.einsum("bthk,bsk->bhs", qr, kr.astype(dt))
+    scale = 1.0 / math.sqrt(cfg.qk_nope_head_dim + cfg.qk_rope_head_dim)
+    s = c.shape[1]
+    valid = jnp.arange(s) <= pos
+    scores = scores.astype(jnp.float32) * scale + jnp.where(valid, 0.0, NEG)[None, None]
+    probs = jax.nn.softmax(scores, axis=-1)
+    out_lat = jnp.einsum("bhs,bsr->bhr", probs, c.astype(jnp.float32)).astype(dt)
+    out = jnp.einsum("bhr,rhv->bhv", out_lat, w_uv)
+    out = jnp.einsum("bhv,hvd->bd", out, p["wo"].astype(dt))[:, None, :]
+    return out, {"c": c, "kr": kr}
+
+
+def init_mla_cache(cfg: ModelConfig, batch: int, seq: int, abstract=False):
+    sc = (batch, seq, cfg.kv_lora_rank)
+    sk = (batch, seq, cfg.qk_rope_head_dim)
+    if abstract:
+        return {
+            "c": jax.ShapeDtypeStruct(sc, jnp.bfloat16),
+            "kr": jax.ShapeDtypeStruct(sk, jnp.bfloat16),
+        }
+    return {"c": jnp.zeros(sc, jnp.bfloat16), "kr": jnp.zeros(sk, jnp.bfloat16)}
+
+
+# ============================ cross-attention =================================
+def make_cross(m: Maker, cfg: ModelConfig):
+    return make_gqa(m, cfg)
+
+
+def cross_train(p, x, enc_out, cfg: ModelConfig):
+    dt = x.dtype
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(dt))
+    k = jnp.einsum("bsd,dhk->bshk", enc_out.astype(dt), p["wk"].astype(dt))
+    v = jnp.einsum("bsd,dhk->bshk", enc_out.astype(dt), p["wv"].astype(dt))
+    b, sq = q.shape[:2]
+    kvh, hd = cfg.n_kv_heads, cfg.hd
+    mask = jnp.zeros((sq, k.shape[1]), jnp.float32)
+    out = _sdpa(q.reshape(b, sq, kvh, cfg.n_heads // kvh, hd), k, v, mask,
+                1.0 / math.sqrt(hd))
+    out = out.reshape(b, sq, cfg.n_heads, hd).astype(dt)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(dt))
+
+
+def cross_decode(p, x, cross_kv, cfg: ModelConfig):
+    """Decode-time cross attention against precomputed encoder K/V."""
+    dt = x.dtype
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(dt))
+    b = q.shape[0]
+    kvh, hd = cfg.n_kv_heads, cfg.hd
+    mask = jnp.zeros((1, cross_kv["k"].shape[1]), jnp.float32)
+    out = _sdpa(q.reshape(b, 1, kvh, cfg.n_heads // kvh, hd),
+                cross_kv["k"].astype(dt), cross_kv["v"].astype(dt), mask,
+                1.0 / math.sqrt(hd))
+    out = out.reshape(b, 1, cfg.n_heads, hd).astype(dt)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(dt))

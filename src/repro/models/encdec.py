@@ -1,0 +1,182 @@
+"""Encoder-decoder transformer (seamless-m4t backbone).
+
+The speech frontend is a stub per the assignment: input_specs provides
+precomputed frame embeddings (B, S_src, d_model); the encoder is a
+bidirectional transformer over frames, the decoder a causal transformer with
+cross-attention, sharing the layers/attention substrate. Decode caches both
+the decoder self-attention KV and the precomputed cross KV.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.meshes import shard_act
+from repro.models import attention as attn
+from repro.models.config import ModelConfig
+from repro.models.layers import (
+    apply_mlp,
+    apply_norm,
+    embed,
+    make_embedding,
+    make_mlp,
+    make_norm,
+    softmax_xent,
+    unembed,
+)
+from repro.models.params import Maker, split_tree, stack_layers
+
+
+def _make_enc_layer(m: Maker, cfg: ModelConfig):
+    return {
+        "ln1": make_norm(m, cfg.d_model),
+        "attn": attn.make_gqa(m, cfg),
+        "ln2": make_norm(m, cfg.d_model),
+        "mlp": make_mlp(m, cfg.d_model, cfg.d_ff),
+    }
+
+
+def _make_dec_layer(m: Maker, cfg: ModelConfig):
+    return {
+        "ln1": make_norm(m, cfg.d_model),
+        "attn": attn.make_gqa(m, cfg),
+        "ln_x": make_norm(m, cfg.d_model),
+        "cross": attn.make_cross(m, cfg),
+        "ln2": make_norm(m, cfg.d_model),
+        "mlp": make_mlp(m, cfg.d_model, cfg.d_ff),
+    }
+
+
+def init_encdec(cfg: ModelConfig, key=None, abstract: bool = False):
+    m = Maker(key if key is not None else jax.random.PRNGKey(0),
+              param_dtype=jnp.dtype(cfg.param_dtype), abstract=abstract)
+    tree = {
+        "embed": make_embedding(m, cfg),
+        "frame_proj": m.param((cfg.d_model, cfg.d_model), ("embed", "embed")),
+        "enc": stack_layers(lambda i: _make_enc_layer(m, cfg), cfg.enc_layers),
+        "enc_norm": make_norm(m, cfg.d_model),
+        "dec": stack_layers(lambda i: _make_dec_layer(m, cfg), cfg.n_layers),
+        "final_norm": make_norm(m, cfg.d_model),
+    }
+    return split_tree(tree)
+
+
+def _enc_layer(p, x, cfg, positions):
+    h = apply_norm(p["ln1"], x, cfg.norm_eps)
+    x = x + attn.gqa_train(p["attn"], h, cfg, positions, kind="bidir")
+    h = apply_norm(p["ln2"], x, cfg.norm_eps)
+    return x + apply_mlp(p["mlp"], h)
+
+
+def _dec_layer(p, x, enc_out, cfg, positions):
+    h = apply_norm(p["ln1"], x, cfg.norm_eps)
+    x = x + attn.gqa_train(p["attn"], h, cfg, positions, kind="causal")
+    h = apply_norm(p["ln_x"], x, cfg.norm_eps)
+    x = x + attn.cross_train(p["cross"], h, enc_out, cfg)
+    h = apply_norm(p["ln2"], x, cfg.norm_eps)
+    return x + apply_mlp(p["mlp"], h)
+
+
+def encode(params, frames, cfg: ModelConfig, remat: str = "full",
+           unroll: bool = False):
+    b, s, _ = frames.shape
+    x = frames.astype(jnp.bfloat16) @ params["frame_proj"].astype(jnp.bfloat16)
+    x = shard_act(x, ("batch", "seq", "embed"), "enc_h0")
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    body = partial(_enc_layer_scan, cfg=cfg)
+    if remat in ("full", "dots"):
+        body = jax.checkpoint(body)
+
+    def scan_body(carry, lp):
+        x, pos = carry
+        return (body(lp, x, pos), pos), None
+
+    (x, _), _ = jax.lax.scan(scan_body, (x, positions), params["enc"],
+                             unroll=cfg.enc_layers if unroll else 1)
+    return apply_norm(params["enc_norm"], x, cfg.norm_eps)
+
+
+def _enc_layer_scan(lp, x, positions, cfg):
+    return _enc_layer(lp, x, cfg, positions)
+
+
+def encdec_loss(params, batch, cfg: ModelConfig, remat: str = "full",
+                unroll: bool = False):
+    enc_out = encode(params, batch["frames"], cfg, remat, unroll)
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    x = embed(params["embed"], tokens, cfg)
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    body = partial(_dec_layer_scan, cfg=cfg)
+    if remat in ("full", "dots"):
+        body = jax.checkpoint(body)
+
+    def scan_body(carry, lp):
+        x, pos = carry
+        return (body(lp, x, enc_out, pos), pos), None
+
+    (x, _), _ = jax.lax.scan(scan_body, (x, positions), params["dec"],
+                             unroll=cfg.n_layers if unroll else 1)
+    h = apply_norm(params["final_norm"], x, cfg.norm_eps)
+    logits = unembed(params["embed"], h, cfg)
+    return softmax_xent(logits, batch["targets"], batch["loss_mask"],
+                        cfg.vocab_size)
+
+
+def _dec_layer_scan(lp, x, enc_out, positions, cfg):
+    return _dec_layer(lp, x, enc_out, cfg, positions)
+
+
+# ------------------------------- decode ------------------------------------
+def init_encdec_cache(cfg: ModelConfig, batch: int, seq: int, src: int,
+                      abstract: bool = False):
+    mk = (lambda sh, dt: jax.ShapeDtypeStruct(sh, dt)) if abstract else (
+        lambda sh, dt: jnp.zeros(sh, dt)
+    )
+    kvh, hd = cfg.n_kv_heads, cfg.hd
+    return {
+        "k": mk((cfg.n_layers, batch, seq, kvh, hd), jnp.bfloat16),
+        "v": mk((cfg.n_layers, batch, seq, kvh, hd), jnp.bfloat16),
+        "xk": mk((cfg.n_layers, batch, src, kvh, hd), jnp.bfloat16),
+        "xv": mk((cfg.n_layers, batch, src, kvh, hd), jnp.bfloat16),
+    }
+
+
+def precompute_cross_kv(params, enc_out, cfg: ModelConfig):
+    def one(lp):
+        dt = jnp.bfloat16
+        k = jnp.einsum("bsd,dhk->bshk", enc_out.astype(dt), lp["cross"]["wk"].astype(dt))
+        v = jnp.einsum("bsd,dhk->bshk", enc_out.astype(dt), lp["cross"]["wv"].astype(dt))
+        return k, v
+
+    ks, vs = jax.lax.map(one, params["dec"])
+    return ks, vs
+
+
+def encdec_decode_step(params, tokens, cache, pos, cfg: ModelConfig,
+                       unroll: bool = False):
+    """One decoder step against cached self-KV and precomputed cross-KV."""
+    x = embed(params["embed"], tokens[:, None], cfg)
+
+    def body(carry, layer):
+        x = carry
+        lp, k, v, xk, xv = layer
+        h = apply_norm(lp["ln1"], x, cfg.norm_eps)
+        a, upd = attn.gqa_decode(lp["attn"], h, {"k": k, "v": v}, pos, cfg)
+        x = x + a
+        h = apply_norm(lp["ln_x"], x, cfg.norm_eps)
+        x = x + attn.cross_decode(lp["cross"], h, {"k": xk, "v": xv}, cfg)
+        h = apply_norm(lp["ln2"], x, cfg.norm_eps)
+        x = x + apply_mlp(lp["mlp"], h)
+        return x, (upd["k"], upd["v"])
+
+    x, (nk, nv) = jax.lax.scan(
+        body, x, (params["dec"], cache["k"], cache["v"], cache["xk"], cache["xv"]),
+        unroll=cfg.n_layers if unroll else 1,
+    )
+    h = apply_norm(params["final_norm"], x, cfg.norm_eps)
+    logits = unembed(params["embed"], h, cfg)[:, 0]
+    new_cache = dict(cache, k=nk, v=nv)
+    return logits, new_cache

@@ -1,0 +1,145 @@
+"""Shared neural layers: RMSNorm, RoPE, embeddings, gated MLP, losses.
+
+All functions are pure; parameters are built with params.Maker so every
+weight carries logical sharding axes. Activations get shard_act constraints
+at the natural cut points (Megatron TP pattern: column-parallel up, row-
+parallel down, batch over data axes).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.meshes import shard_act
+from repro.models.config import ModelConfig
+from repro.models.params import Maker
+
+
+def rms_norm(x, weight, eps):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(jnp.square(x), axis=-1, keepdims=True) + eps)
+    return (x * weight.astype(jnp.float32)).astype(dt)
+
+
+def make_norm(m: Maker, d: int):
+    return {"scale": m.param((d,), ("embed",), scale=0.0)}  # stored as (w-1)
+
+
+def apply_norm(p, x, eps):
+    return rms_norm(x, p["scale"].astype(jnp.float32) + 1.0, eps)
+
+
+# -- rotary position embeddings -------------------------------------------------
+def rope_tables(positions, dim: int, theta: float):
+    """positions (...,) int32 -> cos/sin (..., dim/2) f32."""
+    half = dim // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, cos, sin):
+    """x (..., S, H, D); cos/sin broadcastable (..., S, 1, D/2)."""
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# -- embedding --------------------------------------------------------------------
+def make_embedding(m: Maker, cfg: ModelConfig):
+    v, d = cfg.padded_vocab, cfg.d_model
+    p = {"table": m.param((v, d), ("vocab", "embed"), scale=0.01)}
+    if not cfg.tie_embeddings:
+        p["unembed"] = m.param((d, v), ("embed", "vocab"))
+    return p
+
+
+def embed(p, tokens, cfg: ModelConfig):
+    x = jnp.take(p["table"].astype(jnp.bfloat16), tokens, axis=0)
+    return shard_act(x, ("batch", "seq", "embed"), "embed_out")
+
+
+def unembed(p, x, cfg: ModelConfig):
+    w = (p["table"].T if cfg.tie_embeddings else p["unembed"]).astype(jnp.bfloat16)
+    logits = jnp.einsum("bsd,dv->bsv", x.astype(jnp.bfloat16), w)
+    return shard_act(logits, ("batch", "seq", "vocab"), "logits")
+
+
+# -- gated MLP (SwiGLU) -----------------------------------------------------------
+def make_mlp(m: Maker, d: int, d_ff: int):
+    return {
+        "wi": m.param((d, d_ff), ("embed", "ff")),
+        "wg": m.param((d, d_ff), ("embed", "ff")),
+        "wo": m.param((d_ff, d), ("ff", "embed")),
+    }
+
+
+def apply_mlp(p, x):
+    dt = x.dtype
+    h = jnp.einsum("bsd,df->bsf", x, p["wi"].astype(dt))
+    g = jnp.einsum("bsd,df->bsf", x, p["wg"].astype(dt))
+    h = jax.nn.silu(g) * h
+    h = shard_act(h, ("batch", "seq", "ff"), "mlp_h")
+    out = jnp.einsum("bsf,fd->bsd", h, p["wo"].astype(dt))
+    return shard_act(out, ("batch", "seq", "embed"), "mlp_out")
+
+
+# -- losses -------------------------------------------------------------------------
+def softmax_xent(logits, targets, mask, true_vocab: int, chunk: int = 0):
+    """Vocab-parallel-friendly CE. Padded vocab entries are masked out; with
+    logits sharded on the vocab axis the reductions become partial-reduce +
+    small cross-shard combines under GSPMD. ``chunk`` > 0 computes the loss in
+    sequence chunks so full (B,S,V) logits never materialize (see train/)."""
+    v = logits.shape[-1]
+    neg = jnp.asarray(-1e9, logits.dtype)
+    if true_vocab < v:
+        vocab_ok = jnp.arange(v) < true_vocab
+        logits = jnp.where(vocab_ok[None, None, :], logits, neg)
+    logits = logits.astype(jnp.float32)
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    lse = m[..., 0] + jnp.log(jnp.sum(jnp.exp(logits - m), axis=-1))
+    tgt = jnp.sum(
+        logits * jax.nn.one_hot(targets, v, dtype=logits.dtype), axis=-1
+    )
+    nll = (lse - tgt) * mask
+    return jnp.sum(nll) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def chunked_xent(p_embed, h, targets, mask, cfg, chunk: int):
+    """CE computed over sequence chunks under jax.checkpoint: the (B, S, V)
+    logits tensor never materializes — peak live is one (B, chunk, V) tile.
+    The §Perf memory lever for wide-vocab archs (mistral-nemo 131k,
+    seamless 256k)."""
+    b, s, d = h.shape
+    chunk = min(chunk, s)
+    pad = (-s) % chunk
+    if pad:
+        h = jnp.pad(h, ((0, 0), (0, pad), (0, 0)))
+        targets = jnp.pad(targets, ((0, 0), (0, pad)))
+        mask = jnp.pad(mask, ((0, 0), (0, pad)))
+    nc = h.shape[1] // chunk
+    hc = h.reshape(b, nc, chunk, d).transpose(1, 0, 2, 3)
+    tc = targets.reshape(b, nc, chunk).transpose(1, 0, 2)
+    mc = mask.reshape(b, nc, chunk).transpose(1, 0, 2)
+
+    @jax.checkpoint
+    def chunk_loss(hx, tx, mx):
+        logits = unembed(p_embed, hx, cfg)
+        v = logits.shape[-1]
+        neg = jnp.asarray(-1e9, logits.dtype)
+        if cfg.vocab_size < v:
+            ok = jnp.arange(v) < cfg.vocab_size
+            logits = jnp.where(ok[None, None, :], logits, neg)
+        logits = logits.astype(jnp.float32)
+        m = jnp.max(logits, axis=-1, keepdims=True)
+        lse = m[..., 0] + jnp.log(jnp.sum(jnp.exp(logits - m), axis=-1))
+        tgt = jnp.sum(logits * jax.nn.one_hot(tx, v, dtype=logits.dtype), axis=-1)
+        return jnp.sum((lse - tgt) * mx)
+
+    def body(acc, xs):
+        hx, tx, mx = xs
+        return acc + chunk_loss(hx, tx, mx), None
+
+    total, _ = jax.lax.scan(body, jnp.float32(0.0), (hc, tc, mc))
+    return total / jnp.maximum(jnp.sum(mask), 1.0)

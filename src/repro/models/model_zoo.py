@@ -1,0 +1,197 @@
+"""Uniform model API over all families + shape-cell input specs.
+
+  init_params(cfg, key, abstract)      -> (params, logical-axis specs)
+  loss_fn(cfg, remat)                  -> f(params, batch) -> scalar loss
+  prefill_fn(cfg)                      -> f(params, batch) -> last-pos logits
+  decode_fn(cfg)                       -> f(params, tokens, cache, pos)
+  make_cache(cfg, batch, seq, ...)     -> decode cache (+ logical specs)
+  input_specs(cfg, shape)              -> ShapeDtypeStruct batch for dry-runs
+
+Shape cells (assigned): train_4k / prefill_32k / decode_32k / long_500k.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import encdec, transformer
+from repro.models.config import ModelConfig
+from repro.models.layers import apply_norm, embed, softmax_xent, unembed
+from repro.dist.meshes import shard_act
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # train | prefill | decode
+
+
+SHAPES = {
+    "train_4k": ShapeSpec("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524_288, 1, "decode"),
+}
+
+
+def shape_applicable(cfg: ModelConfig, shape: ShapeSpec) -> tuple[bool, str]:
+    if shape.name == "long_500k" and not cfg.supports_long_context:
+        return False, (
+            "pure full-attention arch: 524k dense-attention decode is "
+            "quadratic/unbounded-cache by construction (DESIGN.md §5)"
+        )
+    return True, ""
+
+
+# ------------------------------------------------------------------------
+def init_params(cfg: ModelConfig, key=None, abstract: bool = False):
+    if cfg.family == "encdec":
+        return encdec.init_encdec(cfg, key, abstract)
+    return transformer.init_lm(cfg, key, abstract)
+
+
+def loss_fn(cfg: ModelConfig, remat: str = "full", unroll: bool = False):
+    if cfg.family == "encdec":
+        return partial(encdec.encdec_loss, cfg=cfg, remat=remat, unroll=unroll)
+    return partial(transformer.lm_loss, cfg=cfg, remat=remat, unroll=unroll)
+
+
+def prefill_fn(cfg: ModelConfig, remat: str = "none", unroll: bool = False):
+    """Full-sequence forward -> logits at the last position (inference
+    prefill; no loss, no grads)."""
+
+    if cfg.family == "encdec":
+
+        def run_encdec(params, batch):
+            enc_out = encdec.encode(params, batch["frames"], cfg, remat, unroll)
+            tokens = batch["tokens"]
+            b, s = tokens.shape
+            x = embed(params["embed"], tokens, cfg)
+            positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+
+            def scan_body(carry, lp):
+                x, pos = carry
+                return (encdec._dec_layer(lp, x, enc_out, cfg, pos), pos), None
+
+            (x, _), _ = jax.lax.scan(scan_body, (x, positions), params["dec"],
+                                     unroll=cfg.n_layers if unroll else 1)
+            h = apply_norm(params["final_norm"], x, cfg.norm_eps)
+            return unembed(params["embed"], h[:, -1:], cfg)[:, 0]
+
+        return run_encdec
+
+    def run(params, batch):
+        tokens = batch["tokens"]
+        b, s_txt = tokens.shape
+        x = embed(params["embed"], tokens, cfg)
+        positions = jnp.broadcast_to(jnp.arange(s_txt), (b, s_txt))
+        if cfg.vis_tokens:
+            vis = batch["patches"].astype(x.dtype) @ params["vis_proj"].astype(x.dtype)
+            x = jnp.concatenate([vis, x], axis=1)
+            s = x.shape[1]
+            positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+        x = shard_act(x, ("batch", "seq", "embed"), "h0")
+        x = transformer._run_segments(params["segments"], x, cfg, positions,
+                                      remat, unroll)
+        h = apply_norm(params["final_norm"], x, cfg.norm_eps)
+        return unembed(params["embed"], h[:, -1:], cfg)[:, 0]
+
+    return run
+
+
+def decode_fn(cfg: ModelConfig, unroll: bool = False):
+    if cfg.family == "encdec":
+        return partial(encdec.encdec_decode_step, cfg=cfg, unroll=unroll)
+    return partial(transformer.lm_decode_step, cfg=cfg, unroll=unroll)
+
+
+def make_cache(cfg: ModelConfig, batch: int, seq: int, abstract: bool = False):
+    if cfg.family == "encdec":
+        return encdec.init_encdec_cache(cfg, batch, seq, src=seq, abstract=abstract)
+    return transformer.init_cache(cfg, batch, seq, abstract=abstract)
+
+
+# ------------------------------------------------------------------------
+_CACHE_AXES = {
+    "k": ("batch", "kv_seq", "kv_heads", "head_dim"),
+    "v": ("batch", "kv_seq", "kv_heads", "head_dim"),
+    "xk": ("batch", "kv_seq", "kv_heads", "head_dim"),
+    "xv": ("batch", "kv_seq", "kv_heads", "head_dim"),
+    "c": ("batch", "kv_seq", "lora"),
+    "kr": ("batch", "kv_seq", "head_dim"),
+    "wkv": ("batch", "heads", "head_dim", "head_dim"),
+    "shift_t": ("batch", "seq", "embed"),
+    "shift_c": ("batch", "seq", "embed"),
+    "ssm": ("batch", "inner", "state"),
+    "conv": ("batch", "conv", "inner"),
+}
+
+
+def cache_specs(cache):
+    """Logical-axis tree parallel to a decode cache (for dry-run shardings)."""
+
+    def walk(node, key=None):
+        if isinstance(node, dict):
+            return {k: walk(v, k) for k, v in node.items()}
+        if isinstance(node, list):
+            return [walk(v, key) for v in node]
+        axes = _CACHE_AXES[key]
+        if len(node.shape) == len(axes) + 1:  # stacked over layers
+            return ("layers",) + axes
+        return axes
+
+    return walk(cache)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input of this cell."""
+    b, s = shape.global_batch, shape.seq_len
+    if shape.kind == "decode":
+        return {
+            "tokens": jax.ShapeDtypeStruct((b,), jnp.int32),
+            "pos": jax.ShapeDtypeStruct((), jnp.int32),
+        }
+    specs = {
+        "tokens": jax.ShapeDtypeStruct((b, _text_len(cfg, s)), jnp.int32),
+        "targets": jax.ShapeDtypeStruct((b, _text_len(cfg, s)), jnp.int32),
+        "loss_mask": jax.ShapeDtypeStruct((b, _text_len(cfg, s)), jnp.float32),
+    }
+    if cfg.vis_tokens:
+        specs["patches"] = jax.ShapeDtypeStruct(
+            (b, cfg.vis_tokens, cfg.d_model), jnp.float32
+        )
+    if cfg.family == "encdec":
+        specs["frames"] = jax.ShapeDtypeStruct((b, s, cfg.d_model), jnp.float32)
+    return specs
+
+
+def _text_len(cfg: ModelConfig, s: int) -> int:
+    return s - cfg.vis_tokens if cfg.vis_tokens else s
+
+
+def demo_batch(cfg: ModelConfig, batch: int, seq: int, rng=None) -> dict:
+    """Concrete random batch matching input_specs (smoke tests, examples)."""
+    import numpy as np
+
+    rng = rng or np.random.default_rng(0)
+    t = _text_len(cfg, seq)
+    tokens = rng.integers(0, cfg.vocab_size, (batch, t + 1))
+    out = {
+        "tokens": jnp.asarray(tokens[:, :-1], jnp.int32),
+        "targets": jnp.asarray(tokens[:, 1:], jnp.int32),
+        "loss_mask": jnp.ones((batch, t), jnp.float32),
+    }
+    if cfg.vis_tokens:
+        out["patches"] = jnp.asarray(
+            rng.normal(0, 1, (batch, cfg.vis_tokens, cfg.d_model)), jnp.float32
+        )
+    if cfg.family == "encdec":
+        out["frames"] = jnp.asarray(
+            rng.normal(0, 1, (batch, seq, cfg.d_model)), jnp.float32
+        )
+    return out

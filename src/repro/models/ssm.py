@@ -1,0 +1,268 @@
+"""Recurrent sequence mixers: RWKV6 (Finch) time/channel mix and Mamba-style
+selective SSM (for the Hymba hybrid).
+
+Training uses chunkwise-parallel forms (the flash-linear-attention factoring):
+within a chunk of C tokens the recurrence is evaluated with dense tile math
+(MXU-friendly), across chunks a lax.scan carries the state. All relative-decay
+exponents are differences of monotone log-decay cumsums with s < t, hence
+<= 0 — numerically safe without rescaling tricks. The per-token sequential
+scan (`*_scan` functions) is the oracle the chunked forms are tested against,
+and the O(1)-state decode path.
+
+kernels/wkv provides the Pallas TPU kernel for the RWKV6 chunk core; the jnp
+implementation here is its reference and the CPU path.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.meshes import shard_act
+from repro.models.config import ModelConfig
+from repro.models.layers import apply_norm, make_norm
+from repro.models.params import Maker
+
+LORA_TM = 32  # token-shift ddlerp lora rank
+LORA_W = 64  # decay lora rank
+
+
+# ============================ RWKV6 time mix ==================================
+def make_rwkv_tmix(m: Maker, cfg: ModelConfig):
+    d = cfg.d_model
+    h = d // cfg.rwkv_head_size
+    return {
+        "mu": m.param((6, d), ("state", "embed"), scale=0.02),  # base lerps (r,k,v,w,g,base)
+        "tm_w1": m.param((d, 5 * LORA_TM), ("embed", "lora"), scale=0.02),
+        "tm_w2": m.param((5, LORA_TM, d), ("state", "lora", "embed"), scale=0.02),
+        "wd1": m.param((d, LORA_W), ("embed", "lora"), scale=0.02),
+        "wd2": m.param((LORA_W, d), ("lora", "embed"), scale=0.02),
+        "w0": m.param((d,), ("embed",), scale=0.02),
+        "u": m.param((h, cfg.rwkv_head_size), ("heads", "head_dim"), scale=0.02),
+        "wr": m.param((d, d), ("embed", "inner")),
+        "wk": m.param((d, d), ("embed", "inner")),
+        "wv": m.param((d, d), ("embed", "inner")),
+        "wg": m.param((d, d), ("embed", "inner")),
+        "wo": m.param((d, d), ("inner", "embed")),
+        "ln_x": make_norm(m, d),
+    }
+
+
+def _tshift(x, prev=None):
+    """Token shift: x[t-1] (zeros / carried state at t=0)."""
+    if prev is None:
+        prev = jnp.zeros_like(x[:, :1])
+    return jnp.concatenate([prev, x[:, :-1]], axis=1)
+
+
+def _rwkv_inputs(p, x, cfg: ModelConfig, shift_prev=None):
+    dt = x.dtype
+    xx = _tshift(x, shift_prev)
+    dx = xx - x
+    base = x + dx * p["mu"][5].astype(dt)
+    ddl = jnp.tanh(jnp.einsum("btd,dr->btr", base, p["tm_w1"].astype(dt)))
+    ddl = ddl.reshape(*ddl.shape[:-1], 5, LORA_TM)
+    delta = jnp.einsum("btir,ird->btid", ddl, p["tm_w2"].astype(dt))
+    mixed = x[:, :, None, :] + dx[:, :, None, :] * (
+        p["mu"][:5].astype(dt)[None, None] + delta
+    )
+    xr, xk, xv, xw, xg = [mixed[:, :, i] for i in range(5)]
+
+    b, t, d = x.shape
+    h, hs = d // cfg.rwkv_head_size, cfg.rwkv_head_size
+    r = jnp.einsum("btd,de->bte", xr, p["wr"].astype(dt)).reshape(b, t, h, hs)
+    k = jnp.einsum("btd,de->bte", xk, p["wk"].astype(dt)).reshape(b, t, h, hs)
+    v = jnp.einsum("btd,de->bte", xv, p["wv"].astype(dt)).reshape(b, t, h, hs)
+    g = jax.nn.silu(jnp.einsum("btd,de->bte", xg, p["wg"].astype(dt)))
+    # data-dependent decay (log domain, clamped for stability)
+    lw = -jnp.exp(
+        p["w0"].astype(jnp.float32)
+        + jnp.tanh(xw.astype(jnp.float32) @ p["wd1"].astype(jnp.float32))
+        @ p["wd2"].astype(jnp.float32)
+    )
+    lw = jnp.clip(lw, -8.0, -1e-4).reshape(b, t, h, hs)
+    return r, k, v, g, lw, xx
+
+
+def wkv_chunked(r, k, v, lw, u, state, chunk: int):
+    """Chunkwise-parallel WKV6 core.
+
+    r/k/v/lw: (B, T, H, K) with T % chunk == 0; u: (H, K);
+    state: (B, H, K, V). Returns (y (B,T,H,V), state_out).
+    """
+    b, t, h, kd = r.shape
+    nc = t // chunk
+    resh = lambda x: x.reshape(b, nc, chunk, h, kd).transpose(1, 0, 3, 2, 4)
+    rc, kc, vc, lwc = resh(r), resh(k), resh(v), resh(lw)  # (nc, B, H, C, K)
+
+    def step(s, inp):
+        rr, kk, vv, ll = [a.astype(jnp.float32) for a in inp]
+        cum = jnp.cumsum(ll, axis=-2)  # inclusive (B,H,C,K)
+        q_ex = cum - ll  # exclusive
+        # cross-chunk: y_inter[t] = (r_t * exp(q_ex_t)) @ S_in
+        y = jnp.einsum("bhck,bhkv->bhcv", rr * jnp.exp(q_ex), s)
+        # intra-chunk: A[t,s<t] = sum_k r_t k_s exp(q_ex_t - cum_s)
+        dmat = jnp.exp(q_ex[:, :, :, None, :] - cum[:, :, None, :, :])
+        a = jnp.einsum("bhtk,bhsk,bhtsk->bhts", rr, kk, dmat)
+        tri = jnp.tril(jnp.ones((chunk, chunk), jnp.float32), -1)
+        a = a * tri
+        # diagonal bonus term
+        diag = jnp.einsum("bhtk,hk,bhtk->bht", rr, u.astype(jnp.float32), kk)
+        y = y + jnp.einsum("bhts,bhsv->bhtv", a, vv)
+        y = y + diag[..., None] * vv
+        # state update: S' = diag(exp(cum_last)) S + sum_s k_s exp(cum_last-cum_s) v_s^T
+        last = cum[:, :, -1:, :]
+        s_new = jnp.exp(last[:, :, 0, :, None]) * s + jnp.einsum(
+            "bhsk,bhsv->bhkv", kk * jnp.exp(last - cum), vv
+        )
+        return s_new, y
+
+    state, ys = jax.lax.scan(step, state.astype(jnp.float32),
+                             (rc, kc, vc, lwc))
+    y = ys.transpose(1, 0, 3, 2, 4).reshape(b, t, h, kd)
+    return y.astype(r.dtype), state
+
+
+def wkv_scan(r, k, v, lw, u, state):
+    """Per-token sequential oracle (and the decode recurrence)."""
+    b, t, h, kd = r.shape
+
+    def step(s, inp):
+        rr, kk, vv, ll = [a.astype(jnp.float32) for a in inp]  # (B,H,K)
+        y = jnp.einsum("bhk,bhkv->bhv", rr, s) + jnp.einsum(
+            "bhk,hk,bhk,bhv->bhv", rr, u.astype(jnp.float32), kk, vv
+        )
+        s = jnp.exp(ll)[..., None] * s + kk[..., None] * vv[..., None, :]
+        return s, y
+
+    xs = tuple(a.transpose(1, 0, 2, 3) for a in (r, k, v, lw))
+    state, ys = jax.lax.scan(step, state.astype(jnp.float32), xs)
+    return ys.transpose(1, 0, 2, 3).astype(r.dtype), state
+
+
+def rwkv_tmix(p, x, cfg: ModelConfig, state=None, shift_prev=None,
+              use_chunked=True, use_kernel: bool | None = None):
+    """Full time-mix block body. Returns (out, (wkv_state, shift_state))."""
+    b, t, d = x.shape
+    h, hs = d // cfg.rwkv_head_size, cfg.rwkv_head_size
+    r, k, v, g, lw, _ = _rwkv_inputs(p, x, cfg, shift_prev)
+    if state is None:
+        state = jnp.zeros((b, h, hs, hs), jnp.float32)
+    if use_chunked and t % cfg.chunk_len == 0 and t > 1:
+        from repro.kernels.wkv import ops as wkv_ops
+
+        y, state = wkv_ops.wkv(r, k, v, lw, p["u"], state, cfg.chunk_len,
+                               use_kernel=use_kernel)
+    else:
+        y, state = wkv_scan(r, k, v, lw, p["u"], state)
+    y = y.reshape(b, t, d)
+    y = apply_norm(p["ln_x"], y, 1e-5) * g
+    out = jnp.einsum("btd,de->bte", y, p["wo"].astype(x.dtype))
+    return shard_act(out, ("batch", "seq", "embed"), "tmix_out"), (
+        state,
+        x[:, -1:],
+    )
+
+
+# ============================ RWKV6 channel mix ================================
+def make_rwkv_cmix(m: Maker, cfg: ModelConfig):
+    d = cfg.d_model
+    return {
+        "mu_k": m.param((d,), ("embed",), scale=0.02),
+        "mu_r": m.param((d,), ("embed",), scale=0.02),
+        "wk": m.param((d, cfg.d_ff), ("embed", "ff")),
+        "wv": m.param((cfg.d_ff, d), ("ff", "embed")),
+        "wr": m.param((d, d), ("embed", "inner")),
+    }
+
+
+def rwkv_cmix(p, x, cfg: ModelConfig, shift_prev=None):
+    dt = x.dtype
+    xx = _tshift(x, shift_prev)
+    dx = xx - x
+    xk = x + dx * p["mu_k"].astype(dt)
+    xr = x + dx * p["mu_r"].astype(dt)
+    k = jnp.square(jax.nn.relu(jnp.einsum("btd,df->btf", xk, p["wk"].astype(dt))))
+    k = shard_act(k, ("batch", "seq", "ff"), "cmix_k")
+    v = jnp.einsum("btf,fd->btd", k, p["wv"].astype(dt))
+    r = jax.nn.sigmoid(jnp.einsum("btd,de->bte", xr, p["wr"].astype(dt)))
+    return r * v, x[:, -1:]
+
+
+# ============================== Mamba (hybrid) =================================
+def make_mamba(m: Maker, cfg: ModelConfig):
+    d = cfg.d_model
+    di = cfg.ssm_expand * d
+    n = cfg.ssm_state
+    return {
+        "w_in": m.param((d, 2 * di), ("embed", "inner")),
+        "conv": m.param((cfg.ssm_conv, di), ("conv", "inner"), scale=0.2),
+        "w_dt": m.param((di, di), ("inner", "inner"), scale=0.01),
+        "dt_bias": m.param((di,), ("inner",), scale=0.02),
+        "w_b": m.param((di, n), ("inner", "state"), scale=0.05),
+        "w_c": m.param((di, n), ("inner", "state"), scale=0.05),
+        "a_log": m.param((di, n), ("inner", "state"), scale=0.02),
+        "d_skip": m.param((di,), ("inner",), scale=0.02),
+        "w_out": m.param((di, d), ("inner", "embed")),
+    }
+
+
+def _mamba_core(p, xc, cfg: ModelConfig, h0, chunk: int):
+    """xc: (B, T, di) post-conv activations; h0: (B, di, N) state."""
+    b, t, di = xc.shape
+    n = cfg.ssm_state
+    f32 = jnp.float32
+    dt = jax.nn.softplus(
+        xc.astype(f32) @ p["w_dt"].astype(f32) + p["dt_bias"].astype(f32)
+    )  # (B,T,di)
+    bm = xc.astype(f32) @ p["w_b"].astype(f32)  # (B,T,N)
+    cm = xc.astype(f32) @ p["w_c"].astype(f32)
+    a = -jnp.exp(p["a_log"].astype(f32))  # (di,N)
+    decay = jnp.exp(dt[..., None] * a[None, None])  # (B,T,di,N)
+    drive = (dt * xc.astype(f32))[..., None] * bm[:, :, None, :]  # (B,T,di,N)
+
+    nc = max(t // chunk, 1)
+    c = t // nc
+    dec = decay.reshape(b, nc, c, di, n).transpose(1, 0, 2, 3, 4)
+    dri = drive.reshape(b, nc, c, di, n).transpose(1, 0, 2, 3, 4)
+
+    def combine(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a1 * a2, b1 * a2 + b2
+
+    def step(h, inp):
+        dc, dr = inp  # (B,C,di,N)
+        aa, bb = jax.lax.associative_scan(combine, (dc, dr), axis=1)
+        hs = aa * h[:, None] + bb  # (B,C,di,N)
+        return hs[:, -1], hs
+
+    h_last, hs = jax.lax.scan(step, h0.astype(f32), (dec, dri))
+    hs = hs.transpose(1, 0, 2, 3, 4).reshape(b, t, di, n)
+    y = jnp.einsum("btdn,btn->btd", hs, cm) + p["d_skip"].astype(f32) * xc.astype(f32)
+    return y.astype(xc.dtype), h_last
+
+
+def mamba_mix(p, x, cfg: ModelConfig, state=None, conv_prev=None, chunk=256):
+    """Returns (out, (ssm_state (B,di,N), conv_state (B,conv-1,di)))."""
+    b, t, d = x.shape
+    di = cfg.ssm_expand * d
+    dt_ = x.dtype
+    xi = jnp.einsum("btd,de->bte", x, p["w_in"].astype(dt_))
+    xz, z = xi[..., :di], xi[..., di:]
+    kw = cfg.ssm_conv
+    if conv_prev is None:
+        conv_prev = jnp.zeros((b, kw - 1, di), dt_)
+    xpad = jnp.concatenate([conv_prev, xz], axis=1)
+    xc = sum(
+        xpad[:, i : i + t] * p["conv"][i].astype(dt_) for i in range(kw)
+    )
+    xc = jax.nn.silu(xc)
+    xc = shard_act(xc, ("batch", "seq", "inner"), "mamba_conv")
+    if state is None:
+        state = jnp.zeros((b, di, cfg.ssm_state), jnp.float32)
+    y, state = _mamba_core(p, xc, cfg, state, chunk=min(chunk, t))
+    out = jnp.einsum("bte,ed->btd", y * jax.nn.silu(z), p["w_out"].astype(dt_))
+    return shard_act(out, ("batch", "seq", "embed"), "mamba_out"), (
+        state,
+        xpad[:, t:][:, -(kw - 1) :] if kw > 1 else jnp.zeros((b, 0, di), dt_),
+    )

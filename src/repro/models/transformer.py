@@ -1,0 +1,349 @@
+"""Decoder-only LM assembly for all families (dense / MoE / SSM / hybrid / VLM).
+
+The layer stack is a list of homogeneous *segments*; each segment's parameters
+are stacked on a leading layer axis and executed with lax.scan (+ optional
+jax.checkpoint), which keeps HLO size O(segments) for 60-95-layer configs and
+is what makes the 40-cell dry-run compile in minutes.
+
+Families map to segment kinds:
+  dense/vlm:  [attn(causal) + mlp] * L
+  moe:        [attn + dense-mlp] * first_dense  +  [attn + moe] * rest
+  ssm:        [rwkv time-mix + channel-mix] * L
+  hybrid:     attn(swa | global) ‖ mamba, + mlp; global layers at
+              cfg.global_layer_ids() split the stack into segments
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.meshes import shard_act
+from repro.models import attention as attn
+from repro.models import moe as moe_mod
+from repro.models import ssm
+from repro.models.config import ModelConfig
+from repro.models.layers import (
+    apply_mlp,
+    apply_norm,
+    embed,
+    make_embedding,
+    make_mlp,
+    make_norm,
+    softmax_xent,
+    unembed,
+)
+from repro.models.params import Maker, split_tree, stack_layers
+
+
+# --------------------------------------------------------------------------
+# segment structure
+# --------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class Segment:
+    kind: str  # attn_mlp | attn_moe | rwkv | hybrid_swa | hybrid_global
+    n_layers: int
+
+
+def segments_for(cfg: ModelConfig) -> list[Segment]:
+    if cfg.family == "ssm":
+        return [Segment("rwkv", cfg.n_layers)]
+    if cfg.family == "hybrid":
+        segs: list[Segment] = []
+        globals_ = set(cfg.global_layer_ids())
+        run = 0
+        for i in range(cfg.n_layers):
+            if i in globals_:
+                if run:
+                    segs.append(Segment("hybrid_swa", run))
+                    run = 0
+                segs.append(Segment("hybrid_global", 1))
+            else:
+                run += 1
+        if run:
+            segs.append(Segment("hybrid_swa", run))
+        return segs
+    if cfg.is_moe:
+        segs = []
+        if cfg.first_dense_layers:
+            segs.append(Segment("attn_mlp", cfg.first_dense_layers))
+        segs.append(Segment("attn_moe", cfg.n_layers - cfg.first_dense_layers))
+        return segs
+    return [Segment("attn_mlp", cfg.n_layers)]
+
+
+# --------------------------------------------------------------------------
+# per-layer parameter builders
+# --------------------------------------------------------------------------
+def _make_layer(m: Maker, cfg: ModelConfig, kind: str):
+    p = {"ln1": make_norm(m, cfg.d_model), "ln2": make_norm(m, cfg.d_model)}
+    if kind in ("attn_mlp", "attn_moe", "hybrid_swa", "hybrid_global"):
+        p["attn"] = (
+            attn.make_mla(m, cfg) if cfg.attn_kind == "mla" else attn.make_gqa(m, cfg)
+        )
+    if kind in ("hybrid_swa", "hybrid_global"):
+        p["mamba"] = ssm.make_mamba(m, cfg)
+        p["ln_attn_out"] = make_norm(m, cfg.d_model)
+        p["ln_mamba_out"] = make_norm(m, cfg.d_model)
+    if kind in ("attn_mlp", "hybrid_swa", "hybrid_global"):
+        p["mlp"] = make_mlp(m, cfg.d_model, cfg.d_ff)
+    if kind == "attn_moe":
+        p["moe"] = moe_mod.make_moe(m, cfg)
+    if kind == "rwkv":
+        del p["ln1"], p["ln2"]
+        p["ln_t"] = make_norm(m, cfg.d_model)
+        p["ln_c"] = make_norm(m, cfg.d_model)
+        p["tmix"] = ssm.make_rwkv_tmix(m, cfg)
+        p["cmix"] = ssm.make_rwkv_cmix(m, cfg)
+    return p
+
+
+def init_lm(cfg: ModelConfig, key=None, abstract: bool = False):
+    """Returns (params, specs): nested dicts; repeated layers stacked."""
+    m = Maker(key if key is not None else jax.random.PRNGKey(0),
+              param_dtype=jnp.dtype(cfg.param_dtype), abstract=abstract)
+    tree = {
+        "embed": make_embedding(m, cfg),
+        "final_norm": make_norm(m, cfg.d_model),
+        "segments": [
+            stack_layers(lambda i, k=s.kind: _make_layer(m, cfg, k), s.n_layers)
+            for s in segments_for(cfg)
+        ],
+    }
+    if cfg.vis_tokens:
+        tree["vis_proj"] = m.param((cfg.d_model, cfg.d_model), ("embed", "embed"))
+    if cfg.mtp:
+        tree["mtp"] = {
+            "norm_h": make_norm(m, cfg.d_model),
+            "norm_e": make_norm(m, cfg.d_model),
+            "proj": m.param((2 * cfg.d_model, cfg.d_model), ("ff", "embed")),
+            "layer": _make_layer(m, cfg, "attn_moe" if cfg.is_moe else "attn_mlp"),
+        }
+    return split_tree(tree)
+
+
+# --------------------------------------------------------------------------
+# layer forward bodies (training / prefill)
+# --------------------------------------------------------------------------
+def _attn_call(p, x, cfg, positions, kind, window):
+    if cfg.attn_kind == "mla":
+        return attn.mla_train(p, x, cfg, positions, kind=kind, window=window)
+    return attn.gqa_train(p, x, cfg, positions, kind=kind, window=window)
+
+
+def _layer_train(p, x, cfg: ModelConfig, positions, kind: str):
+    if kind == "rwkv":
+        h, _ = ssm.rwkv_tmix(p["tmix"], apply_norm(p["ln_t"], x, cfg.norm_eps), cfg)
+        x = x + h
+        h, _ = ssm.rwkv_cmix(p["cmix"], apply_norm(p["ln_c"], x, cfg.norm_eps), cfg)
+        return x + h
+    h = apply_norm(p["ln1"], x, cfg.norm_eps)
+    if kind in ("hybrid_swa", "hybrid_global"):
+        akind = "causal" if kind == "hybrid_global" else "swa"
+        a = _attn_call(p["attn"], h, cfg, positions, akind, cfg.swa_window)
+        s, _ = ssm.mamba_mix(p["mamba"], h, cfg)
+        mix = 0.5 * (
+            apply_norm(p["ln_attn_out"], a, cfg.norm_eps)
+            + apply_norm(p["ln_mamba_out"], s, cfg.norm_eps)
+        )
+        x = x + mix
+    else:
+        x = x + _attn_call(p["attn"], h, cfg, positions, "causal", 0)
+    h = apply_norm(p["ln2"], x, cfg.norm_eps)
+    if kind == "attn_moe":
+        return x + moe_mod.apply_moe(p["moe"], h, cfg)
+    return x + apply_mlp(p["mlp"], h)
+
+
+def _run_segments(seg_params, x, cfg: ModelConfig, positions, remat: str,
+                  unroll: bool = False):
+    for seg, sp in zip(segments_for(cfg), seg_params):
+        body = partial(_layer_train_scan, cfg=cfg, kind=seg.kind)
+        if remat == "full":
+            body = jax.checkpoint(body, static_argnums=())
+        elif remat == "dots":
+            body = jax.checkpoint(
+                body, policy=jax.checkpoint_policies.checkpoint_dots
+            )
+
+        def scan_body(carry, layer_p, body=body):
+            xx, pos = carry
+            return (body(xx, layer_p, pos), pos), None
+
+        (x, _), _ = jax.lax.scan(scan_body, (x, positions), sp,
+                                 unroll=seg.n_layers if unroll else 1)
+    return x
+
+
+def _layer_train_scan(x, layer_p, positions, cfg, kind):
+    return _layer_train(layer_p, x, cfg, positions, kind)
+
+
+# --------------------------------------------------------------------------
+# training loss
+# --------------------------------------------------------------------------
+def lm_loss(params, batch, cfg: ModelConfig, remat: str = "full",
+            unroll: bool = False):
+    tokens = batch["tokens"]
+    b, s_txt = tokens.shape
+    x = embed(params["embed"], tokens, cfg)
+    positions = jnp.broadcast_to(jnp.arange(s_txt), (b, s_txt))
+    if cfg.vis_tokens:
+        vis = batch["patches"].astype(x.dtype) @ params["vis_proj"].astype(x.dtype)
+        x = jnp.concatenate([vis, x], axis=1)
+        s = x.shape[1]
+        positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    x = shard_act(x, ("batch", "seq", "embed"), "h0")
+    x = _run_segments(params["segments"], x, cfg, positions, remat, unroll)
+    h = apply_norm(params["final_norm"], x, cfg.norm_eps)
+    if cfg.vis_tokens:
+        h_txt = h[:, cfg.vis_tokens :]
+    else:
+        h_txt = h
+    if cfg.loss_chunk:
+        from repro.models.layers import chunked_xent
+
+        loss = chunked_xent(params["embed"], h_txt, batch["targets"],
+                            batch["loss_mask"], cfg, cfg.loss_chunk)
+    else:
+        logits = unembed(params["embed"], h_txt, cfg)
+        loss = softmax_xent(logits, batch["targets"], batch["loss_mask"],
+                            cfg.vocab_size)
+    if cfg.mtp:
+        loss = loss + cfg.mtp_loss_weight * _mtp_loss(params, h_txt, batch, cfg,
+                                                      positions[:, : h_txt.shape[1]])
+    return loss
+
+
+def _mtp_loss(params, h, batch, cfg: ModelConfig, positions):
+    """DeepSeek-V3 multi-token prediction: one extra layer predicts t+2 from
+    [h_t ; emb(token_{t+1})] with the shared embedding/head."""
+    p = params["mtp"]
+    tokens, targets, mask = batch["tokens"], batch["targets"], batch["loss_mask"]
+    h_in = apply_norm(p["norm_h"], h[:, :-1], cfg.norm_eps)
+    e_in = apply_norm(
+        p["norm_e"], embed(params["embed"], tokens[:, 1:], cfg), cfg.norm_eps
+    )
+    z = jnp.concatenate([h_in, e_in], axis=-1) @ p["proj"].astype(h.dtype)
+    kind = "attn_moe" if cfg.is_moe else "attn_mlp"
+    z = _layer_train(p["layer"], z, cfg, positions[:, :-1], kind)
+    logits = unembed(params["embed"], z, cfg)
+    # target at offset +2: predict targets[t+1] from position t
+    return softmax_xent(logits, targets[:, 1:], mask[:, 1:], cfg.vocab_size)
+
+
+# --------------------------------------------------------------------------
+# decode (one token, batched, cached)
+# --------------------------------------------------------------------------
+def init_cache(cfg: ModelConfig, batch: int, seq: int, abstract: bool = False):
+    caches = []
+    for seg in segments_for(cfg):
+        layer_caches = [
+            _init_layer_cache(cfg, seg.kind, batch, seq, abstract)
+            for _ in range(seg.n_layers)
+        ]
+        caches.append(_stack_caches(layer_caches))
+    return caches
+
+
+def _stack_caches(items):
+    if isinstance(items[0], dict):
+        return {k: _stack_caches([it[k] for it in items]) for k in items[0]}
+    if isinstance(items[0], jax.ShapeDtypeStruct):
+        s = items[0]
+        return jax.ShapeDtypeStruct((len(items),) + tuple(s.shape), s.dtype)
+    return jnp.stack(items)
+
+
+def _init_layer_cache(cfg: ModelConfig, kind: str, b: int, s: int, abstract):
+    mk = (lambda sh, dt: jax.ShapeDtypeStruct(sh, dt)) if abstract else (
+        lambda sh, dt: jnp.zeros(sh, dt)
+    )
+    if kind == "rwkv":
+        h, hs = cfg.d_model // cfg.rwkv_head_size, cfg.rwkv_head_size
+        return {
+            "wkv": mk((b, h, hs, hs), jnp.float32),
+            "shift_t": mk((b, 1, cfg.d_model), jnp.bfloat16),
+            "shift_c": mk((b, 1, cfg.d_model), jnp.bfloat16),
+        }
+    cache = {}
+    if kind in ("hybrid_swa", "hybrid_global"):
+        di = cfg.ssm_expand * cfg.d_model
+        cache["ssm"] = mk((b, di, cfg.ssm_state), jnp.float32)
+        cache["conv"] = mk((b, cfg.ssm_conv - 1, di), jnp.bfloat16)
+    if cfg.attn_kind == "mla":
+        cache.update(attn.init_mla_cache(cfg, b, s, abstract=abstract))
+    else:
+        w = cfg.swa_window if kind == "hybrid_swa" else 0
+        cache.update(attn.init_gqa_cache(cfg, b, s, window=w, abstract=abstract))
+    return cache
+
+
+def _layer_decode(p, x, cache, pos, cfg: ModelConfig, kind: str):
+    if kind == "rwkv":
+        h = apply_norm(p["ln_t"], x, cfg.norm_eps)
+        h, (wkv_s, shift_t) = ssm.rwkv_tmix(
+            p["tmix"], h, cfg, state=cache["wkv"],
+            shift_prev=cache["shift_t"].astype(h.dtype), use_chunked=False
+        )
+        x = x + h
+        h = apply_norm(p["ln_c"], x, cfg.norm_eps)
+        h, shift_c = ssm.rwkv_cmix(p["cmix"], h, cfg,
+                                   shift_prev=cache["shift_c"].astype(h.dtype))
+        x = x + h
+        return x, {
+            "wkv": wkv_s,
+            "shift_t": shift_t.astype(jnp.bfloat16),
+            "shift_c": shift_c.astype(jnp.bfloat16),
+        }
+    h = apply_norm(p["ln1"], x, cfg.norm_eps)
+    new_cache = dict(cache)
+    if cfg.attn_kind == "mla":
+        a, upd = attn.mla_decode(p["attn"], h, {"c": cache["c"], "kr": cache["kr"]},
+                                 pos, cfg)
+        new_cache.update(upd)
+    else:
+        w = cfg.swa_window if kind == "hybrid_swa" else 0
+        a, upd = attn.gqa_decode(p["attn"], h, {"k": cache["k"], "v": cache["v"]},
+                                 pos, cfg, window=w)
+        new_cache.update(upd)
+    if kind in ("hybrid_swa", "hybrid_global"):
+        sm, (ssm_s, conv_s) = ssm.mamba_mix(
+            p["mamba"], h, cfg, state=cache["ssm"],
+            conv_prev=cache["conv"].astype(h.dtype)
+        )
+        new_cache["ssm"], new_cache["conv"] = ssm_s, conv_s.astype(jnp.bfloat16)
+        mix = 0.5 * (
+            apply_norm(p["ln_attn_out"], a, cfg.norm_eps)
+            + apply_norm(p["ln_mamba_out"], sm, cfg.norm_eps)
+        )
+        x = x + mix
+    else:
+        x = x + a
+    h = apply_norm(p["ln2"], x, cfg.norm_eps)
+    if kind == "attn_moe":
+        x = x + moe_mod.apply_moe(p["moe"], h, cfg)
+    else:
+        x = x + apply_mlp(p["mlp"], h)
+    return x, new_cache
+
+
+def lm_decode_step(params, tokens, caches, pos, cfg: ModelConfig,
+                   unroll: bool = False):
+    """tokens (B,) int32; caches from init_cache; pos: current position.
+    Returns (logits (B, padded_vocab), new_caches)."""
+    x = embed(params["embed"], tokens[:, None], cfg)
+    new_caches = []
+    for seg, sp, sc in zip(segments_for(cfg), params["segments"], caches):
+        def body(carry, layer, kind=seg.kind):
+            lp, lc = layer
+            y, nc = _layer_decode(lp, carry, lc, pos, cfg, kind)
+            return y, nc
+        x, nc = jax.lax.scan(body, x, (sp, sc),
+                             unroll=seg.n_layers if unroll else 1)
+        new_caches.append(nc)
+    h = apply_norm(params["final_norm"], x, cfg.norm_eps)
+    logits = unembed(params["embed"], h, cfg)[:, 0]
+    return logits, new_caches

@@ -1,0 +1,93 @@
+"""Optimized-HLO collective parsing.
+
+cost_analysis() does not expose collective bytes, so we parse the compiled
+per-device HLO text: every all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute instruction, its result shape, and its
+replica-group size, converted to ring-algorithm wire bytes per device:
+
+  all-gather:          (g-1)/g * out_bytes
+  all-reduce:        2*(g-1)/g * bytes
+  reduce-scatter:      (g-1)   * out_bytes     (= (g-1)/g * in_bytes)
+  all-to-all:          (g-1)/g * bytes
+  collective-permute:            bytes
+"""
+from __future__ import annotations
+
+import re
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLL_RE = re.compile(
+    r"=\s*(\([^)]*\)|\S+)\s+"
+    r"(all-reduce-start|all-gather-start|all-reduce|all-gather|reduce-scatter|"
+    r"all-to-all|collective-permute-start|collective-permute)\b(.*)$"
+)
+_GROUP_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUP_LIST_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(rest: str) -> int:
+    m = _GROUP_RE.search(rest)
+    if m:
+        return int(m.group(2))
+    m = _GROUP_LIST_RE.search(rest)
+    if m:
+        return len([x for x in m.group(1).split(",") if x.strip() != ""])
+    return 1
+
+
+def collective_stats(hlo_text: str) -> dict:
+    """Per-device collective byte totals from optimized HLO."""
+    by_kind: dict[str, dict] = {}
+    total_result = 0
+    total_wire = 0.0
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        shape_str, kind, rest = m.groups()
+        kind = kind.replace("-start", "")
+        b = _shape_bytes(shape_str)
+        g = max(_group_size(rest), 1)
+        if kind == "all-gather":
+            wire = b * (g - 1) / g
+        elif kind == "all-reduce":
+            wire = 2.0 * b * (g - 1) / g
+        elif kind == "reduce-scatter":
+            wire = float(b) * (g - 1)
+        elif kind == "all-to-all":
+            wire = b * (g - 1) / g
+        else:  # collective-permute
+            wire = float(b)
+        ent = by_kind.setdefault(
+            kind, {"count": 0, "result_bytes": 0, "wire_bytes": 0.0}
+        )
+        ent["count"] += 1
+        ent["result_bytes"] += b
+        ent["wire_bytes"] += wire
+        total_result += b
+        total_wire += wire
+    return {
+        "by_kind": by_kind,
+        "total_result_bytes": total_result,
+        "total_wire_bytes": total_wire,
+    }

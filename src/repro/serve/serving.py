@@ -1,0 +1,117 @@
+"""Batched serving: continuous-batching request manager over the decode step.
+
+The decode step itself (models/*.lm_decode_step) is one fused jitted program
+with sharded KV caches (flash-decode pattern, see models/attention.py). This
+module adds the request-level machinery a serving deployment needs: slot
+allocation for a fixed decode batch, prefill-then-decode admission, greedy /
+temperature sampling restricted to the true (unpadded) vocab, and per-request
+stop handling — a vLLM-style scheduler reduced to its core.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import model_zoo
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: list[int]
+    max_new_tokens: int
+    out: list[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class BatchedServer:
+    def __init__(self, cfg: ModelConfig, params, batch_slots: int, max_seq: int,
+                 temperature: float = 0.0, seed: int = 0):
+        self.cfg = cfg
+        self.params = params
+        self.slots = batch_slots
+        self.max_seq = max_seq
+        self.temperature = temperature
+        self.cache = model_zoo.make_cache(cfg, batch_slots, max_seq)
+        self._decode = jax.jit(model_zoo.decode_fn(cfg))
+        self.active: list[Request | None] = [None] * batch_slots
+        self.pos = 0
+        self.key = jax.random.PRNGKey(seed)
+        self.queue: list[Request] = []
+        self.finished: list[Request] = []
+
+    # -- admission -----------------------------------------------------------
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    def _admit(self):
+        for slot in range(self.slots):
+            if self.active[slot] is None and self.queue:
+                self.active[slot] = self.queue.pop(0)
+
+    # -- stepping ---------------------------------------------------------------
+    def _sample(self, logits):
+        logits = logits[:, : self.cfg.vocab_size].astype(jnp.float32)
+        if self.temperature <= 0:
+            return jnp.argmax(logits, axis=-1)
+        self.key, k = jax.random.split(self.key)
+        return jax.random.categorical(k, logits / self.temperature, axis=-1)
+
+    def step(self):
+        """One synchronous decode step across all slots."""
+        self._admit()
+        tokens = np.zeros(self.slots, np.int32)
+        for i, req in enumerate(self.active):
+            if req is None:
+                continue
+            # feed prompt tokens first (prefill-as-decode), then generations
+            consumed = self.pos_of(req)
+            tokens[i] = (
+                req.prompt[consumed]
+                if consumed < len(req.prompt)
+                else req.out[-1]
+            )
+        logits, self.cache = self._decode(
+            self.params, jnp.asarray(tokens), self.cache, jnp.int32(self.pos)
+        )
+        nxt = np.asarray(self._sample(logits))
+        for i, req in enumerate(self.active):
+            if req is None:
+                continue
+            consumed = self.pos_of(req)
+            if consumed + 1 >= len(req.prompt):
+                req.out.append(int(nxt[i]))
+            req._steps = getattr(req, "_steps", 0) + 1
+            if len(req.out) >= req.max_new_tokens or self.pos + 1 >= self.max_seq:
+                req.done = True
+                self.finished.append(req)
+                self.active[i] = None
+        self.pos += 1
+
+    @staticmethod
+    def pos_of(req: Request) -> int:
+        return getattr(req, "_steps", 0)
+
+    def run(self, max_steps: int | None = None):
+        steps = 0
+        while (self.queue or any(self.active)) and (
+            max_steps is None or steps < max_steps
+        ):
+            self.step()
+            steps += 1
+        return self.finished
+
+
+def generate_greedy(cfg: ModelConfig, params, prompts: list[list[int]],
+                    max_new_tokens: int, max_seq: int | None = None):
+    """Convenience: run a batch of prompts to completion, return token lists."""
+    max_seq = max_seq or (max(len(p) for p in prompts) + max_new_tokens + 1)
+    server = BatchedServer(cfg, params, batch_slots=len(prompts), max_seq=max_seq)
+    for i, p in enumerate(prompts):
+        server.submit(Request(rid=i, prompt=list(p), max_new_tokens=max_new_tokens))
+    done = server.run()
+    return [r.out for r in sorted(done, key=lambda r: r.rid)]

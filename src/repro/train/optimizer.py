@@ -1,0 +1,176 @@
+"""Optimizers: AdamW with ZeRO-style sharded state, grad clip, schedules.
+
+State sharding: each moment tensor inherits the parameter's logical axes and
+additionally tries to shard its *largest unsharded* dimension over the data
+axis (the "zero" logical rule), matching how MaxText shards optimizer state
+without weight-update resharding. State dtype is configurable (f32 default;
+bf16 halves optimizer HBM for the 671B dry-run).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    state_dtype: str = "float32"
+    zero_sharding: bool = True
+
+
+def adamw_init(params, cfg: OptConfig):
+    dt = jnp.dtype(cfg.state_dtype)
+
+    def zeros(p):
+        if isinstance(p, jax.ShapeDtypeStruct):
+            return jax.ShapeDtypeStruct(p.shape, dt)
+        return jnp.zeros(p.shape, dt)
+
+    return {
+        "mu": jax.tree.map(zeros, params),
+        "nu": jax.tree.map(zeros, params),
+        "step": jnp.zeros((), jnp.int32)
+        if not isinstance(jax.tree.leaves(params)[0], jax.ShapeDtypeStruct)
+        else jax.ShapeDtypeStruct((), jnp.int32),
+    }
+
+
+def state_specs(param_specs, cfg: OptConfig, param_shapes=None):
+    """Logical specs for optimizer state: param spec + zero-shard the largest
+    replicated dim (rule 'zero' -> data axis)."""
+    is_spec = lambda x: isinstance(x, tuple) and all(
+        isinstance(e, (str, type(None))) for e in x
+    )
+
+    def zshard(spec, shape):
+        if not cfg.zero_sharding or not spec:
+            return spec
+        # find largest dim whose logical axis is unsharded-by-default
+        cand = [
+            (dim, i)
+            for i, (dim, name) in enumerate(zip(shape, spec))
+            if name in (None, "embed", "seq", "layers")
+        ]
+        if not cand:
+            return spec
+        _, idx = max(cand)
+        out = list(spec)
+        out[idx] = "zero"
+        return tuple(out)
+
+    if param_shapes is None:
+        mapped = jax.tree.map(lambda s: s, param_specs, is_leaf=is_spec)
+    else:
+        mapped = jax.tree.map(
+            lambda s, p: zshard(s, tuple(p.shape)), param_specs, param_shapes,
+            is_leaf=is_spec,
+        )
+    return {"mu": mapped, "nu": mapped, "step": ()}
+
+
+def lr_at(step, cfg: OptConfig):
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    return cfg.lr * warm
+
+
+def adamw_update(params, grads, state, cfg: OptConfig):
+    step = state["step"] + 1
+    lr = lr_at(step, cfg)
+
+    gnorm = jnp.sqrt(
+        sum(
+            jnp.sum(jnp.square(g.astype(jnp.float32)))
+            for g in jax.tree.leaves(grads)
+        )
+    )
+    scale = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-9))
+
+    b1, b2 = cfg.b1, cfg.b2
+    c1 = 1.0 - b1 ** step.astype(jnp.float32)
+    c2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, mu, nu):
+        g = g.astype(jnp.float32) * scale
+        mu32 = mu.astype(jnp.float32) * b1 + (1 - b1) * g
+        nu32 = nu.astype(jnp.float32) * b2 + (1 - b2) * jnp.square(g)
+        mhat = mu32 / c1
+        vhat = nu32 / c2
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps) + cfg.weight_decay * p.astype(
+            jnp.float32
+        )
+        newp = p.astype(jnp.float32) - lr * delta
+        return newp.astype(p.dtype), mu32.astype(mu.dtype), nu32.astype(nu.dtype)
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_mu = jax.tree.leaves(state["mu"])
+    flat_nu = jax.tree.leaves(state["nu"])
+    out = [upd(p, g, m, n) for p, g, m, n in zip(flat_p, flat_g, flat_mu, flat_nu)]
+    new_params = jax.tree.unflatten(treedef, [o[0] for o in out])
+    new_state = {
+        "mu": jax.tree.unflatten(treedef, [o[1] for o in out]),
+        "nu": jax.tree.unflatten(treedef, [o[2] for o in out]),
+        "step": step,
+    }
+    return new_params, new_state, {"grad_norm": gnorm, "lr": lr}
+
+
+def make_train_step(loss_fn, opt_cfg: OptConfig, compress=None,
+                    microbatches: int = 1):
+    """Returns step(params, opt_state, batch) -> (params, opt_state, metrics).
+
+    ``compress`` optionally transforms gradients before the update (e.g. int8
+    compression with error feedback — see grad_compress.py).
+
+    ``microbatches`` > 1 splits the global batch and accumulates gradients
+    with a scan — the standard activation-memory lever: per-layer saved
+    activations shrink by the microbatch factor while the gradient math is
+    bitwise-equivalent up to f32 accumulation order.
+    """
+
+    def _grads(params, batch):
+        if microbatches <= 1:
+            return jax.value_and_grad(loss_fn)(params, batch)
+
+        def split(x):
+            return x.reshape((microbatches, x.shape[0] // microbatches)
+                             + x.shape[1:])
+
+        mb = jax.tree.map(split, batch)
+        zeros = jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params
+        )
+
+        def body(acc, b):
+            loss_acc, g_acc = acc
+            loss, g = jax.value_and_grad(loss_fn)(params, b)
+            g_acc = jax.tree.map(
+                lambda a, x: a + x.astype(jnp.float32), g_acc, g
+            )
+            return (loss_acc + loss, g_acc), None
+
+        (loss_sum, gsum), _ = jax.lax.scan(body, (jnp.float32(0.0), zeros), mb)
+        inv = 1.0 / microbatches
+        return loss_sum * inv, jax.tree.map(lambda g: g * inv, gsum)
+
+    def step(params, opt_state, batch, error_fb=None):
+        loss, grads = _grads(params, batch)
+        if compress is not None:
+            grads, error_fb = compress(grads, error_fb)
+        params, opt_state, info = adamw_update(params, grads, opt_state, opt_cfg)
+        metrics = {"loss": loss, **info}
+        if compress is not None:
+            return params, opt_state, error_fb, metrics
+        return params, opt_state, metrics
+
+    return step

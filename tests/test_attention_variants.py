@@ -1,0 +1,75 @@
+"""Attention path equivalences: q-chunked (flash-style) == naive, SWA masking,
+chunked CE == full CE, decode against prefill."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_reduced_config
+from repro.models import model_zoo
+from repro.models.attention import _mask, _sdpa, _sdpa_qchunk
+
+
+@pytest.mark.parametrize("kind,window", [("causal", 0), ("swa", 8), ("bidir", 0)])
+@pytest.mark.parametrize("q_chunk", [4, 16, 64])
+def test_qchunk_matches_naive(kind, window, q_chunk):
+    rng = np.random.default_rng(0)
+    b, s, kvh, g, d = 2, 48, 2, 3, 16
+    q = jnp.asarray(rng.normal(0, 1, (b, s, kvh, g, d)), jnp.float32)
+    k = jnp.asarray(rng.normal(0, 1, (b, s, kvh, d)), jnp.float32)
+    v = jnp.asarray(rng.normal(0, 1, (b, s, kvh, d)), jnp.float32)
+    want = _sdpa(q, k, v, _mask(s, s, kind, window), 0.25)
+    got = _sdpa_qchunk(q, k, v, kind, window, 0.25, q_chunk)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5,
+                               atol=2e-5)
+
+
+def test_qchunk_grads_match():
+    rng = np.random.default_rng(1)
+    b, s, kvh, g, d = 1, 32, 2, 2, 8
+    q = jnp.asarray(rng.normal(0, 1, (b, s, kvh, g, d)), jnp.float32)
+    k = jnp.asarray(rng.normal(0, 1, (b, s, kvh, d)), jnp.float32)
+    v = jnp.asarray(rng.normal(0, 1, (b, s, kvh, d)), jnp.float32)
+
+    def loss_naive(q, k, v):
+        return jnp.sum(jnp.square(_sdpa(q, k, v, _mask(s, s, "causal", 0), 0.3)))
+
+    def loss_chunk(q, k, v):
+        return jnp.sum(jnp.square(_sdpa_qchunk(q, k, v, "causal", 0, 0.3, 8)))
+
+    g1 = jax.grad(loss_naive, argnums=(0, 1, 2))(q, k, v)
+    g2 = jax.grad(loss_chunk, argnums=(0, 1, 2))(q, k, v)
+    for a, b_ in zip(g1, g2):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b_), rtol=1e-4,
+                                   atol=1e-4)
+
+
+@pytest.mark.parametrize("arch", ["minicpm3-4b", "internlm2-20b", "hymba-1.5b"])
+def test_model_loss_invariant_to_attn_chunking(arch):
+    cfg = get_reduced_config(arch)
+    cfg_c = dataclasses.replace(cfg, attn_q_chunk=8)
+    params, _ = model_zoo.init_params(cfg, jax.random.PRNGKey(0))
+    batch = model_zoo.demo_batch(cfg, 2, 32)
+    l1 = float(model_zoo.loss_fn(cfg, remat="none")(params, batch))
+    l2 = float(model_zoo.loss_fn(cfg_c, remat="none")(params, batch))
+    assert abs(l1 - l2) < 5e-3, (arch, l1, l2)
+
+
+def test_model_loss_invariant_to_loss_chunking():
+    cfg = get_reduced_config("internlm2-20b")
+    cfg_c = dataclasses.replace(cfg, loss_chunk=8)
+    params, _ = model_zoo.init_params(cfg, jax.random.PRNGKey(0))
+    batch = model_zoo.demo_batch(cfg, 2, 32)
+    l1 = float(model_zoo.loss_fn(cfg, remat="none")(params, batch))
+    l2 = float(model_zoo.loss_fn(cfg_c, remat="none")(params, batch))
+    assert abs(l1 - l2) < 5e-3
+
+    g1 = jax.grad(model_zoo.loss_fn(cfg, remat="none"))(params, batch)
+    g2 = jax.grad(model_zoo.loss_fn(cfg_c, remat="none"))(params, batch)
+    n1 = float(jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                            for x in jax.tree.leaves(g1))))
+    n2 = float(jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                            for x in jax.tree.leaves(g2))))
+    assert abs(n1 - n2) / max(n1, 1e-9) < 2e-2

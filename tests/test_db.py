@@ -1,0 +1,108 @@
+"""Heap files, buffer pool, catalog, query parsing."""
+import numpy as np
+import pytest
+
+from repro.db.bufferpool import BufferPool
+from repro.db.catalog import Catalog
+from repro.db.heap import HeapFile, write_table
+from repro.db.page import parse_page
+
+
+@pytest.fixture
+def heap(tmp_path):
+    rng = np.random.default_rng(1)
+    feats = rng.normal(0, 1, (500, 12)).astype(np.float32)
+    labels = rng.normal(0, 1, 500).astype(np.float32)
+    h = write_table(str(tmp_path / "t.heap"), feats, labels, page_bytes=8192)
+    return h, feats, labels
+
+
+def test_heap_roundtrip(heap, tmp_path):
+    h, feats, labels = heap
+    reopened = HeapFile(str(tmp_path / "t.heap"))
+    assert reopened.n_tuples == 500
+    pages = reopened.read_all()
+    fs = [parse_page(p, reopened.layout)[0] for p in pages]
+    np.testing.assert_array_equal(np.concatenate(fs), feats)
+
+
+def test_heap_random_access(heap):
+    h, feats, _ = heap
+    tpp = h.layout.tuples_per_page
+    p2 = h.read_page(2)
+    f, _, rids = parse_page(p2, h.layout)
+    np.testing.assert_array_equal(f, feats[2 * tpp : 3 * tpp])
+    assert rids[0] == 2 * tpp
+
+
+def test_bufferpool_lru_and_stats(heap):
+    h, _, _ = heap
+    pool = BufferPool(pool_bytes=4 * h.layout.page_bytes, page_bytes=h.layout.page_bytes)
+    for pid in range(4):
+        pool.get_page(h, pid)
+    assert pool.misses == 4 and pool.hits == 0
+    pool.get_page(h, 0)
+    assert pool.hits == 1
+    pool.get_page(h, 4)  # evicts LRU (page 1)
+    assert pool.evictions == 1
+    pool.get_page(h, 1)
+    assert pool.misses == 6
+
+
+def test_bufferpool_batch_and_warm(heap):
+    h, feats, _ = heap
+    pool = BufferPool(pool_bytes=64 * h.layout.page_bytes, page_bytes=h.layout.page_bytes)
+    batch = pool.fetch_batch(h, np.arange(h.n_pages))
+    assert batch.shape == (h.n_pages, h.layout.page_words)
+    resident = pool.warm(h)
+    assert resident == h.n_pages
+    pool.clear()
+    assert pool.resident == 0
+
+
+def test_bufferpool_pinned_not_evicted(heap):
+    h, _, _ = heap
+    pool = BufferPool(pool_bytes=2 * h.layout.page_bytes, page_bytes=h.layout.page_bytes)
+    pool.get_page(h, 0, pin=True)
+    pool.get_page(h, 1)
+    pool.get_page(h, 2)  # must evict page 1, not pinned page 0
+    assert (h.path, 0) in pool._frames
+    pool.unpin(h, 0)
+
+
+def test_catalog_roundtrip(tmp_path, heap):
+    h, _, _ = heap
+    cat = Catalog(str(tmp_path / "cat"))
+    cat.register_table("t", h.path, {"n_features": 12})
+    cat.register_udf("lin", {"x": np.arange(3)})
+    cat2 = Catalog(str(tmp_path / "cat"))
+    assert cat2.table("t")["heap"] == h.path
+    np.testing.assert_array_equal(cat2.udf("lin")["x"], np.arange(3))
+    assert cat2.udfs() == ["lin"] and cat2.tables() == ["t"]
+    with pytest.raises(KeyError):
+        cat2.table("nope")
+
+
+def test_query_end_to_end(tmp_path):
+    from repro.db.query import register_udf_from_trace, run_query
+    from repro.algorithms import linear_regression
+
+    rng = np.random.default_rng(0)
+    w_true = rng.normal(0, 1, 8).astype(np.float32)
+    X = rng.normal(0, 1, (600, 8)).astype(np.float32)
+    y = X @ w_true
+    heap = write_table(str(tmp_path / "train.heap"), X, y, page_bytes=8192)
+
+    cat = Catalog(str(tmp_path / "cat"))
+    cat.register_table("training_data_table", heap.path, {"n_features": 8})
+    register_udf_from_trace(
+        cat, "linearR", lambda: linear_regression(8, lr=0.2, merge_coef=32, epochs=60),
+        layout=heap.layout,
+    )
+    res = run_query(
+        "SELECT * FROM dana.linearR('training_data_table');", cat, mode="dana"
+    )
+    assert np.allclose(res.models[0], w_true, atol=0.05)
+
+    with pytest.raises(ValueError):
+        run_query("DROP TABLE x;", cat)

@@ -1,0 +1,140 @@
+"""DSL tracing, dimension inference, translator partitioning/validation."""
+import pytest
+
+from repro.core import dsl as dana
+from repro.core.translator import trace, translate
+from repro.algorithms import linear_regression, logistic_regression, lrmf, svm
+
+
+def test_linear_regression_trace():
+    g, part = trace(lambda: linear_regression(10, merge_coef=8))
+    assert len(g.model_ids) == 1 and len(g.input_ids) == 1
+    assert g.node(g.model_ids[0]).shape == (10,)
+    assert g.merge_id is not None
+    assert g.node(g.merge_id).attrs == {"op": "+", "coef": 8}
+    assert g.epochs == 20
+    # merge boundary: pre nodes touch inputs, post nodes don't
+    assert part.pre_merge and part.post_merge
+    for nid in part.post_merge:
+        for i in g.node(nid).inputs:
+            assert i not in g.input_ids and i not in g.output_ids
+
+
+def test_dim_inference_rightalign():
+    dana.reset()
+    mo = dana.model([5, 10])
+    x = dana.input([10])
+    prod = mo * x  # right-aligned replication
+    assert prod.shape == (5, 10)
+    s = dana.sigma(prod, 2)
+    assert s.shape == (5,)
+    n = dana.norm(prod)
+    assert n.shape == ()
+
+
+def test_dim_inference_outer():
+    dana.reset()
+    a = dana.model([5, 10])
+    b = dana.input([2, 10])
+    prod = a * b  # the paper's §4.4 example
+    assert prod.shape == (5, 2, 10)
+    assert dana.sigma(prod, 3).shape == (5, 2)
+
+
+def test_dim_inference_numpy_style():
+    dana.reset()
+    a = dana.model([7, 1])
+    b = dana.input([7, 3])
+    assert (a * b).shape == (7, 3)
+
+
+def test_rank1_outer_product():
+    dana.reset()
+    a = dana.model([5])
+    b = dana.input([7])
+    assert (a * b).shape == (5, 7)  # LRMF's er ⊗ u
+
+
+def test_incompatible_shapes_raise():
+    dana.reset()
+    a = dana.model([5, 3])
+    b = dana.input([7, 4])
+    with pytest.raises(ValueError):
+        _ = a + b
+
+
+def test_group_axis_validation():
+    dana.reset()
+    a = dana.model([5, 3])
+    with pytest.raises(ValueError):
+        dana.sigma(a, 3)
+
+
+def test_missing_terminator_rejected():
+    dana.reset()
+    mo = dana.model([4])
+    x = dana.input([4])
+    y = dana.output()
+    a = dana.algo(mo, x, y)
+    up = mo - dana.sigma(x * mo, 1) * x
+    a.setModel(up)
+    with pytest.raises(ValueError, match="terminator"):
+        translate()
+
+
+def test_missing_setmodel_rejected():
+    dana.reset()
+    mo = dana.model([4])
+    x = dana.input([4])
+    y = dana.output()
+    a = dana.algo(mo, x, y)
+    a.setEpochs(3)
+    with pytest.raises(ValueError, match="setModel"):
+        translate()
+
+
+def test_post_merge_reading_tuple_data_rejected():
+    dana.reset()
+    mo = dana.model([4])
+    x = dana.input([4])
+    y = dana.output()
+    a = dana.algo(mo, x, y)
+    g = a.merge((dana.sigma(mo * x, 1) - y) * x, 4, "+")
+    a.setModel(mo - g * x)  # illegal: x after merge
+    a.setEpochs(1)
+    with pytest.raises(ValueError, match="after the merge"):
+        translate()
+
+
+def test_shape_mismatch_setmodel_rejected():
+    dana.reset()
+    mo = dana.model([4])
+    x = dana.input([4])
+    y = dana.output()
+    a = dana.algo(mo, x, y)
+    a.setModel(dana.sigma(mo * x, 1))  # scalar != model shape
+    a.setEpochs(1)
+    with pytest.raises(ValueError, match="shape"):
+        translate()
+
+
+def test_all_algorithms_translate():
+    for fn in (
+        lambda: linear_regression(20),
+        lambda: logistic_regression(20),
+        lambda: svm(20),
+        lambda: lrmf(30, rank=5),
+    ):
+        g, part = trace(fn)
+        assert g.new_model_ids
+        assert g.total_subnodes() > 0
+        assert g.required_alu_ops()
+
+
+def test_subnode_counts():
+    g, _ = trace(lambda: linear_regression(10, merge_coef=8))
+    # sigma over 10 features: 10 outputs? no — scalar out, 9 adds min
+    sig = next(n for n in g.nodes if n.op == "sigma")
+    assert sig.subnode_count() == 9
+    mul = next(n for n in g.nodes if n.op == "mul")
+    assert mul.subnode_count() == 10

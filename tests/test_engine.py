@@ -1,0 +1,185 @@
+"""Execution engine: threaded-vs-sequential equivalence, convergence to
+ground truth, GLM template matching, scheduler/hwgen sanity."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.algorithms import linear_regression, logistic_regression, lrmf, svm
+from repro.core.engine import init_models, make_engine, match_glm_template
+from repro.core.translator import trace
+
+
+def _batchify(X, y, coef):
+    n = X.shape[0] // coef * coef
+    return (
+        jnp.asarray(X[:n]).reshape(-1, coef, X.shape[1]),
+        jnp.asarray(y[:n]).reshape(-1, coef),
+        jnp.ones((n // coef, coef), dtype=jnp.float32),
+    )
+
+
+def test_glm_template_matching():
+    cases = {
+        "linear": lambda: linear_regression(6),
+        "logistic": lambda: logistic_regression(6),
+        "svm": lambda: svm(6),
+    }
+    for want, fn in cases.items():
+        g, part = trace(fn)
+        assert match_glm_template(g, part) == want
+    g, part = trace(lambda: lrmf(12, rank=3))
+    assert match_glm_template(g, part) is None
+
+
+@pytest.mark.parametrize("use_fused", [False, True])
+def test_linear_regression_recovers_truth(use_fused):
+    rng = np.random.default_rng(0)
+    w_true = rng.normal(0, 1, 12)
+    X = rng.normal(0, 1, (2048, 12)).astype(np.float32)
+    y = (X @ w_true).astype(np.float32)
+    g, part = trace(lambda: linear_regression(12, lr=0.3, merge_coef=64))
+    eng = make_engine(g, part, use_fused_kernel=use_fused)
+    models = init_models(g)
+    Xb, Yb, Mb = _batchify(X, y, 64)
+    for _ in range(40):
+        models, gnorms = eng.run_epoch(models, Xb, Yb, Mb)
+    np.testing.assert_allclose(models[0], w_true, atol=1e-2)
+    assert float(gnorms[-1]) < 1.0
+
+
+def test_threaded_equals_sequential_batched():
+    """Merged '+' over a batch == explicit per-tuple accumulation."""
+    rng = np.random.default_rng(3)
+    X = rng.normal(0, 1, (128, 8)).astype(np.float32)
+    y = rng.normal(0, 1, 128).astype(np.float32)
+    g, part = trace(lambda: linear_regression(8, lr=0.1, merge_coef=16))
+    eng = make_engine(g, part, use_fused_kernel=False)
+    models = init_models(g)
+    Xb, Yb, Mb = _batchify(X, y, 16)
+    got, _ = eng.run_epoch(models, Xb, Yb, Mb)
+    want = eng.sequential_epoch(models, Xb, Yb)
+    np.testing.assert_allclose(got[0], want[0], rtol=1e-5, atol=1e-6)
+
+
+def test_fused_kernel_matches_general_path():
+    rng = np.random.default_rng(5)
+    X = rng.normal(0, 1, (256, 20)).astype(np.float32)
+    y = np.sign(rng.normal(0, 1, 256)).astype(np.float32)
+    for algo, labels in (
+        (lambda: svm(20, lr=0.05, merge_coef=32), y),
+        (lambda: logistic_regression(20, lr=0.05, merge_coef=32), np.clip(y, 0, 1)),
+    ):
+        g, part = trace(algo)
+        models = init_models(g, np.random.default_rng(1), scale=0.1)
+        Xb, Yb, Mb = _batchify(X, labels, 32)
+        fused = make_engine(g, part, use_fused_kernel=True)
+        plain = make_engine(g, part, use_fused_kernel=False)
+        assert fused.use_fused_kernel
+        m1, g1 = fused.run_epoch(models, Xb, Yb, Mb)
+        m2, g2 = plain.run_epoch(models, Xb, Yb, Mb)
+        np.testing.assert_allclose(m1[0], m2[0], rtol=1e-4, atol=1e-5)
+        np.testing.assert_allclose(g1, g2, rtol=1e-4, atol=1e-4)
+
+
+def test_masked_tuples_do_not_contribute():
+    rng = np.random.default_rng(7)
+    X = rng.normal(0, 1, (32, 5)).astype(np.float32)
+    y = rng.normal(0, 1, 32).astype(np.float32)
+    g, part = trace(lambda: linear_regression(5, lr=0.1, merge_coef=32))
+    eng = make_engine(g, part, use_fused_kernel=False)
+    models = init_models(g)
+    # mask second half; equivalent to running only the first half padded
+    mask = np.ones(32, np.float32)
+    mask[16:] = 0
+    X2 = X.copy()
+    X2[16:] = 99.0  # garbage that must be ignored
+    got, _ = eng.run_epoch(
+        models,
+        jnp.asarray(X2)[None],
+        jnp.asarray(y)[None],
+        jnp.asarray(mask)[None],
+    )
+    Xz, yz = X.copy(), y.copy()
+    Xz[16:] = 0
+    yz[16:] = 0
+    want, _ = eng.run_epoch(
+        models, jnp.asarray(Xz)[None], jnp.asarray(yz)[None],
+        jnp.ones((1, 32), jnp.float32)
+    )
+    np.testing.assert_allclose(got[0], want[0], rtol=1e-5, atol=1e-6)
+
+
+def test_logistic_learns_separator():
+    rng = np.random.default_rng(11)
+    w_true = rng.normal(0, 2, 10)
+    X = rng.normal(0, 1, (4096, 10)).astype(np.float32)
+    y = (X @ w_true > 0).astype(np.float32)
+    g, part = trace(lambda: logistic_regression(10, lr=0.5, merge_coef=128))
+    eng = make_engine(g, part)
+    models = init_models(g)
+    Xb, Yb, Mb = _batchify(X, y, 128)
+    for _ in range(30):
+        models, _ = eng.run_epoch(models, Xb, Yb, Mb)
+    pred = (X @ np.asarray(models[0]) > 0).astype(np.float32)
+    assert (pred == y).mean() > 0.97
+
+
+def test_svm_learns_separator():
+    rng = np.random.default_rng(13)
+    w_true = rng.normal(0, 2, 8)
+    X = rng.normal(0, 1, (4096, 8)).astype(np.float32)
+    y = np.sign(X @ w_true).astype(np.float32)
+    g, part = trace(lambda: svm(8, lr=0.1, merge_coef=128))
+    eng = make_engine(g, part)
+    models = init_models(g)
+    Xb, Yb, Mb = _batchify(X, y, 128)
+    for _ in range(30):
+        models, _ = eng.run_epoch(models, Xb, Yb, Mb)
+    pred = np.sign(X @ np.asarray(models[0]))
+    assert (pred == y).mean() > 0.97
+
+
+def test_lrmf_reduces_reconstruction_error():
+    rng = np.random.default_rng(17)
+    n_items, rank, n_users = 40, 4, 256
+    U = rng.normal(0, 1, (n_users, rank))
+    V = rng.normal(0, 1, (n_items, rank))
+    R = (U @ V.T).astype(np.float32)  # dense low-rank ratings
+    g, part = trace(lambda: lrmf(n_items, rank=rank, lr=2e-3, merge_coef=16))
+    eng = make_engine(g, part)
+    models = init_models(g, np.random.default_rng(2), scale=0.1)
+
+    Xb = jnp.asarray(R).reshape(-1, 16, n_items, 1)
+    Yb = jnp.zeros((Xb.shape[0], 16), jnp.float32)
+    Mb = jnp.ones((Xb.shape[0], 16), jnp.float32)
+
+    def recon_err(M):
+        M = np.asarray(M)
+        return float(np.linalg.norm(R - (R @ M) @ M.T) / np.linalg.norm(R))
+
+    e0 = recon_err(models[0])
+    for _ in range(60):
+        models, _ = eng.run_epoch(models, Xb, Yb, Mb)
+    e1 = recon_err(models[0])
+    assert e1 < 0.55 * e0
+
+
+def test_convergence_terminator():
+    rng = np.random.default_rng(19)
+    w_true = rng.normal(0, 1, 6)
+    X = rng.normal(0, 1, (512, 6)).astype(np.float32)
+    y = (X @ w_true).astype(np.float32)
+    g, part = trace(
+        lambda: linear_regression(6, lr=0.3, merge_coef=64, conv_factor=0.05,
+                                  epochs=500)
+    )
+    eng = make_engine(g, part)
+    models = init_models(g)
+    Xb, Yb, Mb = _batchify(X, y, 64)
+    for epoch in range(500):
+        models, _ = eng.run_epoch(models, Xb, Yb, Mb)
+        _, merged = eng.batch_step(models, Xb[0], Yb[0], Mb[0])
+        if eng.converged(models, merged):
+            break
+    assert epoch < 400  # converged well before the cap
+    np.testing.assert_allclose(models[0], w_true, atol=0.05)

@@ -1,0 +1,124 @@
+"""Strider ISA: encoding roundtrip, interpreter semantics, and the compiled
+page-walk program against the honest per-tuple parser."""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import isa
+from repro.core.striders import (
+    compile_strider_program,
+    run_strider,
+    strider_cycles_per_page,
+)
+from repro.db.page import PageLayout, build_pages, parse_page
+
+
+def test_encode_decode_roundtrip():
+    for op in isa.OPCODES:
+        word = isa.encode(op, "%cr3", 17, "%t5")
+        name, a, b, c = isa.decode(word)
+        assert name == op
+        assert a == isa.reg("%cr3") and b == 17 and c == isa.reg("%t5")
+        assert word < (1 << 22)  # fixed 22-bit instruction length (Table 2)
+
+
+def test_immediate_range_enforced():
+    with pytest.raises(ValueError):
+        isa.encode("readB", 40, 4, "%cr0")  # >31 must be built via ins
+
+
+def test_load_imm_builds_constants():
+    for value in (0, 5, 31, 32, 232, 32767, 123456):
+        prog = isa.assemble(isa.load_imm("%t0", value))
+        interp = isa.StriderInterpreter(prog)
+        st_ = interp.run(np.zeros(4, dtype=np.uint8))
+        assert int(st_.regs[isa.reg("%t0") & 0x1F]) == value
+
+
+def test_arithmetic_and_extract():
+    prog = isa.assemble(
+        [
+            ("ins", "%t0", 21, 0),
+            ("ad", "%t0", 10, "%t1"),  # 31
+            ("mul", "%t1", "%t1", "%t2"),  # 961
+            ("sub", "%t2", 1, "%t2"),  # 960
+            ("cln", "%t2", 6, "%t3"),  # 960 & 63 = 0
+            ("extrB", "%t2", 1, "%t4"),  # (960 >> 8) & 0xFFFF = 3
+            ("extrBi", "%t2", 6, "%t5"),  # bit 6 of 960 = 1
+        ]
+    )
+    s = isa.StriderInterpreter(prog).run(np.zeros(4, dtype=np.uint8))
+    r = lambda name: int(s.regs[isa.reg(name) & 0x1F])
+    assert r("%t1") == 31 and r("%t2") == 960
+    assert r("%t3") == 0 and r("%t4") == 3 and r("%t5") == 1
+
+
+def test_readb_little_endian():
+    page = np.array([0x44, 0x33, 0x22, 0x11], dtype=np.uint8)
+    prog = isa.assemble([("readB", 0, 4, "%cr0"), ("readB", 1, 2, "%cr1")])
+    s = isa.StriderInterpreter(prog).run(page)
+    assert int(s.regs[0]) == 0x11223344
+    assert int(s.regs[1]) == 0x2233
+
+
+def test_loop_with_bexit():
+    # sum 0..4 into t1 using the loop construct
+    prog = isa.assemble(
+        [
+            ("ins", "%t0", 0, 0),
+            ("bentr",),
+            ("ad", "%t1", "%t0", "%t1"),
+            ("ad", "%t0", 1, "%t0"),
+            ("bexit", 0, "%t0", 5),
+        ]
+    )
+    s = isa.StriderInterpreter(prog).run(np.zeros(4, dtype=np.uint8))
+    assert int(s.regs[isa.reg("%t1") & 0x1F]) == 10
+
+
+@pytest.mark.parametrize("quant", [False, True])
+@pytest.mark.parametrize("d", [1, 10, 54])
+def test_strider_program_matches_parser(d, quant):
+    lo = PageLayout(n_features=d, page_bytes=8192, quantized=quant)
+    rng = np.random.default_rng(d)
+    n = lo.tuples_per_page + 3  # one full + one partial page
+    feats = rng.normal(0, 1, (n, d)).astype(np.float32)
+    labels = rng.normal(0, 1, n).astype(np.float32)
+    pages = build_pages(feats, labels, lo)
+    program = compile_strider_program(lo)
+    for p in pages:
+        want_f, want_l, _ = parse_page(p, lo)
+        got_f, got_l, cycles = run_strider(program, p, lo)
+        np.testing.assert_array_equal(got_f, want_f)
+        np.testing.assert_array_equal(got_l, want_l)
+        assert cycles > 0
+
+
+def test_cycle_model_matches_interpreter_on_full_pages():
+    lo = PageLayout(n_features=16, page_bytes=8192)
+    rng = np.random.default_rng(0)
+    n = lo.tuples_per_page
+    pages = build_pages(
+        rng.normal(size=(n, 16)).astype(np.float32),
+        rng.normal(size=n).astype(np.float32),
+        lo,
+    )
+    program = compile_strider_program(lo)
+    _, _, cycles = run_strider(program, pages[0], lo)
+    assert cycles == strider_cycles_per_page(lo)
+
+
+@settings(max_examples=10, deadline=None)
+@given(d=st.integers(1, 80), quant=st.booleans(), seed=st.integers(0, 1000))
+def test_strider_program_property(d, quant, seed):
+    lo = PageLayout(n_features=d, page_bytes=16384, quantized=quant)
+    rng = np.random.default_rng(seed)
+    n = min(lo.tuples_per_page, 17)
+    feats = rng.normal(0, 3, (n, d)).astype(np.float32)
+    labels = rng.normal(0, 3, n).astype(np.float32)
+    page = build_pages(feats, labels, lo)[0]
+    want_f, want_l, _ = parse_page(page, lo)
+    got_f, got_l, _ = run_strider(compile_strider_program(lo), page, lo)
+    np.testing.assert_array_equal(got_f, want_f)
+    np.testing.assert_array_equal(got_l, want_l)

@@ -1,0 +1,153 @@
+"""Per-architecture smoke tests: reduced config of the same family, one
+forward/train step + one decode step on CPU; asserts shapes and no NaNs."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_config, get_reduced_config
+from repro.models import model_zoo
+from repro.models.params import count_params
+
+BATCH, SEQ = 2, 32
+
+
+@pytest.fixture(scope="module")
+def built():
+    cache = {}
+
+    def _get(arch):
+        if arch not in cache:
+            cfg = get_reduced_config(arch)
+            params, specs = model_zoo.init_params(cfg, jax.random.PRNGKey(0))
+            cache[arch] = (cfg, params, specs)
+        return cache[arch]
+
+    return _get
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_full_config_exact(arch):
+    """The full config matches the assignment row exactly."""
+    cfg = get_config(arch)
+    expected = {
+        "minicpm3-4b": (62, 2560, 40, 40, 6400, 73448),
+        "internlm2-20b": (48, 6144, 48, 8, 16384, 92544),
+        "mistral-nemo-12b": (40, 5120, 32, 8, 14336, 131072),
+        "deepseek-67b": (95, 8192, 64, 8, 22016, 102400),
+        "internvl2-26b": (48, 6144, 48, 8, 16384, 92553),
+        "olmoe-1b-7b": (16, 2048, 16, 16, 1024, 50304),
+        "deepseek-v3-671b": (61, 7168, 128, 128, 18432, 129280),
+        "rwkv6-3b": (32, 2560, 40, 40, 8960, 65536),
+        "seamless-m4t-medium": (12, 1024, 16, 16, 4096, 256206),
+        "hymba-1.5b": (32, 1600, 25, 5, 5504, 32001),
+    }[arch]
+    got = (cfg.n_layers, cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.d_ff,
+           cfg.vocab_size)
+    assert got == expected
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_train_step_smoke(arch, built):
+    cfg, params, specs = built(arch)
+    batch = model_zoo.demo_batch(cfg, BATCH, SEQ)
+    loss = model_zoo.loss_fn(cfg, remat="none")(params, batch)
+    assert loss.shape == ()
+    assert np.isfinite(float(loss)), f"{arch}: loss is not finite"
+    assert float(loss) > 0
+
+    grads = jax.grad(model_zoo.loss_fn(cfg, remat="full"))(params, batch)
+    gnorm = jnp.sqrt(
+        sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in jax.tree.leaves(grads))
+    )
+    assert np.isfinite(float(gnorm)), f"{arch}: grad norm not finite"
+    assert float(gnorm) > 0
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_prefill_smoke(arch, built):
+    cfg, params, _ = built(arch)
+    batch = model_zoo.demo_batch(cfg, BATCH, SEQ)
+    logits = model_zoo.prefill_fn(cfg)(params, batch)
+    assert logits.shape == (BATCH, cfg.padded_vocab)
+    assert np.all(np.isfinite(np.asarray(logits, np.float32)))
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_decode_step_smoke(arch, built):
+    cfg, params, _ = built(arch)
+    step = jax.jit(model_zoo.decode_fn(cfg))
+    tok_a = jnp.array([1, 2], jnp.int32)
+    tok_b = jnp.array([3, 4], jnp.int32)
+
+    # path 1: A then B
+    cache = model_zoo.make_cache(cfg, BATCH, SEQ)
+    logits_a, cache = step(params, tok_a, cache, jnp.int32(0))
+    logits_ab, _ = step(params, tok_b, cache, jnp.int32(1))
+    assert logits_a.shape == (BATCH, cfg.padded_vocab)
+    assert np.all(np.isfinite(np.asarray(logits_ab, np.float32)))
+
+    # path 2: B with a fresh cache — history must matter
+    cache2 = model_zoo.make_cache(cfg, BATCH, SEQ)
+    logits_b, _ = step(params, tok_b, cache2, jnp.int32(0))
+    assert not np.allclose(
+        np.asarray(logits_ab, np.float32), np.asarray(logits_b, np.float32)
+    ), f"{arch}: decode ignores cache history"
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_specs_cover_params(arch, built):
+    cfg, params, specs = built(arch)
+    pl = jax.tree.leaves(params)
+    sl = jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, tuple))
+    assert len(pl) == len(sl)
+    for arr, spec in zip(pl, sl):
+        assert len(spec) == arr.ndim, f"{arch}: {spec} vs {arr.shape}"
+    assert count_params(params) > 0
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_abstract_init_matches_real(arch, built):
+    cfg, params, _ = built(arch)
+    abs_params, _ = model_zoo.init_params(cfg, abstract=True)
+    real = jax.tree.leaves(params)
+    abst = jax.tree.leaves(abs_params)
+    assert len(real) == len(abst)
+    for r, a in zip(real, abst):
+        assert tuple(r.shape) == tuple(a.shape)
+        assert r.dtype == a.dtype
+
+
+def test_param_count_estimates():
+    """cfg.n_params() approximates the real (reduced) parameter count."""
+    for arch in ("internlm2-20b", "olmoe-1b-7b", "rwkv6-3b", "hymba-1.5b"):
+        cfg = get_reduced_config(arch)
+        params, _ = model_zoo.init_params(cfg, jax.random.PRNGKey(1))
+        real = count_params(params)
+        est = cfg.n_params()
+        assert 0.5 < est / real < 2.0, f"{arch}: est {est} vs real {real}"
+
+
+def test_full_param_counts_sane():
+    """Full configs land near their nameplate sizes."""
+    approx = {
+        "minicpm3-4b": 4e9,
+        "internlm2-20b": 20e9,
+        "mistral-nemo-12b": 12e9,
+        "deepseek-67b": 67e9,
+        "olmoe-1b-7b": 7e9,
+        "deepseek-v3-671b": 671e9,
+        "rwkv6-3b": 3e9,
+        "hymba-1.5b": 1.5e9,
+    }
+    for arch, want in approx.items():
+        n = get_config(arch).n_params()
+        assert 0.55 * want < n < 1.6 * want, f"{arch}: {n/1e9:.2f}B vs {want/1e9}B"
+
+
+def test_long_context_applicability():
+    from repro.models.model_zoo import SHAPES, shape_applicable
+
+    long = SHAPES["long_500k"]
+    ok_archs = {a for a in ARCH_IDS if shape_applicable(get_config(a), long)[0]}
+    assert ok_archs == {"rwkv6-3b", "hymba-1.5b"}

@@ -1,0 +1,174 @@
+"""MoE routing and recurrent-mixer equivalences: gather-dispatch vs dense
+oracle, chunked WKV vs sequential scan, Pallas WKV kernel vs both, Mamba
+chunked associative scan vs per-token recurrence."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.configs import get_reduced_config
+from repro.models import moe as moe_mod
+from repro.models import ssm
+from repro.models.params import Maker, split_tree
+
+
+def _moe_setup(seed=0, capacity_factor=8.0):
+    import dataclasses
+
+    cfg = get_reduced_config("olmoe-1b-7b")
+    cfg = dataclasses.replace(cfg, capacity_factor=capacity_factor)
+    m = Maker(jax.random.PRNGKey(seed))
+    params, _ = split_tree(moe_mod.make_moe(m, cfg))
+    return cfg, params
+
+
+def test_moe_matches_dense_reference_when_capacity_ample():
+    cfg, params = _moe_setup(capacity_factor=8.0)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, cfg.d_model),
+                          jnp.float32)
+    got = moe_mod.apply_moe(params, x, cfg)
+    want = moe_mod.moe_dense_reference(params, x, cfg)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-4,
+                               atol=2e-4)
+
+
+def test_moe_decode_single_group():
+    cfg, params = _moe_setup(capacity_factor=8.0)
+    x = jax.random.normal(jax.random.PRNGKey(2), (8, 1, cfg.d_model), jnp.float32)
+    got = moe_mod.apply_moe(params, x, cfg)
+    want = moe_mod.moe_dense_reference(params, x, cfg)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-4,
+                               atol=2e-4)
+
+
+def test_moe_capacity_drops_are_bounded():
+    """With tight capacity the output degrades gracefully (drops), never NaNs."""
+    cfg, params = _moe_setup(capacity_factor=0.5)
+    x = jax.random.normal(jax.random.PRNGKey(3), (2, 32, cfg.d_model), jnp.float32)
+    out = moe_mod.apply_moe(params, x, cfg)
+    assert np.all(np.isfinite(np.asarray(out)))
+
+
+def test_moe_grad_flows_to_router():
+    cfg, params = _moe_setup()
+    x = jax.random.normal(jax.random.PRNGKey(4), (1, 16, cfg.d_model), jnp.float32)
+
+    def loss(p):
+        return jnp.sum(jnp.square(moe_mod.apply_moe(p, x, cfg)))
+
+    g = jax.grad(loss)(params)
+    assert float(jnp.max(jnp.abs(g["router"]))) > 0
+    assert float(jnp.max(jnp.abs(g["wi"]))) > 0
+
+
+# ------------------------------- WKV6 ----------------------------------------
+def _wkv_inputs(b=2, t=64, h=3, k=16, seed=0):
+    rng = np.random.default_rng(seed)
+    mk = lambda *s: jnp.asarray(rng.normal(0, 1, s), jnp.float32)
+    r, kk, v = mk(b, t, h, k), mk(b, t, h, k), mk(b, t, h, k)
+    lw = jnp.asarray(-np.exp(rng.normal(-1, 1, (b, t, h, k))), jnp.float32)
+    lw = jnp.clip(lw, -8, -1e-4)
+    u = mk(h, k)
+    s0 = mk(b, h, k, k) * 0.1
+    return r, kk, v, lw, u, s0
+
+
+@pytest.mark.parametrize("chunk", [8, 16, 32])
+def test_wkv_chunked_matches_scan(chunk):
+    r, k, v, lw, u, s0 = _wkv_inputs()
+    y1, s1 = ssm.wkv_scan(r, k, v, lw, u, s0)
+    y2, s2 = ssm.wkv_chunked(r, k, v, lw, u, s0, chunk)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), rtol=2e-4, atol=2e-4)
+
+
+def test_wkv_pallas_kernel_matches_oracle():
+    from repro.kernels.wkv.wkv import wkv_pallas
+
+    r, k, v, lw, u, s0 = _wkv_inputs(b=2, t=32, h=2, k=8)
+    y1, s1 = ssm.wkv_scan(r, k, v, lw, u, s0)
+    y2, s2 = wkv_pallas(r, k, v, lw, u, s0, chunk=8, interpret=True)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), rtol=2e-4, atol=2e-4)
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    t=st.sampled_from([16, 32, 64]),
+    chunk=st.sampled_from([4, 8, 16]),
+    seed=st.integers(0, 100),
+)
+def test_wkv_kernel_property(t, chunk, seed):
+    from repro.kernels.wkv.wkv import wkv_pallas
+
+    r, k, v, lw, u, s0 = _wkv_inputs(b=1, t=t, h=2, k=8, seed=seed)
+    y1, s1 = ssm.wkv_scan(r, k, v, lw, u, s0)
+    y2, s2 = wkv_pallas(r, k, v, lw, u, s0, chunk=chunk, interpret=True)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), rtol=5e-4, atol=5e-4)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), rtol=5e-4, atol=5e-4)
+
+
+def test_wkv_state_carries_across_calls():
+    """Splitting a sequence across two calls == one call (streaming decode)."""
+    r, k, v, lw, u, s0 = _wkv_inputs(t=32)
+    y_full, s_full = ssm.wkv_scan(r, k, v, lw, u, s0)
+    y1, s_mid = ssm.wkv_scan(r[:, :16], k[:, :16], v[:, :16], lw[:, :16], u, s0)
+    y2, s_end = ssm.wkv_scan(r[:, 16:], k[:, 16:], v[:, 16:], lw[:, 16:], u, s_mid)
+    np.testing.assert_allclose(np.asarray(y_full), np.asarray(jnp.concatenate([y1, y2], 1)),
+                               rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(s_full), np.asarray(s_end), rtol=1e-4,
+                               atol=1e-5)
+
+
+# ------------------------------- Mamba ----------------------------------------
+def _mamba_setup(seed=0):
+    cfg = get_reduced_config("hymba-1.5b")
+    m = Maker(jax.random.PRNGKey(seed))
+    params, _ = split_tree(ssm.make_mamba(m, cfg))
+    return cfg, params
+
+
+def _mamba_sequential(p, xc, cfg, h0):
+    """Per-token oracle of _mamba_core."""
+    f32 = jnp.float32
+    dt = jax.nn.softplus(xc.astype(f32) @ p["w_dt"].astype(f32) + p["dt_bias"].astype(f32))
+    bm = xc.astype(f32) @ p["w_b"].astype(f32)
+    cm = xc.astype(f32) @ p["w_c"].astype(f32)
+    a = -jnp.exp(p["a_log"].astype(f32))
+    h = h0.astype(f32)
+    ys = []
+    for t in range(xc.shape[1]):
+        decay = jnp.exp(dt[:, t, :, None] * a[None])
+        h = decay * h + (dt[:, t] * xc[:, t].astype(f32))[..., None] * bm[:, t, None, :]
+        ys.append(jnp.einsum("bdn,bn->bd", h, cm[:, t]) +
+                  p["d_skip"].astype(f32) * xc[:, t].astype(f32))
+    return jnp.stack(ys, 1), h
+
+
+@pytest.mark.parametrize("chunk", [4, 8, 32])
+def test_mamba_chunked_matches_sequential(chunk):
+    cfg, params = _mamba_setup()
+    di = cfg.ssm_expand * cfg.d_model
+    xc = jax.random.normal(jax.random.PRNGKey(5), (2, 32, di), jnp.float32) * 0.3
+    h0 = jnp.zeros((2, di, cfg.ssm_state), jnp.float32)
+    y1, h1 = _mamba_sequential(params, xc, cfg, h0)
+    y2, h2 = ssm._mamba_core(params, xc, cfg, h0, chunk=chunk)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(h1), np.asarray(h2), rtol=2e-4, atol=2e-4)
+
+
+def test_mamba_streaming_state():
+    """Chunk-carried state: full pass == two half passes (decode contract)."""
+    cfg, params = _mamba_setup()
+    x = jax.random.normal(jax.random.PRNGKey(6), (1, 16, cfg.d_model), jnp.float32)
+    y_full, (s_full, conv_full) = ssm.mamba_mix(params, x, cfg)
+    y1, (s1, c1) = ssm.mamba_mix(params, x[:, :8], cfg)
+    y2, (s2, c2) = ssm.mamba_mix(params, x[:, 8:], cfg, state=s1, conv_prev=c1)
+    np.testing.assert_allclose(
+        np.asarray(y_full), np.asarray(jnp.concatenate([y1, y2], 1)),
+        rtol=3e-3, atol=3e-3,
+    )
+    np.testing.assert_allclose(np.asarray(s_full), np.asarray(s2), rtol=3e-3,
+                               atol=3e-3)

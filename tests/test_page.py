@@ -1,0 +1,121 @@
+"""Page format: geometry, build/parse roundtrip, quantization, partial pages."""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.db.page import (
+    HEADER_BYTES,
+    MAGIC,
+    PageLayout,
+    build_pages,
+    page_header,
+    parse_page,
+)
+
+
+def _data(n, d, seed=0):
+    rng = np.random.default_rng(seed)
+    return (
+        rng.normal(0, 1, (n, d)).astype(np.float32),
+        rng.normal(0, 1, n).astype(np.float32),
+    )
+
+
+def test_geometry_basic():
+    lo = PageLayout(n_features=54)
+    assert lo.tuple_len == 8 + 54 * 4 + 4
+    assert lo.stride % 8 == 0
+    assert lo.tuples_per_page >= 1
+    used = HEADER_BYTES + lo.tuples_per_page * (lo.stride + 4) + 16
+    assert used <= lo.page_bytes
+
+
+def test_roundtrip_exact():
+    lo = PageLayout(n_features=10)
+    feats, labels = _data(lo.tuples_per_page * 3, 10)
+    pages = build_pages(feats, labels, lo)
+    assert pages.shape == (3, lo.page_words)
+    got_f, got_l, got_r = [], [], []
+    for p in pages:
+        f, l, r = parse_page(p, lo)
+        got_f.append(f)
+        got_l.append(l)
+        got_r.append(r)
+    np.testing.assert_array_equal(np.concatenate(got_f), feats)
+    np.testing.assert_array_equal(np.concatenate(got_l), labels)
+    np.testing.assert_array_equal(
+        np.concatenate(got_r), np.arange(feats.shape[0], dtype=np.uint32)
+    )
+
+
+def test_partial_last_page():
+    lo = PageLayout(n_features=7)
+    n = lo.tuples_per_page + 5
+    feats, labels = _data(n, 7)
+    pages = build_pages(feats, labels, lo)
+    hdr = page_header(pages[-1])
+    assert hdr["magic"] == MAGIC
+    assert hdr["n_tuples"] == 5
+    f, l, _ = parse_page(pages[-1], lo)
+    np.testing.assert_array_equal(f, feats[lo.tuples_per_page :])
+    np.testing.assert_array_equal(l, labels[lo.tuples_per_page :])
+
+
+def test_quantized_roundtrip():
+    lo = PageLayout(n_features=30, quantized=True)
+    feats, labels = _data(100, 30)
+    pages = build_pages(feats, labels, lo)
+    fs = []
+    for p in pages:
+        f, l, _ = parse_page(p, lo)
+        fs.append(f)
+    got = np.concatenate(fs)
+    scale = np.abs(feats).max() / 127.0
+    assert np.max(np.abs(got - feats)) <= scale * 0.5 + 1e-7
+    np.testing.assert_array_equal(labels, np.concatenate(
+        [parse_page(p, lo)[1] for p in pages]))
+
+
+def test_header_fields():
+    lo = PageLayout(n_features=4)
+    feats, labels = _data(lo.tuples_per_page, 4)
+    pages = build_pages(feats, labels, lo)
+    hdr = page_header(pages[0])
+    assert hdr["page_size"] == lo.page_bytes
+    assert hdr["lower"] == HEADER_BYTES + 4 * lo.tuples_per_page
+    assert hdr["upper"] == lo.data_end - lo.tuples_per_page * lo.stride
+    assert hdr["special"] == lo.page_bytes - 16
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.integers(1, 400),
+    d=st.integers(1, 64),
+    quant=st.booleans(),
+    page_kb=st.sampled_from([8, 16, 32]),
+)
+def test_roundtrip_property(n, d, quant, page_kb):
+    lo = PageLayout(n_features=d, page_bytes=page_kb * 1024, quantized=quant)
+    rng = np.random.default_rng(n * 131 + d)
+    feats = rng.normal(0, 2, (n, d)).astype(np.float32)
+    labels = rng.normal(0, 2, n).astype(np.float32)
+    pages = build_pages(feats, labels, lo)
+    assert pages.shape[0] == lo.n_pages(n)
+    fs, ls = [], []
+    for p in pages:
+        f, l, _ = parse_page(p, lo)
+        fs.append(f)
+        ls.append(l)
+    got_f, got_l = np.concatenate(fs), np.concatenate(ls)
+    np.testing.assert_array_equal(got_l, labels)
+    if quant:
+        scale = max(np.abs(feats).max() / 127.0, 1e-12)
+        assert np.max(np.abs(got_f - feats)) <= scale * 0.5 + 1e-7
+    else:
+        np.testing.assert_array_equal(got_f, feats)
+
+
+def test_too_wide_tuple_raises():
+    with pytest.raises(ValueError):
+        PageLayout(n_features=100000, page_bytes=8192).tuples_per_page

@@ -1,0 +1,99 @@
+"""Cross-path parity: the prefill (train-path attention over the full
+sequence) and the decode path (per-token cache updates) must produce the
+same last-position logits — the strongest end-to-end check that every
+family's cache semantics (GQA KV, MLA absorbed-latent, RWKV state,
+Mamba+SWA hybrid, enc-dec cross-KV) match the parallel formulation."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_reduced_config
+from repro.models import model_zoo
+
+SEQ = 24
+
+
+@pytest.mark.parametrize("arch", [a for a in ARCH_IDS
+                                  if a != "seamless-m4t-medium"])
+def test_prefill_equals_decode(arch):
+    cfg = get_reduced_config(arch)
+    if cfg.is_moe:
+        # capacity dropping is FCFS over the whole routing group — a known,
+        # real train/serve asymmetry (prefill groups = sequences, decode
+        # groups = the batch). Parity is only defined when capacity does not
+        # bind, so test with ample capacity.
+        import dataclasses
+
+        cfg = dataclasses.replace(cfg, capacity_factor=16.0)
+    params, _ = model_zoo.init_params(cfg, jax.random.PRNGKey(3))
+    rng = np.random.default_rng(7)
+    tokens = rng.integers(1, cfg.vocab_size, (2, SEQ))
+
+    batch = {
+        "tokens": jnp.asarray(tokens, jnp.int32),
+        "targets": jnp.asarray(tokens, jnp.int32),
+        "loss_mask": jnp.ones((2, SEQ), jnp.float32),
+    }
+    if cfg.vis_tokens:
+        # decode path has no patch injection; compare text-only behaviour
+        # by zeroing the visual contribution
+        batch["patches"] = jnp.zeros((2, cfg.vis_tokens, cfg.d_model),
+                                     jnp.float32)
+    want = model_zoo.prefill_fn(cfg)(params, batch)  # (B, padded_vocab)
+
+    step = jax.jit(model_zoo.decode_fn(cfg))
+    cache = model_zoo.make_cache(cfg, 2, SEQ + cfg.vis_tokens + 1)
+    pos0 = cfg.vis_tokens  # visual prefix absent => positions offset
+    logits = None
+    for t in range(SEQ):
+        logits, cache = step(params, jnp.asarray(tokens[:, t], jnp.int32),
+                             cache, jnp.int32(pos0 + t))
+
+    got = np.asarray(logits, np.float32)
+    ref = np.asarray(want, np.float32)
+    if cfg.vis_tokens:
+        # zero patches still shift positions through the projector bias-free
+        # path; compare argmax agreement instead of exact values
+        agree = (got.argmax(-1) == ref.argmax(-1)).mean()
+        assert agree == 1.0, f"{arch}: argmax mismatch"
+    else:
+        # tolerance covers bf16 accumulation-order noise; deepseek-v3's
+        # reduced config has the deepest bf16 chain (q_lora + MLA + router +
+        # shared expert) -> measured max |Δ| ≈ 0.05 at corr 0.9999
+        tol = 6e-2 if arch == "deepseek-v3-671b" else 3e-2
+        np.testing.assert_allclose(got, ref, rtol=tol, atol=tol, err_msg=arch)
+        # and the ranking must match exactly
+        assert np.all(got.argmax(-1) == ref.argmax(-1)), arch
+
+
+def test_encdec_prefill_equals_decode():
+    cfg = get_reduced_config("seamless-m4t-medium")
+    params, _ = model_zoo.init_params(cfg, jax.random.PRNGKey(4))
+    rng = np.random.default_rng(9)
+    tokens = rng.integers(1, cfg.vocab_size, (2, SEQ))
+    frames = rng.normal(0, 1, (2, SEQ, cfg.d_model)).astype(np.float32)
+
+    batch = {
+        "tokens": jnp.asarray(tokens, jnp.int32),
+        "targets": jnp.asarray(tokens, jnp.int32),
+        "loss_mask": jnp.ones((2, SEQ), jnp.float32),
+        "frames": jnp.asarray(frames),
+    }
+    want = model_zoo.prefill_fn(cfg)(params, batch)
+
+    from repro.models import encdec
+
+    enc_out = encdec.encode(params, jnp.asarray(frames), cfg, remat="none")
+    ks, vs = encdec.precompute_cross_kv(params, enc_out, cfg)
+    cache = encdec.init_encdec_cache(cfg, 2, SEQ + 1, src=SEQ)
+    cache = dict(cache, xk=ks, xv=vs)
+    step = jax.jit(model_zoo.decode_fn(cfg))
+    logits = None
+    for t in range(SEQ):
+        logits, cache = step(params, jnp.asarray(tokens[:, t], jnp.int32),
+                             cache, jnp.int32(t))
+    np.testing.assert_allclose(np.asarray(logits, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=3e-2, atol=3e-2)
+    assert np.all(np.asarray(logits).argmax(-1) == np.asarray(want).argmax(-1))

@@ -1,0 +1,87 @@
+"""Roofline machinery: HLO collective parsing, wire-byte factors, term math."""
+import numpy as np
+
+from repro.roofline.analysis import HWSpec, model_flops, roofline_terms
+from repro.roofline.hlo import collective_stats, _shape_bytes
+
+HLO = """
+HloModule jit_step
+%x = f32[128,512]{1,0} parameter(0)
+%all-gather = f32[128,512]{0,1} all-gather(%conv), channel_id=1, replica_groups=[2,4]<=[8], dimensions={1}
+%all-reduce = f32[64]{0} all-reduce(%wrapped), channel_id=2, replica_groups=[2,4]<=[8], use_global_device_ids=true
+%reduce-scatter = bf16[32,16]{1,0} reduce-scatter(%y), channel_id=3, replica_groups=[1,8]<=[8], dimensions={0}
+%all-to-all = bf16[8,64]{1,0} all-to-all(%z), channel_id=4, replica_groups={{0,1,2,3}}, dimensions={0}
+%collective-permute = f32[16]{0} collective-permute(%w), channel_id=5, source_target_pairs={{0,1}}
+%fusion = f32[4,4]{1,0} fusion(%all-reduce), kind=kLoop
+"""
+
+
+def test_shape_bytes():
+    assert _shape_bytes("f32[128,512]") == 128 * 512 * 4
+    assert _shape_bytes("bf16[8,64]") == 8 * 64 * 2
+    assert _shape_bytes("(f32[4], bf16[2,2])") == 16 + 8
+    assert _shape_bytes("pred[]") == 1
+    assert _shape_bytes("token[]") == 0
+
+
+def test_collective_stats_kinds_and_wire_factors():
+    st = collective_stats(HLO)
+    k = st["by_kind"]
+    assert set(k) == {"all-gather", "all-reduce", "reduce-scatter",
+                      "all-to-all", "collective-permute"}
+    ag = 128 * 512 * 4
+    assert k["all-gather"]["result_bytes"] == ag
+    np.testing.assert_allclose(k["all-gather"]["wire_bytes"], ag * 3 / 4)
+    ar = 64 * 4
+    np.testing.assert_allclose(k["all-reduce"]["wire_bytes"], 2 * ar * 3 / 4)
+    rs = 32 * 16 * 2
+    np.testing.assert_allclose(k["reduce-scatter"]["wire_bytes"], rs * 7)
+    a2a = 8 * 64 * 2
+    np.testing.assert_allclose(k["all-to-all"]["wire_bytes"], a2a * 3 / 4)
+    cp = 16 * 4
+    np.testing.assert_allclose(k["collective-permute"]["wire_bytes"], cp)
+    assert st["total_result_bytes"] == ag + ar + rs + a2a + cp
+
+
+def test_collective_stats_ignores_non_collectives():
+    st = collective_stats("%fusion = f32[8]{0} fusion(%all-reduce.3), kind=kLoop")
+    assert st["total_result_bytes"] == 0
+
+
+def _record(flops=1e15, mem=1e12, wire=1e11, kind="train", n_active=20e9,
+            shape="train_4k"):
+    return {
+        "kind": kind,
+        "shape": shape,
+        "n_devices": 256,
+        "cost": {"flops": flops, "bytes_accessed": mem},
+        "collectives": {"total_wire_bytes": wire},
+        "model": {"n_params": n_active, "n_active_params": n_active},
+    }
+
+
+def test_roofline_terms_bounds():
+    hw = HWSpec()
+    t = roofline_terms(_record(), hw)
+    np.testing.assert_allclose(t["compute_s"], 1e15 / hw.peak_flops)
+    np.testing.assert_allclose(t["memory_s"], 1e12 / hw.hbm_bw)
+    np.testing.assert_allclose(t["collective_s"], 1e11 / hw.ici_link_bw)
+    assert t["bound"] == "compute"
+    t2 = roofline_terms(_record(flops=1e12, wire=1e12), hw)
+    assert t2["bound"] == "collective"
+    t3 = roofline_terms(_record(flops=1e12, mem=1e13, wire=1e7), hw)
+    assert t3["bound"] == "memory"
+
+
+def test_model_flops_train_vs_decode():
+    r_train = _record()
+    assert model_flops(r_train) == 6.0 * 20e9 * 256 * 4096
+    r_dec = _record(kind="decode", shape="decode_32k")
+    r_dec["kind"] = "decode"
+    assert model_flops(r_dec) == 2.0 * 20e9 * 128
+
+
+def test_roofline_fraction_sane():
+    t = roofline_terms(_record())
+    assert 0 < t["roofline_fraction"] <= 1.5
+    assert 0 < t["useful_flops_ratio"] < 100

@@ -1,0 +1,83 @@
+"""AC/AU scheduler + hardware generator: cycle model sanity and DSE behavior."""
+import numpy as np
+
+from repro.algorithms import linear_regression, lrmf
+from repro.core import hwgen
+from repro.core.scheduler import AUS_PER_AC, merge_tree_cycles, schedule
+from repro.core.translator import trace
+from repro.db.page import PageLayout
+
+
+def test_schedule_respects_dependencies():
+    g, part = trace(lambda: linear_regression(64, merge_coef=8))
+    sched = schedule(g, part.pre_merge, n_acs=2)
+    by_id = {r.nid: r for r in sched.records}
+    for r in sched.records:
+        for i in g.node(r.nid).inputs:
+            if i in by_id:
+                assert r.start >= by_id[i].end, "consumer started before producer"
+    assert sched.total_cycles > 0
+    assert sched.instruction_count == len(part.pre_merge) - sum(
+        1 for nid in part.pre_merge if g.node(nid).op in ("leaf", "const", "merge")
+    )
+
+
+def test_more_acs_never_slower():
+    g, part = trace(lambda: lrmf(256, rank=8, merge_coef=4))
+    cycles = [
+        schedule(g, part.pre_merge, n_acs=k).total_cycles for k in (1, 2, 4, 8, 16)
+    ]
+    assert all(a >= b for a, b in zip(cycles, cycles[1:])), cycles
+    assert cycles[0] > cycles[-1]  # wide graphs must actually benefit
+
+
+def test_merge_tree_log_depth():
+    c2 = merge_tree_cycles(64, 2, 1)
+    c16 = merge_tree_cycles(64, 16, 1)
+    assert c16 == 4 * c2  # log2(16)/log2(2) levels
+    assert merge_tree_cycles(64, 1, 1) == 0
+
+
+def test_microcode_is_packed_and_bounded():
+    g, part = trace(lambda: linear_regression(16, merge_coef=8))
+    sched = schedule(g, part.pre_merge, n_acs=1)
+    for r in sched.records:
+        assert 0 <= r.microcode < (1 << 32)
+        assert r.acs <= 1 or r.lanes > AUS_PER_AC
+
+
+def test_hwgen_explores_and_fits():
+    g, part = trace(lambda: linear_regression(54, merge_coef=64))
+    lo = PageLayout(n_features=54)
+    point = hwgen.explore(g, part, lo, n_tuples=581_102)
+    spec = hwgen.FPGASpec()
+    assert 1 <= point.n_threads <= 64
+    assert point.total_aus <= spec.max_compute_units
+    assert point.bram_used <= spec.bram_bytes
+    assert point.est_epoch_cycles > 0
+
+
+def test_hwgen_narrow_model_prefers_threads():
+    """Paper §7.2: narrow models gain from threads; a single wide-model
+    update rule saturates lanes and gains little."""
+    lo = PageLayout(n_features=54)
+    g, part = trace(lambda: linear_regression(54, merge_coef=1024))
+    point = hwgen.explore(g, part, lo, n_tuples=500_000)
+    assert point.n_threads >= 8
+
+    lo_wide = PageLayout(n_features=8000, page_bytes=64 * 1024)
+    g2, part2 = trace(lambda: linear_regression(8000, merge_coef=1024))
+    point2 = hwgen.explore(g2, part2, lo_wide, n_tuples=500_000)
+    assert point2.n_threads <= point.n_threads
+
+
+def test_modeled_runtime_bandwidth_bound_behavior():
+    g, part = trace(lambda: linear_regression(54, merge_coef=64))
+    lo = PageLayout(n_features=54)
+    point = hwgen.explore(g, part, lo, n_tuples=581_102)
+    base = hwgen.modeled_runtime_s(point, lo, 581_102, epochs=10)
+    half_bw = hwgen.modeled_runtime_s(point, lo, 581_102, epochs=10,
+                                      bandwidth_scale=0.5)
+    assert half_bw["total_s"] >= base["total_s"]
+    cold = hwgen.modeled_runtime_s(point, lo, 581_102, epochs=10, warm_cache=False)
+    assert cold["total_s"] > base["total_s"]

@@ -1,0 +1,166 @@
+"""Serving loop, sharding resolver, checkpoint elastic reshard (multi-device
+subprocess-free: uses forced host devices via a dedicated env in CI — here we
+test the resolver + single-device semantics), and the page-backed token
+pipeline (the paper's data path feeding LM training)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_reduced_config
+from repro.data.pipeline import PageTokenDataset, synthetic_data_fn
+from repro.dist import meshes
+from repro.models import model_zoo
+from repro.serve.serving import BatchedServer, Request, generate_greedy
+
+
+# ------------------------------- serving -------------------------------------
+@pytest.mark.parametrize("arch", ["hymba-1.5b", "rwkv6-3b", "minicpm3-4b"])
+def test_generate_greedy_shapes(arch):
+    cfg = get_reduced_config(arch)
+    params, _ = model_zoo.init_params(cfg, jax.random.PRNGKey(0))
+    outs = generate_greedy(cfg, params, [[1, 2, 3], [4, 5, 6]], max_new_tokens=5)
+    assert len(outs) == 2
+    for o in outs:
+        assert len(o) == 5
+        assert all(0 <= t < cfg.padded_vocab for t in o)
+
+
+def test_greedy_is_deterministic():
+    cfg = get_reduced_config("olmoe-1b-7b")
+    params, _ = model_zoo.init_params(cfg, jax.random.PRNGKey(1))
+    a = generate_greedy(cfg, params, [[7, 8, 9]], max_new_tokens=6)
+    b = generate_greedy(cfg, params, [[7, 8, 9]], max_new_tokens=6)
+    assert a == b
+
+
+def test_greedy_matches_prefillless_decode():
+    """Greedy generation must equal manual step-by-step decoding."""
+    cfg = get_reduced_config("internlm2-20b")
+    params, _ = model_zoo.init_params(cfg, jax.random.PRNGKey(2))
+    prompt = [3, 1, 4, 1, 5]
+    out = generate_greedy(cfg, params, [prompt], max_new_tokens=4)[0]
+
+    step = jax.jit(model_zoo.decode_fn(cfg))
+    cache = model_zoo.make_cache(cfg, 1, len(prompt) + 5)
+    toks = list(prompt)
+    for pos in range(len(prompt) + 3):
+        t = jnp.asarray([toks[pos] if pos < len(toks) else gen[-1]], jnp.int32)
+        logits, cache = step(params, t, cache, jnp.int32(pos))
+        if pos >= len(prompt) - 1:
+            nxt = int(jnp.argmax(logits[0, : cfg.vocab_size]))
+            if pos >= len(toks) - 1:
+                toks.append(nxt)
+    assert out[: len(toks) - len(prompt)] == toks[len(prompt) :]
+
+
+def test_server_temperature_sampling_runs():
+    cfg = get_reduced_config("rwkv6-3b")
+    params, _ = model_zoo.init_params(cfg, jax.random.PRNGKey(3))
+    srv = BatchedServer(cfg, params, batch_slots=2, max_seq=24, temperature=0.8)
+    srv.submit(Request(0, [1, 2], 6))
+    srv.submit(Request(1, [3, 4], 6))
+    done = srv.run()
+    assert len(done) == 2 and all(len(r.out) == 6 for r in done)
+    assert all(t < cfg.vocab_size for r in done for t in r.out)
+
+
+# ------------------------------- dist -----------------------------------------
+def test_resolver_prefix_fallback_and_fsdp():
+    mesh = jax.make_mesh(
+        (1, 1), ("data", "model"),
+        axis_types=(jax.sharding.AxisType.Auto,) * 2,
+    )
+    # rank/shape mismatches would throw; single-device mesh degenerates cleanly
+    spec = meshes.resolve_spec(("vocab", "embed"), (128, 64), mesh)
+    assert all(s is None for s in spec) or len(spec) == 0
+
+    spec = meshes.resolve_spec(
+        ("embed", "ff"), (64, 128), mesh, rules=meshes.FSDP_PARAM_RULES
+    )
+    assert len(spec) <= 2
+
+
+def test_resolver_no_axis_reuse():
+    # AbstractMesh: the resolver only needs axis names/sizes, no real devices
+    mesh = jax.sharding.AbstractMesh((2, 4), ("data", "model"))
+    # both dims want 'model': only the first gets it
+    spec = meshes.resolve_spec(("vocab", "ff"), (8, 8), mesh)
+    axes = [s for s in spec if s is not None]
+    assert axes.count("model") == 1
+    # divisibility fallback drops the axis and records it
+    with meshes.use_mesh(mesh):
+        spec2 = meshes.resolve_spec(("kv_heads",), (6,), mesh, tensor_name="kv")
+        assert list(spec2) in ([], [None])
+        assert any(t == "kv" for t, _, _ in meshes.fallbacks())
+    # FSDP rules shard embed over data
+    spec3 = meshes.resolve_spec(("embed", "ff"), (64, 128), mesh,
+                                rules=meshes.FSDP_PARAM_RULES)
+    assert spec3[0] == "data" and spec3[1] == "model"
+
+
+def test_shard_act_noop_outside_mesh():
+    x = jnp.ones((4, 4))
+    y = meshes.shard_act(x, ("batch", "embed"))
+    np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_cache_specs_cover_all_arch_caches():
+    for arch in ("minicpm3-4b", "rwkv6-3b", "hymba-1.5b", "seamless-m4t-medium",
+                 "deepseek-v3-671b"):
+        cfg = get_reduced_config(arch)
+        cache = model_zoo.make_cache(cfg, 2, 16, abstract=True)
+        specs = model_zoo.cache_specs(cache)
+        cl = jax.tree.leaves(cache)
+        sl = jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, tuple))
+        assert len(cl) == len(sl)
+        for c, s in zip(cl, sl):
+            assert len(s) == len(c.shape), (arch, s, c.shape)
+
+
+# ------------------------------- data -----------------------------------------
+def test_page_token_dataset_roundtrip(tmp_path):
+    from repro.data.synthetic import lm_token_batch
+
+    vocab, seq = 977, 24
+    ds = PageTokenDataset(str(tmp_path / "tok.heap"), n_seqs=16, seq_len=seq,
+                          vocab=vocab, seed=3)
+    batch = ds.batch(0, 8)
+    assert batch["tokens"].shape == (8, seq)
+    assert batch["targets"].shape == (8, seq)
+    # the page-decoded tokens equal the generator's output (bit-exact through
+    # the f32-view packing and the strider decode)
+    want = lm_token_batch(3 * 131 + 0, 1, seq, vocab)
+    np.testing.assert_array_equal(np.asarray(batch["tokens"][0]),
+                                  want["tokens"][0])
+    np.testing.assert_array_equal(np.asarray(batch["targets"][0]),
+                                  want["targets"][0])
+    # shifted-by-one language modeling structure
+    np.testing.assert_array_equal(np.asarray(batch["tokens"][0][1:]),
+                                  np.asarray(batch["targets"][0][:-1]))
+
+
+def test_page_dataset_trains_reduced_lm(tmp_path):
+    cfg = get_reduced_config("internlm2-20b", vocab_size=503)
+    ds = PageTokenDataset(str(tmp_path / "t.heap"), n_seqs=32, seq_len=32,
+                          vocab=cfg.vocab_size)
+    from repro.train.optimizer import OptConfig, adamw_init, make_train_step
+
+    params, _ = model_zoo.init_params(cfg, jax.random.PRNGKey(0))
+    ocfg = OptConfig(lr=1e-3, warmup_steps=2)
+    state = adamw_init(params, ocfg)
+    step = jax.jit(make_train_step(model_zoo.loss_fn(cfg, remat="none"), ocfg))
+    losses = []
+    for i in range(10):
+        params, state, m = step(params, state, ds.batch(i, 8))
+        losses.append(float(m["loss"]))
+    assert losses[-1] < losses[0]
+
+
+def test_synthetic_determinism():
+    cfg = get_reduced_config("rwkv6-3b")
+    fn = synthetic_data_fn(cfg, batch=2, seq=16, shard=1)
+    a, b = fn(5), fn(5)
+    np.testing.assert_array_equal(np.asarray(a["tokens"]), np.asarray(b["tokens"]))
+    c = fn(6)
+    assert not np.array_equal(np.asarray(a["tokens"]), np.asarray(c["tokens"]))

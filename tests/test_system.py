@@ -1,0 +1,85 @@
+"""End-to-end behaviour tests for the DAnA system: SQL query -> catalog ->
+buffer pool -> strider decode -> multi-threaded engine -> trained model,
+across execution modes, plus solver bookkeeping."""
+import numpy as np
+import pytest
+
+from repro.algorithms import linear_regression, logistic_regression, svm
+from repro.core import solver
+from repro.core.translator import trace
+from repro.db.bufferpool import BufferPool
+from repro.db.heap import write_table
+
+
+@pytest.fixture(scope="module")
+def linreg_heap(tmp_path_factory):
+    tmp = tmp_path_factory.mktemp("sys")
+    rng = np.random.default_rng(42)
+    w_true = rng.normal(0, 1, 16).astype(np.float32)
+    X = rng.normal(0, 1, (3000, 16)).astype(np.float32)
+    y = X @ w_true
+    heap = write_table(str(tmp / "lin.heap"), X, y, page_bytes=8192)
+    return heap, X, y, w_true
+
+
+def test_dana_mode_trains(linreg_heap):
+    heap, X, y, w_true = linreg_heap
+    g, part = trace(lambda: linear_regression(16, lr=0.3, merge_coef=64, epochs=40))
+    res = solver.train(g, part, heap, mode="dana")
+    assert res.epochs_run == 40
+    np.testing.assert_allclose(res.models[0], w_true, atol=0.02)
+    assert res.decode_s >= 0 and res.compute_s > 0
+
+
+def test_nostrider_mode_matches_dana(linreg_heap):
+    heap, X, y, w_true = linreg_heap
+    g, part = trace(lambda: linear_regression(16, lr=0.3, merge_coef=64, epochs=5))
+    a = solver.train(g, part, heap, mode="dana", seed=1)
+    b = solver.train(g, part, heap, mode="dana-nostrider", seed=1)
+    np.testing.assert_allclose(a.models[0], b.models[0], rtol=1e-5, atol=1e-6)
+
+
+def test_madlib_baseline_matches_dana(linreg_heap):
+    heap, X, y, w_true = linreg_heap
+    g, part = trace(lambda: linear_regression(16, lr=0.3, merge_coef=64, epochs=2))
+    a = solver.train(g, part, heap, mode="dana", seed=2)
+    b = solver.madlib_train(g, part, heap, seed=2)
+    np.testing.assert_allclose(a.models[0], b.models[0], rtol=1e-4, atol=1e-5)
+
+
+def test_convergence_stops_early(linreg_heap):
+    heap, X, y, w_true = linreg_heap
+    g, part = trace(
+        lambda: linear_regression(
+            16, lr=0.3, merge_coef=64, conv_factor=0.08, epochs=200
+        )
+    )
+    res = solver.train(g, part, heap, mode="dana")
+    assert res.converged
+    assert res.epochs_run < 200
+    np.testing.assert_allclose(res.models[0], w_true, atol=0.1)
+
+
+def test_warm_cache_faster_than_cold_path(linreg_heap):
+    """Warm pool must avoid disk reads entirely (hit-rate accounting)."""
+    heap, *_ = linreg_heap
+    pool = BufferPool(pool_bytes=heap.n_pages * heap.layout.page_bytes,
+                      page_bytes=heap.layout.page_bytes)
+    pool.warm(heap)
+    misses_before = pool.misses
+    g, part = trace(lambda: linear_regression(16, lr=0.3, merge_coef=64, epochs=2))
+    solver.train(g, part, heap, pool=pool, mode="dana")
+    assert pool.misses == misses_before  # every page served from the pool
+
+
+def test_quantized_table_trains(tmp_path):
+    rng = np.random.default_rng(9)
+    w_true = rng.normal(0, 1, 8).astype(np.float32)
+    X = rng.normal(0, 1, (2000, 8)).astype(np.float32)
+    y = X @ w_true
+    heap = write_table(str(tmp_path / "q.heap"), X, y, page_bytes=8192,
+                       quantized=True)
+    g, part = trace(lambda: linear_regression(8, lr=0.3, merge_coef=64, epochs=40))
+    res = solver.train(g, part, heap, mode="dana")
+    # int8 feature quantization bounds accuracy but must still recover signal
+    np.testing.assert_allclose(res.models[0], w_true, atol=0.1)
