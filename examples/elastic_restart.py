@@ -17,7 +17,6 @@ import tempfile
 
 import jax
 import numpy as np
-from jax.sharding import AxisType
 
 from repro.configs import get_reduced_config
 from repro.data.pipeline import synthetic_data_fn
@@ -28,8 +27,7 @@ from repro.train.optimizer import OptConfig, adamw_init, make_train_step
 
 
 def mesh_of(shape):
-    return jax.make_mesh(shape, ("data", "model"),
-                         axis_types=(AxisType.Auto,) * 2)
+    return meshes.make_mesh(shape, ("data", "model"))
 
 
 def place(params, specs, mesh):

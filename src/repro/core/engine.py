@@ -11,6 +11,16 @@ The engine also performs GLM template matching: when the pre-merge graph is
 numerically identical to ``(act(w.x) - y) * x`` the hardware generator swaps
 in the fused Pallas kernel (kernels/engine) — the specialized datapath an
 FPGA synthesis would produce for that hDFG.
+
+Sharded epoch mode (repro.dist): under an active ``meshes.use_mesh`` (or an
+Engine built with ``mesh=``) whose data axes are non-degenerate,
+``run_epoch`` shards the strider-decoded
+``(pages, tuples, features)`` batch over the mesh's data axes, so the
+threaded GLM update runs data-parallel and the tree-bus merge lowers to a
+cross-device reduce — the software analogue of the paper's parallel Striders
+feeding one merge tree. Sharded epochs use the vmap thread path: the Pallas
+GLM kernel is the per-core datapath, cross-core parallelism comes from the
+mesh.
 """
 from __future__ import annotations
 
@@ -24,6 +34,7 @@ import numpy as np
 from repro.core.hdfg import HDFG
 from repro.core.jax_backend import MERGE_OPS, compile_hdfg
 from repro.core.translator import Partition
+from repro.dist import meshes as dist_meshes
 
 GLM_TEMPLATES = ("linear", "logistic", "svm")
 
@@ -97,19 +108,22 @@ class Engine:
     metas: list[float]
     glm_template: str | None
     use_fused_kernel: bool
+    mesh: jax.sharding.Mesh | None = None
 
     def __post_init__(self):
         self._pre, self._post, self._conv, _ = compile_hdfg(self.g, self.part)
         self._epoch = jax.jit(self._epoch_impl)
         self._batch = jax.jit(self._batch_impl)
+        self._sharded_epochs: dict = {}  # mesh -> jitted sharded epoch
 
     # -- one merge batch -------------------------------------------------------
     def _merge(self, vals, mask):
         m = mask.reshape(mask.shape + (1,) * (vals.ndim - 1)).astype(vals.dtype)
         return MERGE_OPS[self.merge_op](vals, m, axis=0)
 
-    def _batch_impl(self, models, xb, yb, mask):
-        if self.use_fused_kernel and self.glm_template is not None:
+    def _batch_impl(self, models, xb, yb, mask, fused: bool | None = None):
+        fused = self.use_fused_kernel if fused is None else fused
+        if fused and self.glm_template is not None:
             from repro.kernels.engine import ops as engine_ops
 
             merged = engine_ops.glm_grad(
@@ -127,17 +141,82 @@ class Engine:
         return self._batch(models, xb, yb, mask)
 
     # -- one epoch over a resident chunk (scan over batches) -------------------
-    def _epoch_impl(self, models, X, Y, mask):
+    def _epoch_impl(self, models, X, Y, mask, fused: bool | None = None):
         def body(carry, batch):
             xb, yb, mb = batch
-            new_models, merged = self._batch_impl(carry, xb, yb, mb)
+            new_models, merged = self._batch_impl(carry, xb, yb, mb, fused)
             return new_models, jnp.sqrt(jnp.sum(jnp.square(merged)))
 
         models, gnorms = jax.lax.scan(body, models, (X, Y, mask))
         return models, gnorms
 
+    # -- sharded epoch (data-parallel threads over the mesh) -------------------
+    BATCH_AXES = {
+        "X": ("pages", "tuples", "features"),
+        "Y": ("pages", "tuples"),
+        "mask": ("pages", "tuples"),
+    }
+
+    def _sharded_epoch_fn(self, mesh):
+        jitted = self._sharded_epochs.get(mesh)
+        if jitted is None:
+
+            def impl(models, X, Y, mask):
+                def pin(arr, axes, tag):
+                    sh = dist_meshes.named_sharding(
+                        axes[: arr.ndim], arr.shape, mesh, tensor_name=tag
+                    )
+                    return jax.lax.with_sharding_constraint(arr, sh)
+
+                X = pin(X, self.BATCH_AXES["X"], "engine_X")
+                Y = pin(Y, self.BATCH_AXES["Y"], "engine_Y")
+                mask = pin(mask, self.BATCH_AXES["mask"], "engine_mask")
+                # vmap thread path only: the fused Pallas kernel is a
+                # per-core datapath and does not partition under GSPMD
+                return self._epoch_impl(models, X, Y, mask, fused=False)
+
+            jitted = self._sharded_epochs[mesh] = jax.jit(impl)
+        return jitted
+
+    def run_epoch_sharded(self, models, X, Y, mask, mesh=None):
+        """Epoch with the merge-coefficient (thread) dim sharded over the
+        mesh's data axes: inputs are placed distributed, the per-thread
+        pre-merge runs on the shard-local tuples, and the '+' merge becomes a
+        cross-device reduce. Numerically identical to ``run_epoch`` up to
+        float reduction order."""
+        mesh = mesh if mesh is not None else (
+            self.mesh if self.mesh is not None else dist_meshes.current_mesh()
+        )
+        if not isinstance(mesh, jax.sharding.Mesh):
+            return self._epoch(models, X, Y, mask)
+
+        def place(arr, axes, tag):
+            sh = dist_meshes.named_sharding(
+                axes[: jnp.ndim(arr)], jnp.shape(arr), mesh, tensor_name=tag
+            )
+            return jax.device_put(arr, sh)
+
+        X = place(X, self.BATCH_AXES["X"], "engine_X")
+        Y = place(Y, self.BATCH_AXES["Y"], "engine_Y")
+        mask = place(mask, self.BATCH_AXES["mask"], "engine_mask")
+        models = [
+            jax.device_put(m, dist_meshes.replicated(mesh)) for m in models
+        ]
+        return self._sharded_epoch_fn(mesh)(models, X, Y, mask)
+
     def run_epoch(self, models, X, Y, mask):
-        """X: (n_batches, merge_coef, D) float32; mask marks live tuples."""
+        """X: (n_batches, merge_coef, D) float32; mask marks live tuples.
+        Dispatches to the sharded path only when an active real mesh (via
+        ``Engine.mesh`` or an enclosing ``meshes.use_mesh``) actually offers
+        data parallelism — a degenerate data axis would trade the fused
+        Pallas kernel for per-chunk device_puts with nothing gained.
+        ``run_epoch_sharded`` remains callable explicitly on any mesh."""
+        mesh = self.mesh if self.mesh is not None else dist_meshes.current_mesh()
+        if (
+            isinstance(mesh, jax.sharding.Mesh)
+            and dist_meshes.mesh_axis_size(mesh, "pod", "data") > 1
+        ):
+            return self.run_epoch_sharded(models, X, Y, mask, mesh=mesh)
         return self._epoch(models, X, Y, mask)
 
     def converged(self, models, merged) -> bool:
@@ -167,6 +246,7 @@ def make_engine(
     merge_coef: int | None = None,
     metas: list[float] | None = None,
     use_fused_kernel: bool = True,
+    mesh: jax.sharding.Mesh | None = None,
 ) -> Engine:
     if g.merge_id is not None:
         op = g.node(g.merge_id).attrs["op"]
@@ -182,4 +262,5 @@ def make_engine(
         metas=metas if metas is not None else default_metas(g),
         glm_template=tmpl,
         use_fused_kernel=use_fused_kernel and tmpl is not None,
+        mesh=mesh,
     )

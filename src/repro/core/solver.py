@@ -12,6 +12,7 @@ Execution modes (the paper's evaluation axes):
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import time
 
@@ -20,6 +21,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.engine import Engine, default_metas, init_models, make_engine
+from repro.dist import meshes
 from repro.core.hdfg import HDFG
 from repro.core.translator import Partition
 from repro.db.bufferpool import BufferPool
@@ -97,9 +99,13 @@ def train(
     merge_coef: int | None = None,
     models=None,
     seed: int = 0,
+    mesh: jax.sharding.Mesh | None = None,
 ) -> TrainResult:
+    """``mesh`` (or an enclosing ``meshes.use_mesh``) turns on the engine's
+    sharded epoch mode: the decoded tuple stream is split over the mesh's
+    data axes — parallel Striders feeding one merge tree."""
     t_start = time.perf_counter()
-    engine = engine or make_engine(g, part, merge_coef=merge_coef)
+    engine = engine or make_engine(g, part, merge_coef=merge_coef, mesh=mesh)
     pool = pool or BufferPool(pool_bytes=MAX_RESIDENT_PAGES * heap.layout.page_bytes)
     models = (
         models
@@ -120,31 +126,33 @@ def train(
         for s in range(0, heap.n_pages, MAX_RESIDENT_PAGES)
     ]
 
-    for epoch in range(epochs):
-        last_gnorm = None
-        for chunk_ids in page_chunks:
-            t0 = time.perf_counter()
-            pages_np = pool.fetch_batch(heap, chunk_ids)
-            t1 = time.perf_counter()
-            feats, labels, mask = _decode_chunk(pages_np, heap, mode)
-            feats.block_until_ready()
-            t2 = time.perf_counter()
-            X, Y, M = _batches(feats, labels, mask, coef)
-            models, gnorms = engine.run_epoch(models, X, Y, M)
-            jax.block_until_ready(models)
-            t3 = time.perf_counter()
-            io_s += t1 - t0
-            decode_s += t2 - t1
-            compute_s += t3 - t2
-            last_gnorm = float(gnorms[-1])
-        grad_norms.append(last_gnorm if last_gnorm is not None else float("nan"))
-        epochs_run = epoch + 1
-        if g.convergence_id is not None and last_gnorm is not None:
-            # convergence is evaluated once per epoch (paper §4.4) on the last
-            # merged value; reconstruct it cheaply via the conv graph
-            if _check_convergence(engine, models, heap, pool, mode, coef):
-                converged = True
-                break
+    mesh_ctx = meshes.use_mesh(mesh) if mesh is not None else contextlib.nullcontext()
+    with mesh_ctx:
+        for epoch in range(epochs):
+            last_gnorm = None
+            for chunk_ids in page_chunks:
+                t0 = time.perf_counter()
+                pages_np = pool.fetch_batch(heap, chunk_ids)
+                t1 = time.perf_counter()
+                feats, labels, mask = _decode_chunk(pages_np, heap, mode)
+                feats.block_until_ready()
+                t2 = time.perf_counter()
+                X, Y, M = _batches(feats, labels, mask, coef)
+                models, gnorms = engine.run_epoch(models, X, Y, M)
+                jax.block_until_ready(models)
+                t3 = time.perf_counter()
+                io_s += t1 - t0
+                decode_s += t2 - t1
+                compute_s += t3 - t2
+                last_gnorm = float(gnorms[-1])
+            grad_norms.append(last_gnorm if last_gnorm is not None else float("nan"))
+            epochs_run = epoch + 1
+            if g.convergence_id is not None and last_gnorm is not None:
+                # convergence is evaluated once per epoch (paper §4.4) on the
+                # last merged value; reconstruct it cheaply via the conv graph
+                if _check_convergence(engine, models, heap, pool, mode, coef):
+                    converged = True
+                    break
     total_s = time.perf_counter() - t_start
     return TrainResult(
         models=[np.asarray(m) for m in models],

@@ -1,0 +1,10 @@
+"""Distributed execution layer: logical-axis sharding over device meshes.
+
+The rest of the codebase programs against *logical* axis names (``"batch"``,
+``"vocab"``, ``"ff"``, ...); this package owns the rule tables that resolve
+them onto physical mesh axes, the activation-constraint helper ``shard_act``,
+and the mesh constructors. See ``repro.dist.meshes``.
+"""
+from repro.dist import meshes  # noqa: F401
+
+__all__ = ["meshes"]

@@ -276,6 +276,8 @@ def _lower_and_measure(cfg, shape, mesh, remat, microbatches, param_rules,
     compile_s = round(time.perf_counter() - t1, 2)
     mem = compiled.memory_analysis()
     cost = compiled.cost_analysis() or {}
+    if isinstance(cost, (list, tuple)):  # pre-0.5 jax: [per-module dict]
+        cost = cost[0] if cost else {}
     return {
         "compile_s": compile_s,
         "fallbacks": fallbacks,

@@ -1,29 +1,10 @@
-"""Production meshes.
+"""Thin re-export shim: the mesh constructors live in ``repro.dist.meshes``
+(the logical-axis sharding subsystem) since the dist layer owns everything
+mesh-shaped. Import from there in new code."""
+from repro.dist.meshes import (  # noqa: F401
+    make_host_mesh,
+    make_mesh,
+    make_production_mesh,
+)
 
-Single pod: 16x16 = 256 chips (data, model).
-Multi-pod:  2x16x16 = 512 chips (pod, data, model); the pod axis carries
-pure data parallelism across the inter-pod (DCN) boundary.
-
-Defined as functions so importing this module never touches jax device
-state (device count is locked on first jax init — dryrun.py sets XLA_FLAGS
-before importing anything).
-"""
-from __future__ import annotations
-
-import jax
-from jax.sharding import AxisType
-
-
-def make_production_mesh(*, multi_pod: bool = False):
-    shape = (2, 16, 16) if multi_pod else (16, 16)
-    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
-
-
-def make_host_mesh(model_parallel: int = 1):
-    """Degenerate mesh over whatever devices exist (tests, examples)."""
-    n = jax.device_count()
-    mp = max(1, min(model_parallel, n))
-    return jax.make_mesh(
-        (n // mp, mp), ("data", "model"), axis_types=(AxisType.Auto,) * 2
-    )
+__all__ = ["make_host_mesh", "make_mesh", "make_production_mesh"]

@@ -1,0 +1,133 @@
+"""Deterministic stand-in for the tiny slice of `hypothesis` this test suite
+uses, installed by conftest.py ONLY when the real package is absent (the
+`test` extra in pyproject.toml declares the real one; environments without it
+still run the full suite instead of dying at collection).
+
+Supported: ``@given(**kwargs)``, ``@settings(max_examples=, deadline=)``,
+``st.integers(lo, hi)``, ``st.booleans()``, ``st.sampled_from(seq)``,
+``st.floats(lo, hi)``, ``assume``. Each ``@given`` test runs ``max_examples``
+draws from a per-test seeded RNG; the first draws hit the strategy boundaries
+(min/max) so edge cases are always exercised.
+"""
+from __future__ import annotations
+
+import random
+import sys
+import types
+
+
+class UnsatisfiedAssumption(Exception):
+    pass
+
+
+def assume(condition) -> bool:
+    if not condition:
+        raise UnsatisfiedAssumption()
+    return True
+
+
+class Strategy:
+    def __init__(self, draw, boundary=()):
+        self._draw = draw
+        self._boundary = list(boundary)
+
+    def example(self, rng: random.Random, index: int):
+        if index < len(self._boundary):
+            return self._boundary[index]
+        return self._draw(rng)
+
+
+def integers(min_value, max_value) -> Strategy:
+    return Strategy(
+        lambda rng: rng.randint(min_value, max_value),
+        boundary=[min_value, max_value],
+    )
+
+
+def booleans() -> Strategy:
+    return Strategy(lambda rng: bool(rng.getrandbits(1)), boundary=[False, True])
+
+
+def sampled_from(elements) -> Strategy:
+    elements = list(elements)
+    return Strategy(
+        lambda rng: elements[rng.randrange(len(elements))],
+        boundary=elements[:1],
+    )
+
+
+def floats(min_value, max_value) -> Strategy:
+    return Strategy(
+        lambda rng: rng.uniform(min_value, max_value),
+        boundary=[min_value, max_value],
+    )
+
+
+class settings:
+    """Decorator recording max_examples; deadline & co are accepted/ignored."""
+
+    def __init__(self, max_examples: int = 20, **_ignored):
+        self.max_examples = max_examples
+
+    def __call__(self, fn):
+        fn._fallback_settings = self
+        return fn
+
+
+def given(**strategies):
+    def decorate(fn):
+        def runner():
+            s = getattr(runner, "_fallback_settings", None) or getattr(
+                fn, "_fallback_settings", None
+            )
+            n = s.max_examples if s is not None else 20
+            rng = random.Random(f"{fn.__module__}:{fn.__qualname__}")
+            for i in range(n):
+                kwargs = {
+                    name: strat.example(rng, i)
+                    for name, strat in strategies.items()
+                }
+                try:
+                    fn(**kwargs)
+                except UnsatisfiedAssumption:
+                    continue
+                except Exception:
+                    print(
+                        f"[hypothesis-fallback] failing example "
+                        f"({fn.__qualname__}): {kwargs}",
+                        file=sys.stderr,
+                    )
+                    raise
+
+        runner.__name__ = fn.__name__
+        runner.__qualname__ = fn.__qualname__
+        runner.__doc__ = fn.__doc__
+        runner.__module__ = fn.__module__
+        runner.is_hypothesis_test = True
+        return runner
+
+    return decorate
+
+
+class HealthCheck:
+    too_slow = "too_slow"
+    data_too_large = "data_too_large"
+    all = classmethod(lambda cls: [cls.too_slow, cls.data_too_large])
+
+
+def install() -> None:
+    """Register this module as `hypothesis` (+ `hypothesis.strategies`)."""
+    hyp = types.ModuleType("hypothesis")
+    strat = types.ModuleType("hypothesis.strategies")
+    for mod in (hyp, strat):
+        mod.__package__ = "hypothesis"
+    for name in ("integers", "booleans", "sampled_from", "floats"):
+        setattr(strat, name, globals()[name])
+    hyp.given = given
+    hyp.settings = settings
+    hyp.assume = assume
+    hyp.HealthCheck = HealthCheck
+    hyp.strategies = strat
+    hyp.__is_fallback__ = True
+    sys.modules["hypothesis"] = hyp
+    sys.modules["hypothesis.strategies"] = strat

@@ -1,0 +1,22 @@
+"""Test bootstrap.
+
+* Puts ``src/`` on ``sys.path`` so ``python -m pytest`` works from the repo
+  root without the manual ``PYTHONPATH=src`` incantation.
+* When the real `hypothesis` package is not installed (it is an optional
+  ``test`` extra), installs the deterministic fallback so property tests
+  still collect and run.
+"""
+import os
+import sys
+
+_SRC = os.path.join(os.path.dirname(os.path.abspath(__file__)), "..", "src")
+_SRC = os.path.abspath(_SRC)
+if _SRC not in sys.path:
+    sys.path.insert(0, _SRC)
+
+try:
+    import hypothesis  # noqa: F401
+except ImportError:
+    import _hypothesis_fallback
+
+    _hypothesis_fallback.install()
