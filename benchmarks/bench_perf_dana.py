@@ -8,6 +8,11 @@ Iterations (each toggles ONE mechanism, steady-state timing, same math):
   P3  + int8-quantized pages (beyond-paper: the strider dequantizes on
       device — 4x fewer page bytes through the pool/interconnect, the
       precision-vs-bandwidth trade of Kara et al. [25] made automatic)
+  P4  + pipelined executor (fused run_chunk device program + double-buffered
+      prefetch, one device sync per epoch — bench_pipeline isolates this)
+
+P0-P3 run the synchronous executor so the per-phase decode_s/compute_s
+decomposition stays additive; P4 flips the executor on top of P3's config.
 
 Reported: wall seconds per epoch + speedup ladder + P3 accuracy cost. The
 FPGA cycle model's corresponding ladder is in bench_tabla/bench_threads;
@@ -27,12 +32,14 @@ from repro.data.synthetic import WORKLOADS, generate
 from repro.db.heap import HeapFile, write_table
 
 
-def _run(w, heap, mode, fused, epochs=3):
+def _run(w, heap, mode, fused, epochs=3, pipelined=False):
     g, part = traced(w)
     eng = make_engine(g, part, use_fused_kernel=fused)
-    solver.train(g, part, heap, mode=mode, engine=eng, max_epochs=1)  # warm
+    solver.train(g, part, heap, mode=mode, engine=eng, max_epochs=1,
+                 pipelined=pipelined)  # warm
     t0 = time.perf_counter()
-    res = solver.train(g, part, heap, mode=mode, engine=eng, max_epochs=epochs)
+    res = solver.train(g, part, heap, mode=mode, engine=eng, max_epochs=epochs,
+                       pipelined=pipelined)
     return (time.perf_counter() - t0) / epochs, res
 
 
@@ -54,6 +61,7 @@ def run(csv_rows: list[str]):
         p2, r2 = _run(w, heap, "dana", fused=True)
         heap_q = _quantized_heap(w, scale)
         p3, r3 = _run(w, heap_q, "dana", fused=True)
+        p4, r4 = _run(w, heap_q, "dana", fused=True, pipelined=True)
         gnorm_gap = abs(r3.grad_norms[-1] - r2.grad_norms[-1]) / max(
             abs(r2.grad_norms[-1]), 1e-9
         )
@@ -72,5 +80,12 @@ def run(csv_rows: list[str]):
             f"speedup_x={p0/p3:.2f}"
             f";page_bytes_ratio={heap_q.n_pages/heap.n_pages:.2f}"
             f";gradnorm_rel_gap={gnorm_gap:.4f}"
+        )
+        overlap = r4.overlapped_io_s / max(r4.io_s, 1e-9)
+        csv_rows.append(
+            f"perf_dana/{name}_P4_pipelined,{p4*1e6:.0f},"
+            f"speedup_x={p0/p4:.2f}"
+            f";syncs_per_epoch={r4.device_syncs/max(r4.epochs_run,1):.0f}"
+            f";overlap_frac={overlap:.2f}"
         )
     return csv_rows

@@ -22,6 +22,7 @@ SUITES = [
     ("fig15_external", "benchmarks.bench_external"),
     ("fig16_tabla", "benchmarks.bench_tabla"),
     ("perf_dana", "benchmarks.bench_perf_dana"),
+    ("pipeline", "benchmarks.bench_pipeline"),
     ("kernels", "benchmarks.bench_kernels"),
     ("roofline", "benchmarks.bench_roofline"),
 ]

@@ -54,14 +54,16 @@ def traced(w: Workload):
 _CACHE: dict = {}
 
 
-def time_mode(w: Workload, heap, mode: str, epochs: int = 1, warm: bool = True):
+def time_mode(w: Workload, heap, mode: str, epochs: int = 1, warm: bool = True,
+              pipelined: bool = True):
     """Returns (seconds, TrainResult). Warm cache preloads the buffer pool.
 
     Device modes reuse one jitted engine per (workload, tuples) and
     pre-compile it before timing: accelerator synthesis / jit compilation is
     an offline, catalog-time cost in DAnA's design (the FPGA is programmed
     before the query runs), so measured runtimes are steady-state query
-    executions."""
+    executions. ``pipelined=False`` selects the synchronous executor for
+    benches that read per-phase timings (io/decode/compute add only there)."""
     key = (w.name, heap.n_tuples)
     if key not in _CACHE:
         g, part = traced(w)
@@ -77,10 +79,10 @@ def time_mode(w: Workload, heap, mode: str, epochs: int = 1, warm: bool = True):
         t0 = time.perf_counter()
         res = solver.madlib_train(g, part, heap, max_epochs=epochs)
         return time.perf_counter() - t0, res
-    wkey = (w.name, mode, heap.n_tuples)
+    wkey = (w.name, mode, heap.n_tuples, pipelined)
     if wkey not in _CACHE:
         solver.train(g, part, heap, pool=pool, mode=mode, engine=engine,
-                     max_epochs=1)
+                     max_epochs=1, pipelined=pipelined)
         _CACHE[wkey] = True
         if warm:
             pool.warm(heap)
@@ -88,7 +90,7 @@ def time_mode(w: Workload, heap, mode: str, epochs: int = 1, warm: bool = True):
             pool.clear()
     t0 = time.perf_counter()
     res = solver.train(g, part, heap, pool=pool, mode=mode, engine=engine,
-                       max_epochs=epochs)
+                       max_epochs=epochs, pipelined=pipelined)
     return time.perf_counter() - t0, res
 
 

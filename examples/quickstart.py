@@ -58,8 +58,11 @@ def main():
     err = float(np.max(np.abs(res.models[0] - w_true)))
     print(f"converged={res.converged} after {res.epochs_run} epochs; "
           f"max |w - w*| = {err:.4f}")
-    print(f"timings: io={res.io_s:.3f}s decode={res.decode_s:.3f}s "
-          f"compute={res.compute_s:.3f}s total={res.total_s:.3f}s")
+    print(f"timings: io={res.io_s:.3f}s "
+          f"(exposed={res.exposed_io_s:.3f}s overlapped={res.overlapped_io_s:.3f}s) "
+          f"compute={res.compute_s:.3f}s total={res.total_s:.3f}s "
+          f"[pipelined: decode fused into compute, "
+          f"{res.device_syncs} device syncs]")
     assert err < 0.05
     print("OK")
 

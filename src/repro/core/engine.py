@@ -55,6 +55,25 @@ def init_models(g: HDFG, rng: np.random.Generator | None = None, scale: float = 
     return out
 
 
+def batches_from_stream(feats, labels, mask, coef):
+    """Pad a flat tuple stream to whole merge batches -> (nb, coef, ...) arrays.
+
+    Pure shape math on static shapes, so it composes into jitted programs
+    (``Engine.run_chunk``) as well as running eagerly from the solver."""
+    n = feats.shape[0]
+    nb = -(-n // coef)
+    pad = nb * coef - n
+    if pad:
+        feats = jnp.pad(feats, ((0, pad), (0, 0)))
+        labels = jnp.pad(labels, (0, pad))
+        mask = jnp.pad(mask, (0, pad))
+    return (
+        feats.reshape(nb, coef, -1),
+        labels.reshape(nb, coef),
+        mask.reshape(nb, coef),
+    )
+
+
 def match_glm_template(g: HDFG, part: Partition) -> str | None:
     """Probabilistic structural matching of the pre-merge graph against the
     GLM gradient templates. Numerical verification on random samples is
@@ -80,10 +99,16 @@ def match_glm_template(g: HDFG, part: Partition) -> str | None:
 
     rng = np.random.default_rng(7)
     candidates = set(GLM_TEMPLATES)
-    for _ in range(4):
+    for trial in range(6):
         w = jnp.asarray(rng.normal(0, 1, w_shape), jnp.float32)
         x = jnp.asarray(rng.normal(0, 1, x_shape), jnp.float32)
-        y = jnp.float32(rng.choice([-1.0, 1.0]) if True else 0.0)
+        # alternate ±1 class labels with continuous targets: identities like
+        # y*y == 1 hold on ±1 labels only, so probing non-±1 y rules out
+        # graphs that would otherwise shadow the linear template
+        if trial % 2 == 0:
+            y = jnp.float32(rng.choice([-1.0, 1.0]))
+        else:
+            y = jnp.float32(rng.normal(0.0, 2.0))
         try:
             got = pre_fn([w], x, y, metas)
         except Exception:
@@ -115,6 +140,7 @@ class Engine:
         self._epoch = jax.jit(self._epoch_impl)
         self._batch = jax.jit(self._batch_impl)
         self._sharded_epochs: dict = {}  # mesh -> jitted sharded epoch
+        self._chunk_fns: dict = {}  # (layout, use_kernel, mesh) -> jitted chunk
 
     # -- one merge batch -------------------------------------------------------
     def _merge(self, vals, mask):
@@ -157,20 +183,44 @@ class Engine:
         "mask": ("pages", "tuples"),
     }
 
+    def _active_data_mesh(self):
+        """The engine's mesh (or the ambient ``use_mesh`` one) iff it actually
+        offers data parallelism; None otherwise. Single source of truth for
+        the run_epoch/run_chunk sharded-path dispatch."""
+        mesh = self.mesh if self.mesh is not None else dist_meshes.current_mesh()
+        if (
+            isinstance(mesh, jax.sharding.Mesh)
+            and dist_meshes.mesh_axis_size(mesh, "pod", "data") > 1
+        ):
+            return mesh
+        return None
+
+    @staticmethod
+    def _replicated_models(models, mesh):
+        return [jax.device_put(m, dist_meshes.replicated(mesh)) for m in models]
+
+    def _pin_batch(self, X, Y, mask, mesh):
+        """Constrain a (X, Y, mask) batch to the mesh's data axes inside a
+        jitted program — shared by the sharded epoch and chunk programs."""
+
+        def pin(arr, axes, tag):
+            sh = dist_meshes.named_sharding(
+                axes[: arr.ndim], arr.shape, mesh, tensor_name=tag
+            )
+            return jax.lax.with_sharding_constraint(arr, sh)
+
+        return (
+            pin(X, self.BATCH_AXES["X"], "engine_X"),
+            pin(Y, self.BATCH_AXES["Y"], "engine_Y"),
+            pin(mask, self.BATCH_AXES["mask"], "engine_mask"),
+        )
+
     def _sharded_epoch_fn(self, mesh):
         jitted = self._sharded_epochs.get(mesh)
         if jitted is None:
 
             def impl(models, X, Y, mask):
-                def pin(arr, axes, tag):
-                    sh = dist_meshes.named_sharding(
-                        axes[: arr.ndim], arr.shape, mesh, tensor_name=tag
-                    )
-                    return jax.lax.with_sharding_constraint(arr, sh)
-
-                X = pin(X, self.BATCH_AXES["X"], "engine_X")
-                Y = pin(Y, self.BATCH_AXES["Y"], "engine_Y")
-                mask = pin(mask, self.BATCH_AXES["mask"], "engine_mask")
+                X, Y, mask = self._pin_batch(X, Y, mask, mesh)
                 # vmap thread path only: the fused Pallas kernel is a
                 # per-core datapath and does not partition under GSPMD
                 return self._epoch_impl(models, X, Y, mask, fused=False)
@@ -199,9 +249,7 @@ class Engine:
         X = place(X, self.BATCH_AXES["X"], "engine_X")
         Y = place(Y, self.BATCH_AXES["Y"], "engine_Y")
         mask = place(mask, self.BATCH_AXES["mask"], "engine_mask")
-        models = [
-            jax.device_put(m, dist_meshes.replicated(mesh)) for m in models
-        ]
+        models = self._replicated_models(models, mesh)
         return self._sharded_epoch_fn(mesh)(models, X, Y, mask)
 
     def run_epoch(self, models, X, Y, mask):
@@ -211,13 +259,63 @@ class Engine:
         data parallelism — a degenerate data axis would trade the fused
         Pallas kernel for per-chunk device_puts with nothing gained.
         ``run_epoch_sharded`` remains callable explicitly on any mesh."""
-        mesh = self.mesh if self.mesh is not None else dist_meshes.current_mesh()
-        if (
-            isinstance(mesh, jax.sharding.Mesh)
-            and dist_meshes.mesh_axis_size(mesh, "pod", "data") > 1
-        ):
+        mesh = self._active_data_mesh()
+        if mesh is not None:
             return self.run_epoch_sharded(models, X, Y, mask, mesh=mesh)
         return self._epoch(models, X, Y, mask)
+
+    # -- fused chunk executor (decode + reshape + epoch, one device program) ---
+    def _chunk_fn(self, layout, use_kernel: bool, mesh):
+        """Build (and cache) the jitted fused chunk program for one page
+        geometry. Re-traces only per distinct (layout, pages-shape, mesh)."""
+        key = (layout, use_kernel, mesh)
+        fn = self._chunk_fns.get(key)
+        if fn is not None:
+            return fn
+
+        from repro.kernels.strider import ops as strider_ops
+
+        def impl(models, pages):
+            feats, labels, mask = strider_ops.decode_pages_traced(
+                pages, layout, use_kernel
+            )
+            t = feats.shape[0] * feats.shape[1]
+            X, Y, M = batches_from_stream(
+                feats.reshape(t, layout.n_features),
+                labels.reshape(t),
+                mask.reshape(t),
+                self.merge_coef,
+            )
+            if mesh is not None:
+                X, Y, M = self._pin_batch(X, Y, M, mesh)
+                # vmap thread path: the fused Pallas GLM kernel is a per-core
+                # datapath and does not partition under GSPMD
+                return self._epoch_impl(models, X, Y, M, fused=False)
+            return self._epoch_impl(models, X, Y, M)
+
+        fn = self._chunk_fns[key] = jax.jit(impl)
+        return fn
+
+    def run_chunk(self, models, pages, layout, use_kernel: bool | None = None):
+        """Strider decode + batch reshape + epoch scan over one resident page
+        chunk as a SINGLE dispatched XLA program — the paper's pipelined
+        access-engine→execution-engine datapath. No intermediate host sync:
+        the returned (models, gnorms) are futures the caller may chain into
+        the next chunk, syncing once per epoch.
+
+        Under an active mesh with data parallelism the decoded batch is
+        sharded over the data axes inside the same program (parallel Striders
+        feeding one merge tree); otherwise the fused-Pallas/vmap single-core
+        path runs exactly as ``run_epoch`` would."""
+        from repro.kernels.strider import ops as strider_ops
+
+        mesh = self._active_data_mesh()
+        if use_kernel is None:
+            use_kernel = strider_ops.default_use_kernel()
+        fn = self._chunk_fn(layout, bool(use_kernel), mesh)
+        if mesh is not None:
+            models = self._replicated_models(models, mesh)
+        return fn(models, jnp.asarray(pages))
 
     def converged(self, models, merged) -> bool:
         return bool(self._conv(models, merged, self.metas))

@@ -16,7 +16,15 @@ from repro.data.synthetic import lm_token_batch
 
 
 class PageTokenDataset:
-    """Token sequences stored as DB pages; decoded on-device per batch."""
+    """Token sequences stored as DB pages; decoded on-device per batch.
+
+    The batch pipeline is double-buffered: ``batch(step)`` consumes the pages
+    the previous call prefetched on the pool's background thread and enqueues
+    the fetch for ``step+1``, so page I/O for the next batch overlaps the
+    caller's train step — the solver's pipelined executor applied to the LM
+    data path. Batches address *tuple* space (``step * batch_size`` onward,
+    modulo ``n_tuples``), so wraparound past the heap end and a partial last
+    page never surface dead slots as sequences."""
 
     def __init__(self, path: str, n_seqs: int, seq_len: int, vocab: int,
                  seed: int = 0, page_bytes: int = 32 * 1024):
@@ -32,24 +40,49 @@ class PageTokenDataset:
         self.seq_len = seq_len
         self.heap = write_table(path, feats, labels, page_bytes=page_bytes)
         self.pool = BufferPool(pool_bytes=64 * page_bytes, page_bytes=page_bytes)
+        self._pending = None  # (page-id key, PrefetchHandle) for the next step
+
+    def _batch_pages(self, step: int, batch_size: int):
+        """Deterministic (step -> pages) addressing: the tuple ids a batch
+        covers and the sorted unique pages that hold them."""
+        tpp = self.heap.layout.tuples_per_page
+        n = self.heap.n_tuples
+        start = (step * batch_size) % n
+        tuple_ids = (start + np.arange(batch_size)) % n
+        page_ids = np.unique(tuple_ids // tpp)
+        return page_ids, tuple_ids
 
     def batch(self, step: int, batch_size: int):
         """Decode a batch of sequences from pages on-device (strider path)."""
+        import jax
         import jax.numpy as jnp
 
         from repro.kernels.strider import ops as strider_ops
 
-        tpp = self.heap.layout.tuples_per_page
-        n_pages_needed = -(-batch_size // tpp)
-        start = (step * n_pages_needed) % max(self.heap.n_pages, 1)
-        ids = [(start + i) % self.heap.n_pages for i in range(n_pages_needed)]
-        pages = self.pool.fetch_batch(self.heap, np.asarray(ids))
-        feats, _, mask = strider_ops.decode_pages(jnp.asarray(pages),
-                                                  self.heap.layout)
-        import jax
+        page_ids, tuple_ids = self._batch_pages(step, batch_size)
+        key = tuple(page_ids.tolist())
+        pending, self._pending = self._pending, None
+        if pending is not None and pending[0] == key:
+            pages = pending[1].result()
+        else:
+            if pending is not None and not pending[1].cancel():
+                pending[1].result()  # non-sequential access: drain, refetch
+            pages = self.pool.fetch_batch(self.heap, page_ids)
+        nxt_pages, _ = self._batch_pages(step + 1, batch_size)
+        self._pending = (
+            tuple(nxt_pages.tolist()),
+            self.pool.prefetch_batch(self.heap, nxt_pages),
+        )
 
-        flat = feats.reshape(-1, self.heap.layout.n_features)[:batch_size]
-        words = jax.lax.bitcast_convert_type(flat, jnp.int32)
+        feats, _, _ = strider_ops.decode_pages(jnp.asarray(pages),
+                                               self.heap.layout)
+        tpp = self.heap.layout.tuples_per_page
+        flat = feats.reshape(-1, self.heap.layout.n_features)
+        # global tuple id -> row within the fetched (sorted) pages
+        pos = np.searchsorted(page_ids, tuple_ids // tpp) * tpp + tuple_ids % tpp
+        words = jax.lax.bitcast_convert_type(
+            jnp.take(flat, jnp.asarray(pos), axis=0), jnp.int32
+        )
         s = self.seq_len
         return {
             "tokens": words[:, :s],

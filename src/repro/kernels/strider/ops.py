@@ -33,22 +33,44 @@ def check_vmem(layout: PageLayout) -> None:
         )
 
 
-@partial(jax.jit, static_argnums=(1, 2))
-def _decode_jit(pages, layout: PageLayout, use_kernel: bool):
+def default_use_kernel() -> bool:
+    """Kernel-selection policy, single source of truth: the Pallas kernel on
+    TPU, the numerically identical (faster-to-trace) jnp path elsewhere."""
+    return jax.default_backend() == "tpu"
+
+
+def decode_pages_traced(
+    pages, layout: PageLayout, use_kernel: bool | None = None
+):
+    """Trace-time decode body: safe to call inside an enclosing ``jax.jit``.
+
+    This is what ``Engine.run_chunk`` composes with the batch reshape and the
+    epoch scan to form one fused device program — the decode never round-trips
+    through a separate dispatch. ``check_vmem`` runs at trace time (layout is
+    static), exactly as the hardware generator checks before synthesis.
+    """
+    check_vmem(layout)
+    if use_kernel is None:
+        use_kernel = default_use_kernel()
+    pages = jnp.asarray(pages).astype(jnp.uint32)
     if use_kernel:
         interpret = jax.default_backend() == "cpu"
         return strider_decode(pages, layout, interpret=interpret)
     return ref.decode_pages_ref(pages, layout)
 
 
+@partial(jax.jit, static_argnums=(1, 2))
+def _decode_jit(pages, layout: PageLayout, use_kernel: bool):
+    return decode_pages_traced(pages, layout, use_kernel)
+
+
 def decode_pages(pages: jnp.ndarray, layout: PageLayout, use_kernel: bool | None = None):
-    """Decode a batch of pages on-device.
+    """Decode a batch of pages on-device (standalone jitted dispatch).
 
     use_kernel=None picks the Pallas kernel on TPU and the (numerically
     identical, faster-to-trace) vectorized jnp path on CPU — both are the
     same algorithm; tests assert their equivalence on every shape swept.
     """
-    check_vmem(layout)
     if use_kernel is None:
-        use_kernel = jax.default_backend() == "tpu"
+        use_kernel = default_use_kernel()  # concrete for the jit cache key
     return _decode_jit(jnp.asarray(pages, dtype=jnp.uint32), layout, bool(use_kernel))
