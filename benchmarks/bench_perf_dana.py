@@ -23,8 +23,6 @@ from __future__ import annotations
 import os
 import time
 
-import numpy as np
-
 from benchmarks.workloads import BENCH_DIR, build_heap, traced
 from repro.core import solver
 from repro.core.engine import make_engine

@@ -1,0 +1,193 @@
+"""Sharded engine datapath: vmap-fallback (GSPMD) vs shard_map'ed fused
+kernel, data-only vs data×model mesh, on a wide-feature GLM.
+
+Rungs (same workload, same merge semantics):
+  single          no mesh — the fused per-core Pallas/oracle datapath
+  gspmd           data mesh, GSPMD vmap thread path (the pre-PR fallback the
+                  sharded epoch used for every mesh)
+  shard_map       data mesh, shard_map'ed per-core fused kernel + psum merge
+  shard_map_dm    data×model mesh, shard_model=True — coefficients feature-
+                  partitioned (row-parallel hypothesis psum)
+
+Run it with real (or forced-host) devices:
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+        PYTHONPATH=src python -m benchmarks.bench_shard [--quick] \
+        [--out BENCH_shard.json]
+
+or let the bench force host devices itself (must be the first jax init):
+
+    PYTHONPATH=src python -m benchmarks.bench_shard --devices 8 --quick
+
+`--quick` runs a smaller shape for the multi-device CI job, asserts the
+shard_map rungs actually took the shard_map path (not the fallback), and
+writes the JSON artifact.
+"""
+from __future__ import annotations
+
+import os
+import sys
+
+
+def _force_devices_from_argv() -> None:
+    """Honor --devices N before jax initializes (no-op if jax is already up,
+    e.g. when driven by benchmarks.run)."""
+    if "--devices" in sys.argv and "jax" not in sys.modules:
+        n = int(sys.argv[sys.argv.index("--devices") + 1])
+        os.environ.setdefault(
+            "XLA_FLAGS", f"--xla_force_host_platform_device_count={n}"
+        )
+
+
+_force_devices_from_argv()
+
+import argparse  # noqa: E402
+import json  # noqa: E402
+import time  # noqa: E402
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro.algorithms import logistic_regression  # noqa: E402
+from repro.core.engine import init_models, make_engine  # noqa: E402
+from repro.core.translator import trace  # noqa: E402
+from repro.dist import meshes  # noqa: E402
+
+# wide-feature GLM: the regime the model axis exists for
+FULL = dict(d=2048, n_tuples=16384, coef=256, reps=5)
+QUICK = dict(d=512, n_tuples=4096, coef=128, reps=2)
+
+
+def _problem(d: int, n_tuples: int, coef: int, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    X = rng.normal(0, 1, (n_tuples, d)).astype(np.float32)
+    y = (X @ rng.normal(0, 1, d) > 0).astype(np.float32)
+    g, part = trace(lambda: logistic_regression(d, lr=0.1, merge_coef=coef))
+    Xb = jnp.asarray(X).reshape(-1, coef, d)
+    Yb = jnp.asarray(y).reshape(-1, coef)
+    Mb = jnp.ones(Yb.shape, jnp.float32)
+    return g, part, Xb, Yb, Mb
+
+
+def _model_parallel(n_devices: int) -> int:
+    for mp in (4, 2):
+        if n_devices % mp == 0 and n_devices // mp >= 1:
+            return mp
+    return 1
+
+
+def _time_epoch(engine, models, Xb, Yb, Mb, mesh, reps: int) -> float:
+    def once():
+        if mesh is None:
+            out = engine.run_epoch(models, Xb, Yb, Mb)
+        else:
+            with meshes.use_mesh(mesh):
+                out = engine.run_epoch(models, Xb, Yb, Mb)
+        jax.block_until_ready(out)
+
+    once()  # compile (offline catalog-time cost in DAnA)
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        once()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def bench(shape: dict, quick: bool = False) -> dict:
+    n_dev = jax.device_count()
+    g, part, Xb, Yb, Mb = _problem(shape["d"], shape["n_tuples"], shape["coef"])
+    models = init_models(g)
+    reps = shape["reps"]
+
+    data_mesh = meshes.make_host_mesh()
+    mp = _model_parallel(n_dev)
+    dm_mesh = meshes.make_host_mesh(model_parallel=mp)
+
+    rungs_cfg = [
+        ("single", dict(), None),
+        ("gspmd", dict(shard_impl="gspmd"), data_mesh),
+        ("shard_map", dict(), data_mesh),
+        ("shard_map_dm", dict(shard_model=True), dm_mesh),
+    ]
+    out: dict = {
+        "devices": n_dev,
+        "mesh": dict(data_mesh.shape),
+        "mesh_dm": dict(dm_mesh.shape),
+        "d": shape["d"],
+        "n_tuples": shape["n_tuples"],
+        "merge_coef": shape["coef"],
+        "rungs": {},
+    }
+    for name, kw, mesh in rungs_cfg:
+        engine = make_engine(g, part, **kw)
+        epoch_s = _time_epoch(engine, models, Xb, Yb, Mb, mesh, reps)
+        out["rungs"][name] = {
+            "epoch_s": epoch_s,
+            "path": list(engine.last_sharded_path)
+            if engine.last_sharded_path
+            else None,
+        }
+    r = out["rungs"]
+    if r["shard_map"]["epoch_s"] > 0:
+        out["speedup_shard_map_vs_gspmd"] = (
+            r["gspmd"]["epoch_s"] / r["shard_map"]["epoch_s"]
+        )
+    if r["shard_map_dm"]["epoch_s"] > 0:
+        out["speedup_dm_vs_data_only"] = (
+            r["shard_map"]["epoch_s"] / r["shard_map_dm"]["epoch_s"]
+        )
+
+    if quick and n_dev > 1:
+        # the whole point of the rung: the sharded epoch must keep the fused
+        # per-core kernel under shard_map, not regress to the vmap fallback
+        assert r["shard_map"]["path"][0] == "shard_map", r["shard_map"]
+        assert r["gspmd"]["path"][0] == "gspmd", r["gspmd"]
+        if dict(dm_mesh.shape).get("model", 1) > 1:
+            assert r["shard_map_dm"]["path"][2] == "model", r["shard_map_dm"]
+    return out
+
+
+def run(csv_rows: list[str]) -> list[str]:
+    """benchmarks.run harness hook (single-process device count applies)."""
+    res = bench(QUICK, quick=False)
+    r = res["rungs"]
+    csv_rows.append(
+        f"shard/glm_d{res['d']},{r['shard_map']['epoch_s']*1e6:.0f},"
+        f"devices={res['devices']}"
+        f";gspmd_s={r['gspmd']['epoch_s']:.4f}"
+        f";shard_map_s={r['shard_map']['epoch_s']:.4f}"
+        f";dm_s={r['shard_map_dm']['epoch_s']:.4f}"
+        f";speedup_vs_gspmd={res.get('speedup_shard_map_vs_gspmd', 0):.2f}"
+    )
+    return csv_rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="small shape + path asserts (multi-device CI job)")
+    ap.add_argument("--devices", type=int, default=None,
+                    help="force this many host devices (must be first jax "
+                         "init; ignored when XLA_FLAGS is already set)")
+    ap.add_argument("--out", default=None, help="write JSON artifact here")
+    args = ap.parse_args()
+
+    res = bench(QUICK if args.quick else FULL, quick=args.quick)
+    res["quick"] = args.quick
+    for name, r in res["rungs"].items():
+        path = r["path"] or ["local"]
+        print(f"{name:>14}: {r['epoch_s']*1e3:8.2f} ms/epoch  path={path[0]}")
+    if "speedup_shard_map_vs_gspmd" in res:
+        print(f"shard_map vs gspmd fallback: "
+              f"{res['speedup_shard_map_vs_gspmd']:.2f}x on "
+              f"{res['devices']} devices")
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(res, f, indent=2)
+        print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -7,7 +7,7 @@ parallelism does not. Also measures the executable engine at a few thread
 counts to confirm the model's shape on real (scaled) data."""
 from __future__ import annotations
 
-from benchmarks.workloads import bench_workloads, build_heap, fpga_model, time_mode
+from benchmarks.workloads import fpga_model
 from repro.data.synthetic import WORKLOADS
 
 SWEEP = (1, 2, 4, 8, 16, 64, 256, 1024)

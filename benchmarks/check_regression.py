@@ -1,0 +1,114 @@
+"""Benchmark regression gate: fail CI when a fresh ``--quick`` benchmark
+JSON regresses >tol vs the checked-in baseline.
+
+    python -m benchmarks.check_regression BENCH_pipeline.json \
+        --baseline benchmarks/baselines/BENCH_pipeline.json [--tol 0.25]
+
+Default checks per baseline workload (pipeline format):
+  * ``speedup_x`` (pipelined vs synchronous, higher is better) may not drop
+    more than ``tol`` below baseline. It is a same-machine ratio, so it
+    transfers across runner generations — unlike wall seconds.
+  * the pipelined executor's one-sync-per-epoch invariant
+    (``device_syncs == epochs_run``) must hold exactly.
+  * with ``--abs-time``, ``pipelined.total_s`` (lower is better) may not
+    grow more than ``tol`` above baseline — opt-in because absolute seconds
+    only compare on identical hardware.
+
+Exit code 0 = within budget, 1 = regression (each violation printed),
+2 = malformed/missing inputs.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def _index(doc: dict) -> dict[str, dict]:
+    try:
+        return {r["workload"]: r for r in doc["results"]}
+    except (KeyError, TypeError) as e:
+        print(f"malformed benchmark JSON (no results/workload): {e}",
+              file=sys.stderr)
+        raise SystemExit(2)
+
+
+def _ratio_check(name, metric, cur, base, tol, higher_is_better, failures):
+    if base <= 0:
+        return
+    if higher_is_better:
+        floor = base * (1.0 - tol)
+        if cur < floor:
+            failures.append(
+                f"{name}: {metric} regressed {base:.3f} -> {cur:.3f} "
+                f"(floor {floor:.3f} at tol {tol:.0%})"
+            )
+    else:
+        ceil = base * (1.0 + tol)
+        if cur > ceil:
+            failures.append(
+                f"{name}: {metric} regressed {base:.3f} -> {cur:.3f} "
+                f"(ceiling {ceil:.3f} at tol {tol:.0%})"
+            )
+
+
+def check(current: dict, baseline: dict, tol: float, abs_time: bool) -> list[str]:
+    failures: list[str] = []
+    cur_by_name = _index(current)
+    for name, base in _index(baseline).items():
+        cur = cur_by_name.get(name)
+        if cur is None:
+            failures.append(f"{name}: missing from current benchmark run")
+            continue
+        _ratio_check(name, "speedup_x", float(cur.get("speedup_x", 0.0)),
+                     float(base.get("speedup_x", 0.0)), tol, True, failures)
+        pipe = cur.get("pipelined", {})
+        syncs, epochs = pipe.get("device_syncs"), pipe.get("epochs_run")
+        if syncs != epochs:
+            failures.append(
+                f"{name}: pipelined executor synced {syncs}x for {epochs} "
+                f"epochs (one-sync-per-epoch invariant broken)"
+            )
+        if abs_time:
+            _ratio_check(
+                name, "pipelined.total_s",
+                float(pipe.get("total_s", 0.0)),
+                float(base.get("pipelined", {}).get("total_s", 0.0)),
+                tol, False, failures,
+            )
+    return failures
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("current", help="fresh benchmark JSON (e.g. BENCH_pipeline.json)")
+    ap.add_argument("--baseline", required=True,
+                    help="checked-in baseline JSON to compare against")
+    ap.add_argument("--tol", type=float, default=0.25,
+                    help="allowed relative regression (default 0.25)")
+    ap.add_argument("--abs-time", action="store_true",
+                    help="also gate absolute pipelined total_s (same-hardware "
+                         "runs only)")
+    args = ap.parse_args()
+
+    try:
+        with open(args.current) as f:
+            current = json.load(f)
+        with open(args.baseline) as f:
+            baseline = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"cannot load benchmark JSON: {e}", file=sys.stderr)
+        raise SystemExit(2)
+
+    failures = check(current, baseline, args.tol, args.abs_time)
+    if failures:
+        print(f"benchmark regression gate FAILED ({len(failures)}):")
+        for f_ in failures:
+            print(f"  - {f_}")
+        raise SystemExit(1)
+    n = len(baseline.get("results", []))
+    print(f"benchmark regression gate passed ({n} workloads, tol {args.tol:.0%})")
+
+
+if __name__ == "__main__":
+    main()

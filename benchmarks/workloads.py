@@ -12,8 +12,6 @@ from __future__ import annotations
 import os
 import time
 
-import numpy as np
-
 from repro.algorithms import linear_regression, logistic_regression, lrmf, svm
 from repro.core import hwgen, solver
 from repro.core.engine import make_engine

@@ -16,7 +16,6 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 import tempfile
 
 import jax
-import numpy as np
 
 from repro.configs import get_reduced_config
 from repro.data.pipeline import synthetic_data_fn

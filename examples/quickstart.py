@@ -18,7 +18,6 @@ import numpy as np
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 from repro.algorithms import linear_regression
-from repro.core import hwgen
 from repro.db.catalog import Catalog
 from repro.db.heap import write_table
 from repro.db.query import register_udf_from_trace, run_query

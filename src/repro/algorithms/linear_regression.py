@@ -11,7 +11,9 @@ def linear_regression(
     conv_factor: float | None = None,
     epochs: int = 20,
 ):
-    mo = dana.model([n_features])
+    # the coefficient vector partitions over the mesh's model axis for wide
+    # feature spaces (engine/solver shard_model=True)
+    mo = dana.model([n_features], axes=("features",))
     inp = dana.input([n_features])
     out = dana.output()
     mu = dana.meta(lr)

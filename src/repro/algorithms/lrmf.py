@@ -22,7 +22,10 @@ def lrmf(
     conv_factor: float | None = None,
     epochs: int = 20,
 ):
-    M = dana.model([n_items, rank])
+    # the item dim is the factor matrix's "features" axis: wide catalogs
+    # partition it over the mesh's model axis (shard_model=True); the rank
+    # dim stays replicated
+    M = dana.model([n_items, rank], axes=("features", "rank"))
     row = dana.input([n_items, 1])  # ratings row as a column for broadcasting
     dummy = dana.output()
     mu = dana.meta(lr)

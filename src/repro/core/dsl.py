@@ -168,12 +168,19 @@ def _broadcast(a: tuple[int, ...], b: tuple[int, ...]) -> tuple[int, ...]:
 
 
 # -- data declarations ---------------------------------------------------------
-def _decl(kind: str, dims, name=None, value=None) -> Var:
+def _decl(kind: str, dims, name=None, value=None, axes=None) -> Var:
     b = _builder()
     shape = tuple(int(d) for d in (dims or ()))
     attrs = {}
     if value is not None:
         attrs["value"] = value
+    if axes is not None:
+        axes = tuple(axes)
+        if len(axes) != len(shape):
+            raise ValueError(
+                f"logical axes {axes} do not match declared shape {shape}"
+            )
+        attrs["logical_axes"] = axes
     v = b.add("leaf", [], shape, kind=kind, attrs=attrs, name=name)
     getattr(b, f"{kind}_ids").append(v.nid)
     if kind == "meta":
@@ -181,8 +188,16 @@ def _decl(kind: str, dims, name=None, value=None) -> Var:
     return v
 
 
-def model(dims: Sequence[int] | None = None, name: str | None = None) -> Var:
-    return _decl("model", dims, name)
+def model(
+    dims: Sequence[int] | None = None,
+    name: str | None = None,
+    axes: Sequence[str | None] | None = None,
+) -> Var:
+    """``axes`` declares the parameter's *logical* sharding axes (one name or
+    None per dim, e.g. ``("features",)``), resolved by ``repro.dist.meshes``
+    when the engine runs with ``shard_model=True``. Undeclared models stay
+    replicated."""
+    return _decl("model", dims, name, axes=axes)
 
 
 def input(dims: Sequence[int] | None = None, name: str | None = None) -> Var:  # noqa: A001

@@ -14,9 +14,6 @@ jit / shard_map.
 """
 from __future__ import annotations
 
-import math
-from functools import partial
-
 import jax
 import jax.numpy as jnp
 
@@ -56,7 +53,12 @@ def _outer_broadcast(a, b, out_shape):
     if a.shape == b.shape:
         return a, b
     if a.ndim != b.ndim:
-        return jnp.broadcast_to(a, out_shape), jnp.broadcast_to(b, out_shape)
+        # right-aligned replication of the lower-rank operand: numpy
+        # broadcasting computes the same shape as the DSL's static inference,
+        # but from the *operands* — keeping post_fn shape-polymorphic so the
+        # engine's shard_map datapath can apply it to a local model shard
+        tgt = jnp.broadcast_shapes(a.shape, b.shape)
+        return jnp.broadcast_to(a, tgt), jnp.broadcast_to(b, tgt)
     # equal rank, outer replication: a -> prefix_a x 1s x suffix, b -> 1s x prefix_b x suffix
     k = 0
     while k < a.ndim and a.shape[a.ndim - 1 - k] == b.shape[b.ndim - 1 - k]:

@@ -11,7 +11,7 @@ from __future__ import annotations
 import numpy as np
 
 from repro.db.bufferpool import BufferPool
-from repro.db.heap import HeapFile, write_table
+from repro.db.heap import write_table
 from repro.data.synthetic import lm_token_batch
 
 

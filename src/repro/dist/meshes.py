@@ -117,6 +117,27 @@ def make_mesh(axis_shapes, axis_names, *, devices=None):
     )
 
 
+def shard_map(f, mesh, in_specs, out_specs, check_rep: bool = False):
+    """Version-agnostic ``shard_map``: ``jax.shard_map`` on releases that
+    have it (the experimental alias was removed after its promotion),
+    ``jax.experimental.shard_map`` on the supported floor. Newer jax renamed
+    ``check_rep`` to ``check_vma``; both spellings are forwarded to whichever
+    the installed version takes."""
+    fn = getattr(jax, "shard_map", None)
+    if fn is None:  # pragma: no cover - exercised on the 0.4.x floor
+        from jax.experimental.shard_map import shard_map as fn
+
+    import inspect
+
+    params = inspect.signature(fn).parameters
+    kw = {}
+    if "check_rep" in params:
+        kw["check_rep"] = check_rep
+    elif "check_vma" in params:
+        kw["check_vma"] = check_rep
+    return fn(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kw)
+
+
 # ---------------------------------------------------------------------------
 # Mesh constructors (absorbed from repro.launch.mesh)
 # ---------------------------------------------------------------------------
@@ -147,6 +168,9 @@ DEFAULT_RULES: dict[str, str | tuple[str, ...] | None] = {
     # engine thread dim: the strider-decoded tuple stream (paper's parallel
     # Striders feeding the multi-threaded execution engine)
     "tuples": ("pod", "data"),
+    # heap pages streamed into the access engine: decode is page-parallel
+    # (each device's Strider decodes its local page range)
+    "heap_pages": ("pod", "data"),
     # ZeRO-partitioned optimizer-state dim (train.optimizer.state_specs)
     "zero": ("pod", "data"),
     # tensor parallelism (Megatron TP pattern)
@@ -162,6 +186,16 @@ DEFAULT_RULES: dict[str, str | tuple[str, ...] | None] = {
 # (gathered on use), on top of the standard TP rules.
 FSDP_PARAM_RULES: dict[str, str | tuple[str, ...] | None] = dict(
     DEFAULT_RULES, embed=("pod", "data")
+)
+
+# Engine model-axis sharding (wide GLMs / LRMF): the feature dim of GLM
+# coefficient vectors — and of the decoded tuple stream feeding them — is
+# partitioned over the mesh's model axis; LRMF factor matrices reuse the
+# same "features" name for their item dim (rank stays replicated). Opt-in
+# via Engine/solver.train(shard_model=True); DEFAULT_RULES keeps "features"
+# unsharded so data-only meshes never pay feature collectives.
+MODEL_SHARD_RULES: dict[str, str | tuple[str, ...] | None] = dict(
+    DEFAULT_RULES, features="model", rank=None
 )
 
 
@@ -200,6 +234,13 @@ def _record_fallback(tensor_name, logical_axis, dim, why):
     log = _fallback_log()
     if entry not in log:
         log.append(entry)
+
+
+def record_fallback(tensor_name, logical_axis, dim, why) -> None:
+    """Public entry for callers that make their own sharding decisions (the
+    engine's shard_map path) so their divisibility drops land in the same
+    ``fallbacks()`` report as the resolver's."""
+    _record_fallback(tensor_name, logical_axis, dim, why)
 
 
 @contextlib.contextmanager
@@ -352,6 +393,13 @@ def mesh_axis_size(mesh, *axis_names) -> int:
     return math.prod(sizes.get(a, 1) for a in axis_names)
 
 
+def mesh_data_axes(mesh) -> tuple[str, ...]:
+    """The mesh's non-degenerate data-parallel axes, in rule order — the axes
+    the engine's shard_map datapath maps the tuple stream over."""
+    sizes = _axis_sizes(mesh)
+    return tuple(a for a in ("pod", "data") if sizes.get(a, 1) > 1)
+
+
 # the compat-shimmed name (a subclass of the real class on old jax), so
 # meshes.AbstractMesh(sizes, names) works on every supported version
 AbstractMesh = jax.sharding.AbstractMesh
@@ -360,6 +408,7 @@ __all__ = [
     "AbstractMesh",
     "DEFAULT_RULES",
     "FSDP_PARAM_RULES",
+    "MODEL_SHARD_RULES",
     "Mesh",
     "clear_fallbacks",
     "current_mesh",
@@ -368,10 +417,13 @@ __all__ = [
     "make_mesh",
     "make_production_mesh",
     "mesh_axis_size",
+    "mesh_data_axes",
     "named_sharding",
+    "record_fallback",
     "replicated",
     "resolve_spec",
     "shard_act",
+    "shard_map",
     "tree_shardings",
     "use_mesh",
 ]

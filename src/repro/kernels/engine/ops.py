@@ -51,3 +51,35 @@ def glm_grad(x, y, w, mask=None, act: str = "linear", use_kernel: bool | None = 
     if use_kernel is None:
         use_kernel = jax.default_backend() == "tpu"
     return _glm_grad(x, y, w, mask, act, bool(use_kernel), int(block_rows))
+
+
+def glm_grad_sharded(x, y, w, mask=None, act: str = "linear", *,
+                     data_axes: tuple[str, ...] = (),
+                     model_axis: str | None = None,
+                     use_kernel: bool | None = None, block_rows: int = 128):
+    """Cross-device merged GLM gradient — call inside ``jax.shard_map``.
+
+    Without a model axis each device runs the per-core fused datapath
+    (``glm_grad``, i.e. the Pallas kernel on TPU) on its local tuple shard
+    and the tree-bus merge becomes a ``psum`` over the data axes. With a
+    model axis the coefficient vector is feature-partitioned: the hypothesis
+    ``z = X·w`` is assembled by a feature-dim ``psum`` (row-parallel linear),
+    the error is computed redundantly per feature shard, and the returned
+    gradient shard stays local to the feature partition — only the data-axis
+    merge crosses devices.
+    """
+    if mask is None:
+        mask = jnp.ones(x.shape[0], dtype=jnp.float32)
+    if model_axis is None:
+        g = glm_grad(x, y, w, mask, act=act, use_kernel=use_kernel,
+                     block_rows=block_rows)
+    else:
+        # the fused kernel keeps z internal; the feature-dim psum must run
+        # between the two matmuls, so the model-sharded path is two MXU dots
+        xf = x.astype(jnp.float32)
+        z = jax.lax.psum(xf @ w.astype(jnp.float32), model_axis)
+        e = ref.glm_error(z, y.astype(jnp.float32), act) * mask.astype(jnp.float32)
+        g = e @ xf
+    if data_axes:
+        g = jax.lax.psum(g, tuple(data_axes))
+    return g

@@ -13,10 +13,21 @@ import jax
 import jax.numpy as jnp
 
 from repro.db.page import PageLayout
+from repro.dist import meshes as dist_meshes
 from repro.kernels.strider import ref
 from repro.kernels.strider.strider import strider_decode
 
 VMEM_BYTES = 16 * 1024 * 1024  # v5e per-core VMEM
+
+# logical axes of the raw page stream and its decoded tensors: pages spread
+# over the mesh's data axes (each device's Strider decodes a local page
+# range); tuple-in-page and feature dims resolve per the active rule table
+PAGE_AXES = ("heap_pages", None)
+DECODED_AXES = {
+    "feats": ("heap_pages", None, "features"),
+    "labels": ("heap_pages", None),
+    "mask": ("heap_pages", None),
+}
 
 
 def vmem_working_set(layout: PageLayout) -> int:
@@ -40,7 +51,8 @@ def default_use_kernel() -> bool:
 
 
 def decode_pages_traced(
-    pages, layout: PageLayout, use_kernel: bool | None = None
+    pages, layout: PageLayout, use_kernel: bool | None = None,
+    rules: dict | None = None,
 ):
     """Trace-time decode body: safe to call inside an enclosing ``jax.jit``.
 
@@ -48,15 +60,34 @@ def decode_pages_traced(
     epoch scan to form one fused device program — the decode never round-trips
     through a separate dispatch. ``check_vmem`` runs at trace time (layout is
     static), exactly as the hardware generator checks before synthesis.
+
+    Under an active ``meshes.use_mesh`` the page stream and its decoded
+    tensors are constrained over the mesh's data axes (``PAGE_AXES`` /
+    ``DECODED_AXES``), so GSPMD partitions the decode page-parallel — each
+    device's Strider walks its own page range. ``rules`` selects the rule
+    table (the engine passes ``MODEL_SHARD_RULES`` when the feature dim is
+    model-sharded); identity outside a mesh context.
     """
     check_vmem(layout)
     if use_kernel is None:
         use_kernel = default_use_kernel()
     pages = jnp.asarray(pages).astype(jnp.uint32)
+    pages = dist_meshes.shard_act(pages, PAGE_AXES, "strider_pages", rules=rules)
     if use_kernel:
         interpret = jax.default_backend() == "cpu"
-        return strider_decode(pages, layout, interpret=interpret)
-    return ref.decode_pages_ref(pages, layout)
+        feats, labels, mask = strider_decode(pages, layout, interpret=interpret)
+    else:
+        feats, labels, mask = ref.decode_pages_ref(pages, layout)
+    feats = dist_meshes.shard_act(
+        feats, DECODED_AXES["feats"], "strider_feats", rules=rules
+    )
+    labels = dist_meshes.shard_act(
+        labels, DECODED_AXES["labels"], "strider_labels", rules=rules
+    )
+    mask = dist_meshes.shard_act(
+        mask, DECODED_AXES["mask"], "strider_mask", rules=rules
+    )
+    return feats, labels, mask
 
 
 @partial(jax.jit, static_argnums=(1, 2))

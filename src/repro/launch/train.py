@@ -13,7 +13,6 @@ from __future__ import annotations
 import argparse
 
 import jax
-import numpy as np
 
 from repro.configs import ARCH_IDS, get_config, get_reduced_config
 from repro.data.pipeline import PageTokenDataset, synthetic_data_fn

@@ -19,7 +19,7 @@ import jax.numpy as jnp
 
 from repro.models import encdec, transformer
 from repro.models.config import ModelConfig
-from repro.models.layers import apply_norm, embed, softmax_xent, unembed
+from repro.models.layers import apply_norm, embed, unembed
 from repro.dist.meshes import shard_act
 
 

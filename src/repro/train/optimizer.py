@@ -9,7 +9,6 @@ bf16 halves optimizer HBM for the 671B dry-run).
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 
 import jax
 import jax.numpy as jnp

@@ -123,6 +123,26 @@ def test_exactly_one_device_sync_per_epoch(linreg_heap, monkeypatch):
     assert sync.device_syncs == 2 * n_chunks * sync.epochs_run
 
 
+def test_no_trailing_prefetch_on_final_epoch_with_terminator(
+    linreg_heap, monkeypatch
+):
+    """A convergence terminator must not buy a dead chunk-0 prefetch on the
+    last possible epoch: the per-epoch check reuses its cached batch, so the
+    fetch count stays exactly epochs x pages (+ the one cached conv chunk)."""
+    heap, _ = linreg_heap
+    monkeypatch.setattr(solver, "MAX_RESIDENT_PAGES", 8)
+    g, part = trace(
+        lambda: linear_regression(16, lr=0.01, merge_coef=64, conv_factor=1e-9,
+                                  epochs=3)
+    )
+    pool = BufferPool(pool_bytes=heap.n_pages * heap.layout.page_bytes,
+                      page_bytes=heap.layout.page_bytes)
+    res = solver.train(g, part, heap, pool=pool, mode="dana", pipelined=True)
+    assert not res.converged and res.epochs_run == 3
+    conv_pages = min(heap.n_pages, 4)  # the cached convergence batch, once
+    assert pool.hits + pool.misses == res.epochs_run * heap.n_pages + conv_pages
+
+
 # ------------------------- BufferPool.prefetch_batch -------------------------
 def test_prefetch_batch_hit_miss_eviction_accounting(linreg_heap):
     heap, _ = linreg_heap

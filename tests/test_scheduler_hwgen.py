@@ -1,6 +1,4 @@
 """AC/AU scheduler + hardware generator: cycle model sanity and DSE behavior."""
-import numpy as np
-
 from repro.algorithms import linear_regression, lrmf
 from repro.core import hwgen
 from repro.core.scheduler import AUS_PER_AC, merge_tree_cycles, schedule

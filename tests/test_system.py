@@ -4,7 +4,7 @@ across execution modes, plus solver bookkeeping."""
 import numpy as np
 import pytest
 
-from repro.algorithms import linear_regression, logistic_regression, svm
+from repro.algorithms import linear_regression
 from repro.core import solver
 from repro.core.translator import trace
 from repro.db.bufferpool import BufferPool
