@@ -4,15 +4,24 @@ JSON regresses >tol vs the checked-in baseline.
     python -m benchmarks.check_regression BENCH_pipeline.json \
         --baseline benchmarks/baselines/BENCH_pipeline.json [--tol 0.25]
 
-Default checks per baseline workload (pipeline format):
-  * ``speedup_x`` (pipelined vs synchronous, higher is better) may not drop
-    more than ``tol`` below baseline. It is a same-machine ratio, so it
-    transfers across runner generations — unlike wall seconds.
+Also gates serving benchmarks:
+
+    python -m benchmarks.check_regression BENCH_serve.json \
+        --baseline benchmarks/baselines/BENCH_serve.json [--tol 0.25]
+
+Default checks per baseline workload:
+  * ``speedup_x`` (higher is better) may not drop more than ``tol`` below
+    baseline — pipelined-vs-synchronous for the pipeline bench, continuous-
+    batching-vs-drain tok/s for the serving bench. It is a same-machine
+    ratio, so it transfers across runner generations — unlike wall seconds.
   * the pipelined executor's one-sync-per-epoch invariant
-    (``device_syncs == epochs_run``) must hold exactly.
-  * with ``--abs-time``, ``pipelined.total_s`` (lower is better) may not
-    grow more than ``tol`` above baseline — opt-in because absolute seconds
-    only compare on identical hardware.
+    (``device_syncs == epochs_run``) must hold exactly (pipeline format).
+  * serving format: ``serving.occupancy_pct`` (machine-independent) may not
+    drop below the baseline's ``serving.occupancy_floor_pct`` — continuous
+    batching must keep the decode batch saturated.
+  * with ``--abs-time``, ``pipelined.total_s`` (lower is better) /
+    ``serving.tok_s`` (higher is better) are also gated — opt-in because
+    absolute wall numbers only compare on identical hardware.
 
 Exit code 0 = within budget, 1 = regression (each violation printed),
 2 = malformed/missing inputs.
@@ -69,6 +78,22 @@ def check(current: dict, baseline: dict, tol: float, abs_time: bool) -> list[str
                 f"{name}: pipelined executor synced {syncs}x for {epochs} "
                 f"epochs (one-sync-per-epoch invariant broken)"
             )
+        base_serv = base.get("serving") or {}
+        if base_serv:
+            cur_serv = cur.get("serving") or {}
+            floor = base_serv.get("occupancy_floor_pct")
+            if floor is not None:
+                occ = float(cur_serv.get("occupancy_pct", 0.0))
+                if occ < float(floor):
+                    failures.append(
+                        f"{name}: serving occupancy {occ:.1f}% below the "
+                        f"{float(floor):.1f}% saturation floor"
+                    )
+            if abs_time:
+                _ratio_check(
+                    name, "serving.tok_s", float(cur_serv.get("tok_s", 0.0)),
+                    float(base_serv.get("tok_s", 0.0)), tol, True, failures,
+                )
         if abs_time:
             _ratio_check(
                 name, "pipelined.total_s",

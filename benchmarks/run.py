@@ -23,6 +23,7 @@ SUITES = [
     ("fig16_tabla", "benchmarks.bench_tabla"),
     ("perf_dana", "benchmarks.bench_perf_dana"),
     ("pipeline", "benchmarks.bench_pipeline"),
+    ("serve", "benchmarks.bench_serve"),
     ("shard", "benchmarks.bench_shard"),
     ("kernels", "benchmarks.bench_kernels"),
     ("roofline", "benchmarks.bench_roofline"),

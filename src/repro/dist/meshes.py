@@ -198,6 +198,20 @@ MODEL_SHARD_RULES: dict[str, str | tuple[str, ...] | None] = dict(
     DEFAULT_RULES, features="model", rank=None
 )
 
+# Serving KV/state caches (serve.BatchedServer(mesh=...)): slots — the cache
+# batch dim — spread over the data axes, heads/features over the model axis.
+# The sequence dim stays device-local on purpose: continuous batching writes
+# every slot's row at its own position each step (a per-row scatter), so
+# sharding kv_seq would turn each decode write into a cross-shard update;
+# the flash-decode partial-softmax combine the attention module documents
+# comes from the head/model partition instead. Explicit Nones document the
+# dims that must remain replicated.
+SERVE_CACHE_RULES: dict[str, str | tuple[str, ...] | None] = dict(
+    DEFAULT_RULES,
+    layers=None, kv_seq=None, seq=None, head_dim=None, lora=None,
+    state=None, conv=None, embed=None,
+)
+
 
 # ---------------------------------------------------------------------------
 # Current-mesh context + fallback bookkeeping (thread-local: shard_act runs
@@ -409,6 +423,7 @@ __all__ = [
     "DEFAULT_RULES",
     "FSDP_PARAM_RULES",
     "MODEL_SHARD_RULES",
+    "SERVE_CACHE_RULES",
     "Mesh",
     "clear_fallbacks",
     "current_mesh",

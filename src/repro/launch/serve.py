@@ -1,17 +1,22 @@
-"""Serving launcher: batched greedy/temperature decoding with KV caches.
+"""Serving launcher: continuous-batching decode with per-slot KV state.
 
     PYTHONPATH=src python -m repro.launch.serve --arch hymba-1.5b --reduced \\
         --batch 4 --prompt-len 16 --max-new 32
+
+Submit more requests than slots (``--requests``) to exercise mid-run
+admission; ``--mesh host`` serves with the KV caches sharded over whatever
+devices exist (``--model-parallel`` splits heads over the model axis).
+Prints the ``serve.metrics`` rollup (occupancy %, tok/s, TTFT).
 """
 from __future__ import annotations
 
 import argparse
-import time
 
 import jax
 import numpy as np
 
 from repro.configs import ARCH_IDS, get_config, get_reduced_config
+from repro.dist import meshes
 from repro.models import model_zoo
 from repro.serve.serving import BatchedServer, Request
 
@@ -20,33 +25,54 @@ def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", choices=list(ARCH_IDS), required=True)
     ap.add_argument("--reduced", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--batch", type=int, default=4, help="decode batch slots")
+    ap.add_argument("--requests", type=int, default=None,
+                    help="total requests to stream (default: one per slot)")
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--max-new", type=int, default=32)
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--mesh", choices=["none", "host"], default="none",
+                    help="host: shard caches over all local devices")
+    ap.add_argument("--model-parallel", type=int, default=1,
+                    help="model-axis size of the host mesh")
+    ap.add_argument("--admission", choices=["continuous", "drain"],
+                    default="continuous",
+                    help="drain = static-batch ablation (refill only when "
+                         "the whole batch finished)")
+    ap.add_argument("--max-steps", type=int, default=None)
     args = ap.parse_args(argv)
 
     cfg = get_reduced_config(args.arch) if args.reduced else get_config(args.arch)
     if cfg.family == "encdec":
         raise SystemExit("use examples/seamless decoding path for enc-dec")
-    params, _ = model_zoo.init_params(cfg, jax.random.PRNGKey(args.seed))
+    params, specs = model_zoo.init_params(cfg, jax.random.PRNGKey(args.seed))
+
+    mesh = None
+    if args.mesh == "host":
+        mesh = meshes.make_host_mesh(model_parallel=args.model_parallel)
 
     rng = np.random.default_rng(args.seed)
     max_seq = args.prompt_len + args.max_new + 1
     server = BatchedServer(cfg, params, batch_slots=args.batch, max_seq=max_seq,
-                           temperature=args.temperature, seed=args.seed)
-    for i in range(args.batch):
+                           temperature=args.temperature, seed=args.seed,
+                           mesh=mesh, param_specs=specs if mesh else None,
+                           admission=args.admission)
+    n_requests = args.requests if args.requests is not None else args.batch
+    for i in range(n_requests):
         prompt = rng.integers(1, cfg.vocab_size, args.prompt_len).tolist()
         server.submit(Request(rid=i, prompt=prompt, max_new_tokens=args.max_new))
 
-    t0 = time.perf_counter()
-    done = server.run()
-    dt = time.perf_counter() - t0
-    total_new = sum(len(r.out) for r in done)
-    print(f"[serve] {cfg.name}: {len(done)} requests, {total_new} tokens in "
-          f"{dt:.2f}s ({total_new/dt:.1f} tok/s batched)")
-    for r in sorted(done, key=lambda r: r.rid)[:4]:
+    done = server.run(max_steps=args.max_steps)
+    m = server.metrics
+    mesh_desc = f" mesh={dict(mesh.shape)} path={server.last_sharded_path}" \
+        if mesh is not None else ""
+    print(f"[serve] {cfg.name}: {m.finished}/{n_requests} requests, "
+          f"{m.tokens_generated} tokens in {m.wall_s:.2f}s "
+          f"({m.tok_per_s:.1f} tok/s, occupancy {m.occupancy_pct:.0f}%, "
+          f"mean TTFT {m.mean_ttft_s*1e3:.0f}ms/"
+          f"{m.mean_ttft_steps:.0f} steps){mesh_desc}")
+    for r in done[:4]:
         print(f"  req {r.rid}: {r.out[:12]}{'...' if len(r.out) > 12 else ''}")
     return done
 

@@ -11,6 +11,11 @@ multi-GB cache.
 MLA serving uses the absorbed-latent form (queries projected into the KV
 latent space), so the cache is only (kv_lora + rope) wide per token — the
 deployment trick that makes 32k-cache decode cheap for minicpm3/deepseek-v3.
+
+Decode positions are per-row: every decode entry point accepts ``pos`` as a
+scalar (single stream) or a (B,) vector (continuous batching — each cache
+row advances at its own position, with per-row validity masks so a freed
+slot restarted at pos 0 never sees the previous occupant's stale entries).
 """
 from __future__ import annotations
 
@@ -139,33 +144,47 @@ def gqa_train(p, x, cfg: ModelConfig, positions, kind="causal", window=0):
     return gqa_attend(p, q, k, v, cfg, kind, window)
 
 
+def _batch_pos(pos, b: int):
+    """Normalize a decode position to per-row form: scalar (whole batch at one
+    position, the classic single-stream case) or (B,) vector (continuous
+    batching — every slot at its own position)."""
+    pos = jnp.asarray(pos, jnp.int32)
+    return jnp.full((b,), pos) if pos.ndim == 0 else pos
+
+
 def gqa_decode(p, x, cache, pos, cfg: ModelConfig, window=0):
     """x (B,1,d); cache {k,v}: (B,S,KVH,D) (full) or (B,W,KVH,D) (SWA ring).
-    Returns (out (B,1,d), new_cache). ``pos`` is the current position."""
+    Returns (out (B,1,d), new_cache). ``pos`` is the current position — a
+    scalar, or a (B,) vector of per-slot positions (continuous batching)."""
     b = x.shape[0]
     dt = x.dtype
+    pos_b = _batch_pos(pos, b)
     q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(dt))
     k = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(dt))
     v = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(dt))
-    cos, sin = rope_tables(jnp.full((b, 1), pos), cfg.hd, cfg.rope_theta)
+    cos, sin = rope_tables(pos_b[:, None], cfg.hd, cfg.rope_theta)
     cos, sin = cos[:, :, None, :], sin[:, :, None, :]
     q, k = apply_rope(q, cos, sin), apply_rope(k, cos, sin)
 
     s = cache["k"].shape[1]
-    slot = pos % s if window else jnp.minimum(pos, s - 1)
-    ck = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype),
-                                      (0, slot, 0, 0))
-    cv = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype),
-                                      (0, slot, 0, 0))
+    slot = pos_b % s if window else jnp.minimum(pos_b, s - 1)
+    rows = jnp.arange(b)
+    ck = cache["k"].at[rows, slot].set(k[:, 0].astype(cache["k"].dtype))
+    cv = cache["v"].at[rows, slot].set(v[:, 0].astype(cache["v"].dtype))
     ck = shard_act(ck, ("batch", "kv_seq", "kv_heads", "head_dim"), "ck")
     cv = shard_act(cv, ("batch", "kv_seq", "kv_heads", "head_dim"), "cv")
 
     kvh, hd = cfg.n_kv_heads, cfg.hd
     g = cfg.n_heads // kvh
-    # validity: ring buffers are fully valid once warm; full caches valid <= pos
-    kpos = jnp.arange(s)
-    valid = (kpos <= pos) if not window else (kpos >= 0)
-    mask = jnp.where(valid, 0.0, NEG).astype(jnp.float32)[None, None, None, None, :]
+    # validity (per row): full caches are valid <= pos; ring buffers are fully
+    # valid once warm (pos >= ring size) and valid <= pos while still cold —
+    # which is also what logically invalidates a freed slot's stale entries
+    # when a new request restarts the slot at pos 0
+    kpos = jnp.arange(s)[None, :]
+    valid = kpos <= pos_b[:, None]
+    if window:
+        valid |= pos_b[:, None] >= s
+    mask = jnp.where(valid, 0.0, NEG).astype(jnp.float32)[:, None, None, None, :]
     out = _sdpa(q.reshape(b, 1, kvh, g, hd), ck, cv, mask, 1.0 / math.sqrt(hd))
     out = out.reshape(b, 1, cfg.n_heads, hd).astype(dt)
     out = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(dt))
@@ -263,16 +282,19 @@ def mla_train(p, x, cfg: ModelConfig, positions, kind="causal", window=0):
 
 
 def mla_decode(p, x, cache, pos, cfg: ModelConfig):
-    """Absorbed-latent decode: cache {c (B,S,kv_lora), kr (B,S,rope)}."""
+    """Absorbed-latent decode: cache {c (B,S,kv_lora), kr (B,S,rope)}.
+    ``pos`` is a scalar or a (B,) vector of per-slot positions."""
     dt = x.dtype
     b = x.shape[0]
-    qn, qr = _mla_q(p, x, cfg, jnp.full((b, 1), pos))
-    c_t, kr_t = _mla_latent(p, x, cfg, jnp.full((b, 1), pos))
+    pos_b = _batch_pos(pos, b)
+    qn, qr = _mla_q(p, x, cfg, pos_b[:, None])
+    c_t, kr_t = _mla_latent(p, x, cfg, pos_b[:, None])
 
-    c = jax.lax.dynamic_update_slice(cache["c"], c_t.astype(cache["c"].dtype),
-                                     (0, pos, 0))
-    kr = jax.lax.dynamic_update_slice(cache["kr"], kr_t.astype(cache["kr"].dtype),
-                                      (0, pos, 0))
+    s = cache["c"].shape[1]
+    slot = jnp.minimum(pos_b, s - 1)
+    rows = jnp.arange(b)
+    c = cache["c"].at[rows, slot].set(c_t[:, 0].astype(cache["c"].dtype))
+    kr = cache["kr"].at[rows, slot].set(kr_t[:, 0].astype(cache["kr"].dtype))
     c = shard_act(c, ("batch", "kv_seq", "lora"), "mla_c")
     kr = shard_act(kr, ("batch", "kv_seq", "head_dim"), "mla_kr")
 
@@ -282,9 +304,8 @@ def mla_decode(p, x, cache, pos, cfg: ModelConfig):
     scores = jnp.einsum("bthr,bsr->bhs", q_lat, c.astype(dt))
     scores = scores + jnp.einsum("bthk,bsk->bhs", qr, kr.astype(dt))
     scale = 1.0 / math.sqrt(cfg.qk_nope_head_dim + cfg.qk_rope_head_dim)
-    s = c.shape[1]
-    valid = jnp.arange(s) <= pos
-    scores = scores.astype(jnp.float32) * scale + jnp.where(valid, 0.0, NEG)[None, None]
+    valid = jnp.arange(s)[None, :] <= pos_b[:, None]
+    scores = scores.astype(jnp.float32) * scale + jnp.where(valid, 0.0, NEG)[:, None]
     probs = jax.nn.softmax(scores, axis=-1)
     out_lat = jnp.einsum("bhs,bsr->bhr", probs, c.astype(jnp.float32)).astype(dt)
     out = jnp.einsum("bhr,rhv->bhv", out_lat, w_uv)

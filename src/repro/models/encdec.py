@@ -157,7 +157,8 @@ def precompute_cross_kv(params, enc_out, cfg: ModelConfig):
 
 def encdec_decode_step(params, tokens, cache, pos, cfg: ModelConfig,
                        unroll: bool = False):
-    """One decoder step against cached self-KV and precomputed cross-KV."""
+    """One decoder step against cached self-KV and precomputed cross-KV.
+    ``pos`` may be a scalar or a (B,) per-slot position vector."""
     x = embed(params["embed"], tokens[:, None], cfg)
 
     def body(carry, layer):

@@ -4,6 +4,7 @@
   loss_fn(cfg, remat)                  -> f(params, batch) -> scalar loss
   prefill_fn(cfg)                      -> f(params, batch) -> last-pos logits
   decode_fn(cfg)                       -> f(params, tokens, cache, pos)
+                                          (pos: scalar or (B,) per-slot vector)
   make_cache(cfg, batch, seq, ...)     -> decode cache (+ logical specs)
   input_specs(cfg, shape)              -> ShapeDtypeStruct batch for dry-runs
 
@@ -105,6 +106,9 @@ def prefill_fn(cfg: ModelConfig, remat: str = "none", unroll: bool = False):
 
 
 def decode_fn(cfg: ModelConfig, unroll: bool = False):
+    """One decode step: f(params, tokens (B,), cache, pos) -> (logits, cache).
+    ``pos`` is a scalar position, or a (B,) vector when every cache row
+    decodes at its own position (the serving engine's continuous batching)."""
     if cfg.family == "encdec":
         return partial(encdec.encdec_decode_step, cfg=cfg, unroll=unroll)
     return partial(transformer.lm_decode_step, cfg=cfg, unroll=unroll)

@@ -332,7 +332,10 @@ def _layer_decode(p, x, cache, pos, cfg: ModelConfig, kind: str):
 
 def lm_decode_step(params, tokens, caches, pos, cfg: ModelConfig,
                    unroll: bool = False):
-    """tokens (B,) int32; caches from init_cache; pos: current position.
+    """tokens (B,) int32; caches from init_cache; pos: current position —
+    a scalar, or a (B,) vector of per-slot positions (continuous batching;
+    recurrent rwkv/mamba caches are position-free, attention caches take the
+    per-row write/validity path in models/attention.py).
     Returns (logits (B, padded_vocab), new_caches)."""
     x = embed(params["embed"], tokens[:, None], cfg)
     new_caches = []

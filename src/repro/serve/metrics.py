@@ -1,0 +1,74 @@
+"""Serving metrics rollup: saturation you can assert on, not eyeball.
+
+``ServeMetrics`` accumulates per-step counters inside ``BatchedServer`` and
+derives the numbers the benchmarks and tests gate on:
+
+  * ``occupancy_pct``  — active slot-steps / total slot-steps. The whole point
+    of continuous batching is keeping this near 100 under a request stream;
+    the drain-then-refill baseline collapses it as slots empty out.
+  * ``tok_per_s``      — generated tokens per wall second across the batch.
+  * ``admitted`` / ``finished`` — request throughput accounting.
+  * ``ttft_s`` / ``ttft_steps`` — per-request time-to-first-token.
+    ``ttft_s`` counts wall seconds from *submission*, so it includes queue
+    wait — the component drain-then-refill's waves inflate. ``ttft_steps``
+    counts decode steps from admission, which equals the prompt length under
+    prefill-as-decode.
+
+``as_dict()`` is the JSON rollup ``benchmarks/bench_serve.py`` writes and
+``benchmarks/check_regression.py`` gates in CI.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass
+class ServeMetrics:
+    slots: int
+    steps: int = 0
+    active_slot_steps: int = 0
+    admitted: int = 0
+    finished: int = 0
+    tokens_generated: int = 0
+    prompt_tokens: int = 0
+    wall_s: float = 0.0
+    ttft_s: list[float] = dataclasses.field(default_factory=list)
+    ttft_steps: list[int] = dataclasses.field(default_factory=list)
+
+    @property
+    def slot_steps(self) -> int:
+        """Total slot-step capacity the server spent (steps x batch slots)."""
+        return self.steps * self.slots
+
+    @property
+    def occupancy_pct(self) -> float:
+        return 100.0 * self.active_slot_steps / self.slot_steps if self.slot_steps else 0.0
+
+    @property
+    def tok_per_s(self) -> float:
+        return self.tokens_generated / self.wall_s if self.wall_s > 0 else 0.0
+
+    @property
+    def mean_ttft_s(self) -> float:
+        return sum(self.ttft_s) / len(self.ttft_s) if self.ttft_s else 0.0
+
+    @property
+    def mean_ttft_steps(self) -> float:
+        return sum(self.ttft_steps) / len(self.ttft_steps) if self.ttft_steps else 0.0
+
+    def as_dict(self) -> dict:
+        return {
+            "slots": self.slots,
+            "steps": self.steps,
+            "slot_steps": self.slot_steps,
+            "active_slot_steps": self.active_slot_steps,
+            "occupancy_pct": self.occupancy_pct,
+            "admitted": self.admitted,
+            "finished": self.finished,
+            "tokens_generated": self.tokens_generated,
+            "prompt_tokens": self.prompt_tokens,
+            "wall_s": self.wall_s,
+            "tok_per_s": self.tok_per_s,
+            "mean_ttft_s": self.mean_ttft_s,
+            "mean_ttft_steps": self.mean_ttft_steps,
+        }

@@ -1,22 +1,45 @@
-"""Batched serving: continuous-batching request manager over the decode step.
+"""Continuous-batching serving engine over the per-slot decode step.
 
-The decode step itself (models/*.lm_decode_step) is one fused jitted program
-with sharded KV caches (flash-decode pattern, see models/attention.py). This
-module adds the request-level machinery a serving deployment needs: slot
-allocation for a fixed decode batch, prefill-then-decode admission, greedy /
-temperature sampling restricted to the true (unpadded) vocab, and per-request
-stop handling — a vLLM-style scheduler reduced to its core.
+The decode step (models/*.lm_decode_step) is one fused jitted program taking
+per-slot positions, so every batch row advances through its own request
+independently. This module adds the request-level machinery a serving
+deployment needs, vLLM-style but reduced to its core:
+
+  * slot allocation for a fixed decode batch with **mid-run admission**: a
+    slot freed by a finished request is refilled from the queue on the next
+    step, its cache region reset (recurrent rwkv/mamba state zeroed; KV rows
+    additionally invalidated logically by the per-row validity masks in
+    models/attention.py), so batch occupancy stays saturated under a request
+    stream instead of draining to one straggler;
+  * prefill-as-decode per slot with per-slot stop handling (max_new_tokens /
+    max_seq), greedy or temperature sampling restricted to the true
+    (unpadded) vocab;
+  * one fused device program per step: next-token selection (prompt feed vs
+    last sample), decode, sampling, and position advance all trace into a
+    single jitted call over device arrays — tokens, per-slot positions, and
+    the active mask; the host loop only does request bookkeeping on the
+    step's (sampled, emitted) output;
+  * mesh-backed serving: ``BatchedServer(mesh=...)`` shards the KV/state
+    caches over the ``data`` axis (slots) and ``model`` axis (heads /
+    features) via ``dist.meshes.SERVE_CACHE_RULES``, with the same
+    divisibility-fallback bookkeeping ``Engine.sharded_path`` uses;
+  * a ``serve.metrics.ServeMetrics`` rollup (occupancy %, admitted/finished,
+    tok/s, time-to-first-token) so benchmarks and tests assert saturation.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
+import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.dist import meshes
 from repro.models import model_zoo
 from repro.models.config import ModelConfig
+from repro.serve.metrics import ServeMetrics
 
 
 @dataclasses.dataclass
@@ -26,92 +49,292 @@ class Request:
     max_new_tokens: int
     out: list[int] = dataclasses.field(default_factory=list)
     done: bool = False
+    # decode steps consumed so far == the slot's current position; one prompt
+    # token or one generation per step (prefill-as-decode)
+    steps: int = 0
+    submit_s: float | None = None  # wall clock at submission (queue entry)
+    admit_s: float | None = None  # wall clock at admission into a slot
+    # wall seconds from submission to first generated token — includes queue
+    # wait, which is exactly what drain-then-refill's waves inflate
+    ttft_s: float | None = None
 
 
 class BatchedServer:
+    """Fixed-slot continuous-batching server; see module docstring.
+
+    ``admission`` picks the scheduling discipline: ``"continuous"`` (default)
+    refills freed slots mid-run; ``"drain"`` is the static-batch ablation that
+    only admits when every slot is empty (drain-then-refill) — the baseline
+    ``benchmarks/bench_serve.py`` measures continuous batching against.
+    """
+
     def __init__(self, cfg: ModelConfig, params, batch_slots: int, max_seq: int,
-                 temperature: float = 0.0, seed: int = 0):
+                 temperature: float = 0.0, seed: int = 0, mesh=None,
+                 param_specs=None, admission: str = "continuous"):
+        if cfg.family == "encdec":
+            raise ValueError(
+                "BatchedServer serves decoder-only families; enc-dec decode "
+                "needs per-request encoder output (see examples/ seamless path)"
+            )
+        if admission not in ("continuous", "drain"):
+            raise ValueError(f"admission must be continuous|drain, got {admission!r}")
         self.cfg = cfg
         self.params = params
         self.slots = batch_slots
         self.max_seq = max_seq
-        self.temperature = temperature
+        self.temperature = float(temperature)
+        self.admission = admission
         self.cache = model_zoo.make_cache(cfg, batch_slots, max_seq)
-        self._decode = jax.jit(model_zoo.decode_fn(cfg))
-        self.active: list[Request | None] = [None] * batch_slots
-        self.pos = 0
         self.key = jax.random.PRNGKey(seed)
+        self.active: list[Request | None] = [None] * batch_slots
         self.queue: list[Request] = []
         self.finished: list[Request] = []
+        self.metrics = ServeMetrics(slots=batch_slots)
+
+        # per-slot device-program state (held as host numpy, shipped to the
+        # device as tiny arrays each step; the cache stays resident on device)
+        self._positions = np.zeros(batch_slots, np.int32)
+        self._prompt_buf = np.zeros((batch_slots, max_seq), np.int32)
+        self._prompt_len = np.zeros(batch_slots, np.int32)
+        self._last_tok = np.zeros(batch_slots, np.int32)
+        self._active_mask = np.zeros(batch_slots, bool)
+        # the prompt buffer is the one per-slot array that is not O(slots):
+        # keep its device copy resident and refresh it only on admission
+        self._prompt_buf_dev = jnp.asarray(self._prompt_buf)
+
+        self.mesh = mesh
+        self.last_sharded_path: tuple | None = None
+        if mesh is not None:
+            self.last_sharded_path = self.sharded_path(mesh)
+            with meshes.use_mesh(mesh):
+                cache_sh = meshes.tree_shardings(
+                    model_zoo.cache_specs(self.cache), self.cache, mesh,
+                    rules=meshes.SERVE_CACHE_RULES,
+                )
+                self.cache = jax.device_put(self.cache, cache_sh)
+                if param_specs is not None:
+                    self.params = jax.device_put(
+                        params, meshes.tree_shardings(param_specs, params, mesh)
+                    )
+                else:
+                    self.params = jax.device_put(params, meshes.replicated(mesh))
+
+        # donate the cache through both programs: the old cache is dead the
+        # moment the step/reset returns, and without donation XLA keeps input
+        # + output cache buffers live — a 2x peak that matters at multi-GB
+        # KV-cache scale
+        self._step_fn = jax.jit(self._build_step(), donate_argnums=(1,))
+        self._reset_fn = jax.jit(self._reset_slots, donate_argnums=(0,))
+
+    # -- sharding ------------------------------------------------------------
+    def sharded_path(self, mesh) -> tuple:
+        """Decide how the serving caches shard on ``mesh``: returns
+        ``("gspmd", data_axes, model_axis)``. The cache batch (slot) dim goes
+        over the data axes when the slot count divides them; head/feature
+        dims go over the model axis when the family has a head-partitioned
+        cache tensor that divides it. Divisibility drops are recorded in
+        ``meshes.fallbacks()`` — the same bookkeeping ``Engine.sharded_path``
+        uses — and the dropped dim stays replicated (GSPMD still shards
+        whatever per-tensor dims do resolve)."""
+        data = meshes.mesh_data_axes(mesh)
+        n_data = meshes.mesh_axis_size(mesh, *data) if data else 1
+        if data and self.slots % n_data != 0:
+            meshes.record_fallback(
+                "serve_cache", "batch", 0,
+                f"batch slots {self.slots} not divisible by data axes "
+                f"{data}={n_data}; cache slots stay replicated",
+            )
+            data = ()
+        model_axis = None
+        m_size = meshes.mesh_axis_size(mesh, "model")
+        if m_size > 1:
+            heads = self._cache_head_dim()
+            if heads is None:
+                meshes.record_fallback(
+                    "serve_cache", "kv_heads", 2,
+                    "no head-partitioned cache tensor in this family "
+                    "(latent/recurrent cache); model axis shards params only",
+                )
+            elif heads % m_size != 0:
+                meshes.record_fallback(
+                    "serve_cache", "kv_heads", 2,
+                    f"cache head dim {heads} not divisible by mesh axis "
+                    f"'model'={m_size}; cache heads stay replicated",
+                )
+            else:
+                model_axis = "model"
+        return "gspmd", data, model_axis
+
+    def _cache_head_dim(self) -> int | None:
+        """Size of the cache dim the model axis would partition, if any."""
+        cfg = self.cfg
+        if cfg.family == "ssm":  # rwkv wkv state: (B, heads, hd, hd)
+            return cfg.d_model // cfg.rwkv_head_size
+        if cfg.attn_kind == "mla":  # latent cache has no head dim
+            return None
+        return cfg.n_kv_heads
 
     # -- admission -----------------------------------------------------------
     def submit(self, req: Request):
+        if not req.prompt:
+            raise ValueError(f"request {req.rid}: empty prompt")
+        if len(req.prompt) >= self.max_seq:
+            raise ValueError(
+                f"request {req.rid}: prompt len {len(req.prompt)} >= "
+                f"max_seq {self.max_seq}"
+            )
+        req.submit_s = time.perf_counter()
         self.queue.append(req)
 
     def _admit(self):
+        if not self.queue:
+            return
+        if self.admission == "drain" and any(r is not None for r in self.active):
+            return  # static batching: refill only once the batch has drained
+        newly = []
+        now = time.perf_counter()
         for slot in range(self.slots):
             if self.active[slot] is None and self.queue:
-                self.active[slot] = self.queue.pop(0)
+                req = self.queue.pop(0)
+                self.active[slot] = req
+                req.steps = 0
+                req.admit_s = now
+                self._positions[slot] = 0
+                self._prompt_buf[slot] = 0
+                self._prompt_buf[slot, : len(req.prompt)] = req.prompt
+                self._prompt_len[slot] = len(req.prompt)
+                self._last_tok[slot] = 0
+                self._active_mask[slot] = True
+                self.metrics.admitted += 1
+                newly.append(slot)
+        if newly:
+            # reset the freed slots' cache rows: recurrent state (wkv/ssm/
+            # conv/shift) must start from zeros; KV rows get zeroed too,
+            # belt-and-braces on top of the per-row validity masks. Fixed
+            # (slots,) index vector padded with an out-of-range sentinel
+            # (scatter drops OOB rows) keeps this a single compiled program
+            # that only writes the admitted rows — continuous batching calls
+            # it per admission, so it must not touch the whole cache
+            idx = np.full(self.slots, self.slots, np.int32)
+            idx[: len(newly)] = newly
+            self.cache = self._reset_fn(self.cache, jnp.asarray(idx))
+            self._prompt_buf_dev = jnp.asarray(self._prompt_buf)
+
+    @staticmethod
+    def _reset_slots(cache, idx):
+        """Zero the batch rows listed in ``idx`` (padded with out-of-range
+        sentinels, which the scatter drops) across every cache leaf. Leaves
+        are layer-stacked (L, B, ...): rows live on axis 1; with donation
+        this is an in-place row write, not a whole-cache rebuild."""
+
+        def zero(c):
+            return c.at[:, idx].set(jnp.zeros((), c.dtype))
+
+        return jax.tree_util.tree_map(zero, cache)
+
+    # -- the fused device step -------------------------------------------------
+    def _build_step(self):
+        cfg = self.cfg
+        decode = model_zoo.decode_fn(cfg)
+        temperature = self.temperature
+        vocab = cfg.vocab_size
+
+        def step(params, cache, positions, prompt_buf, prompt_len, last_tok,
+                 active, key):
+            b = positions.shape[0]
+            rows = jnp.arange(b)
+            # next input per slot: prompt token while prefilling, else the
+            # last sampled token; inactive slots feed a dummy 0 at their
+            # parked position (their writes are reset on admission)
+            in_prompt = positions < prompt_len
+            idx = jnp.clip(positions, 0, prompt_buf.shape[1] - 1)
+            tok = jnp.where(in_prompt, prompt_buf[rows, idx], last_tok)
+            tok = jnp.where(active, tok, 0).astype(jnp.int32)
+            logits, cache = decode(params, tok, cache, positions)
+            logits = logits[:, :vocab].astype(jnp.float32)
+            if temperature > 0:
+                key, sub = jax.random.split(key)
+                nxt = jax.random.categorical(sub, logits / temperature, axis=-1)
+            else:
+                nxt = jnp.argmax(logits, axis=-1)
+            nxt = nxt.astype(jnp.int32)
+            # the sample is a real generation once the prompt is consumed
+            emitted = active & (positions + 1 >= prompt_len)
+            positions = jnp.where(active, positions + 1, positions)
+            last_tok = jnp.where(active, nxt, last_tok)
+            return cache, positions, last_tok, key, nxt, emitted
+
+        return step
 
     # -- stepping ---------------------------------------------------------------
-    def _sample(self, logits):
-        logits = logits[:, : self.cfg.vocab_size].astype(jnp.float32)
-        if self.temperature <= 0:
-            return jnp.argmax(logits, axis=-1)
-        self.key, k = jax.random.split(self.key)
-        return jax.random.categorical(k, logits / self.temperature, axis=-1)
-
     def step(self):
-        """One synchronous decode step across all slots."""
+        """Admit into free slots, then one fused decode step across all slots."""
         self._admit()
-        tokens = np.zeros(self.slots, np.int32)
-        for i, req in enumerate(self.active):
-            if req is None:
-                continue
-            # feed prompt tokens first (prefill-as-decode), then generations
-            consumed = self.pos_of(req)
-            tokens[i] = (
-                req.prompt[consumed]
-                if consumed < len(req.prompt)
-                else req.out[-1]
+        t0 = time.perf_counter()
+        ctx = (meshes.use_mesh(self.mesh) if self.mesh is not None
+               else contextlib.nullcontext())
+        with ctx:
+            out = self._step_fn(
+                self.params, self.cache,
+                jnp.asarray(self._positions), self._prompt_buf_dev,
+                jnp.asarray(self._prompt_len), jnp.asarray(self._last_tok),
+                jnp.asarray(self._active_mask), self.key,
             )
-        logits, self.cache = self._decode(
-            self.params, jnp.asarray(tokens), self.cache, jnp.int32(self.pos)
-        )
-        nxt = np.asarray(self._sample(logits))
+        self.cache, positions, last_tok, self.key, nxt, emitted = out
+        nxt = np.asarray(nxt)
+        emitted = np.asarray(emitted)  # sync point: one per step
+        # np.array (not asarray): device arrays view as read-only numpy, and
+        # _admit writes these in place on admission
+        self._positions = np.array(positions)
+        self._last_tok = np.array(last_tok)
+        now = time.perf_counter()
+
+        n_active = 0
         for i, req in enumerate(self.active):
             if req is None:
                 continue
-            consumed = self.pos_of(req)
-            if consumed + 1 >= len(req.prompt):
+            n_active += 1
+            req.steps += 1
+            if emitted[i]:
                 req.out.append(int(nxt[i]))
-            req._steps = getattr(req, "_steps", 0) + 1
-            if len(req.out) >= req.max_new_tokens or self.pos + 1 >= self.max_seq:
+                if req.ttft_s is None:
+                    req.ttft_s = now - req.submit_s
+                    self.metrics.ttft_s.append(req.ttft_s)
+                    self.metrics.ttft_steps.append(req.steps)
+            else:
+                self.metrics.prompt_tokens += 1
+            if len(req.out) >= req.max_new_tokens or req.steps >= self.max_seq:
                 req.done = True
                 self.finished.append(req)
                 self.active[i] = None
-        self.pos += 1
+                self._active_mask[i] = False
+                self.metrics.finished += 1
+        self.metrics.steps += 1
+        self.metrics.active_slot_steps += n_active
+        self.metrics.tokens_generated += int(emitted.sum())
+        self.metrics.wall_s += now - t0
 
-    @staticmethod
-    def pos_of(req: Request) -> int:
-        return getattr(req, "_steps", 0)
+    def reset_metrics(self):
+        self.metrics = ServeMetrics(slots=self.slots)
 
-    def run(self, max_steps: int | None = None):
+    def run(self, max_steps: int | None = None) -> list[Request]:
+        """Step until queue and slots drain (or ``max_steps``); returns ALL
+        finished requests so far, in deterministic ``rid`` order."""
         steps = 0
-        while (self.queue or any(self.active)) and (
+        while (self.queue or any(r is not None for r in self.active)) and (
             max_steps is None or steps < max_steps
         ):
             self.step()
             steps += 1
-        return self.finished
+        return sorted(self.finished, key=lambda r: r.rid)
 
 
 def generate_greedy(cfg: ModelConfig, params, prompts: list[list[int]],
                     max_new_tokens: int, max_seq: int | None = None):
-    """Convenience: run a batch of prompts to completion, return token lists."""
+    """Convenience: run a batch of prompts to completion, return token lists
+    (rid order == prompt order, straight from ``run``)."""
     max_seq = max_seq or (max(len(p) for p in prompts) + max_new_tokens + 1)
     server = BatchedServer(cfg, params, batch_slots=len(prompts), max_seq=max_seq)
     for i, p in enumerate(prompts):
         server.submit(Request(rid=i, prompt=list(p), max_new_tokens=max_new_tokens))
-    done = server.run()
-    return [r.out for r in sorted(done, key=lambda r: r.rid)]
+    return [r.out for r in server.run()]

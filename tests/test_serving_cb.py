@@ -1,0 +1,318 @@
+"""Continuous-batching serving engine (serve.BatchedServer):
+
+* mid-run admission parity — a request admitted into a freed slot (while
+  another request is mid-flight at a non-zero position) produces exactly the
+  tokens the same prompt produces served alone, across every cache family
+  (GQA KV, MLA absorbed-latent, RWKV recurrent state, hybrid SWA-ring+Mamba);
+* occupancy stays saturated under a Poisson-ish arrival stream;
+* per-slot stop handling (max_new_tokens / max_seq) and deterministic rid
+  ordering from ``run``;
+* sharding decision + fallback bookkeeping, and an 8-forced-host-device
+  subprocess run proving the mesh-sharded cache path matches single-device
+  decode (teacher-forced logits) with token-exact mid-run admission under
+  the mesh;
+* ``repro.launch.serve`` CLI smoke.
+"""
+import copy
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_reduced_config
+from repro.dist import meshes
+from repro.models import model_zoo
+from repro.serve.serving import BatchedServer, Request
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+# one arch per cache family: full-KV GQA, absorbed-latent MLA, O(1) recurrent
+# RWKV, SWA-ring + Mamba hybrid (MoE is excluded on purpose: capacity-based
+# routing couples batch rows, so cross-batch parity is not defined for it)
+FAMILIES = ["internlm2-20b", "minicpm3-4b", "rwkv6-3b", "hymba-1.5b"]
+
+
+def _params(arch, seed=2):
+    cfg = get_reduced_config(arch)
+    params, _ = model_zoo.init_params(cfg, jax.random.PRNGKey(seed))
+    return cfg, params
+
+
+# --------------------------- mid-run admission --------------------------------
+@pytest.mark.parametrize("arch", FAMILIES)
+def test_midrun_admission_token_exact(arch):
+    """The acceptance bar: admission into a freed slot is token-exact vs solo."""
+    cfg, params = _params(arch)
+    srv = BatchedServer(cfg, params, batch_slots=2, max_seq=32)
+    srv.submit(Request(0, [5, 6, 7, 8], 12))  # long: still running at admission
+    srv.submit(Request(1, [1, 2], 3))         # short: frees its slot mid-run
+    while not any(r.rid == 1 for r in srv.finished):
+        srv.step()
+    assert all(r is not None and r.rid == 0 for r in srv.active if r), srv.active
+    srv.submit(Request(2, [9, 3, 9, 4], 5))   # admitted into B's freed slot
+    done = srv.run()
+    assert [r.rid for r in done] == [0, 1, 2]
+    c_mid = next(r.out for r in done if r.rid == 2)
+
+    solo = BatchedServer(cfg, params, batch_slots=2, max_seq=32)
+    solo.submit(Request(2, [9, 3, 9, 4], 5))
+    c_solo = next(r.out for r in solo.run() if r.rid == 2)
+    assert c_mid == c_solo, (arch, c_mid, c_solo)
+    # and the long-running neighbour was not perturbed by the admission
+    a_mid = next(r.out for r in done if r.rid == 0)
+    ref = BatchedServer(cfg, params, batch_slots=2, max_seq=32)
+    ref.submit(Request(0, [5, 6, 7, 8], 12))
+    a_solo = next(r.out for r in ref.run() if r.rid == 0)
+    assert a_mid == a_solo, (arch, a_mid, a_solo)
+
+
+def test_slot_reuse_chain_token_exact():
+    """Three generations of occupants through the same slot stay exact."""
+    cfg, params = _params("internlm2-20b")
+    srv = BatchedServer(cfg, params, batch_slots=1, max_seq=24)
+    prompts = [[3, 1, 4], [1, 5, 9, 2], [6, 5]]
+    for i, p in enumerate(prompts):
+        srv.submit(Request(i, list(p), 4))
+    done = srv.run()
+    assert [r.rid for r in done] == [0, 1, 2]
+    for i, p in enumerate(prompts):
+        solo = BatchedServer(cfg, params, batch_slots=1, max_seq=24)
+        solo.submit(Request(9, list(p), 4))
+        assert done[i].out == solo.run()[0].out, i
+
+
+# ----------------------- occupancy under a stream ------------------------------
+def test_occupancy_saturated_under_poisson_stream():
+    cfg, params = _params("rwkv6-3b")
+    srv = BatchedServer(cfg, params, batch_slots=3, max_seq=16)
+    rng = np.random.default_rng(0)
+    rid = 0
+    n_total = 9
+    while rid < n_total or srv.queue or any(srv.active):
+        for _ in range(int(rng.poisson(0.9))):  # Poisson-ish arrivals
+            if rid < n_total:
+                plen = int(rng.integers(2, 5))
+                srv.submit(Request(rid, rng.integers(1, 100, plen).tolist(),
+                                   int(rng.integers(3, 7))))
+                rid += 1
+        if srv.queue or any(srv.active):
+            srv.step()
+    m = srv.metrics
+    assert m.finished == n_total and m.admitted == n_total
+    assert m.occupancy_pct >= 60.0, m.as_dict()
+    assert m.tokens_generated == sum(len(r.out) for r in srv.finished)
+    assert m.tok_per_s > 0 and len(m.ttft_s) == n_total
+    # TTFT in steps == prompt length under prefill-as-decode
+    by_rid = {r.rid: r for r in srv.finished}
+    assert all(s >= 2 for s in m.ttft_steps)
+    assert m.mean_ttft_steps == pytest.approx(
+        sum(len(by_rid[r].prompt) for r in by_rid) / n_total
+    )
+
+
+def test_continuous_beats_drain_on_steps():
+    """Same engine, same stream: drain-then-refill pays the per-wave straggler.
+
+    Alternating 9/3-step requests on 2 slots: drain runs 3 waves of 9 =
+    27 steps; continuous keeps the short slot busy and finishes in 21."""
+    cfg, params = _params("rwkv6-3b")
+    reqs = [Request(i, [1, 2], 8 if i % 2 == 0 else 2) for i in range(6)]
+    steps = {}
+    for mode in ("continuous", "drain"):
+        srv = BatchedServer(cfg, params, batch_slots=2, max_seq=16,
+                            admission=mode)
+        for r in copy.deepcopy(reqs):
+            srv.submit(r)
+        srv.run()
+        assert srv.metrics.finished == 6
+        steps[mode] = srv.metrics.steps
+    assert (steps["continuous"], steps["drain"]) == (21, 27), steps
+
+
+# --------------------------- per-slot stop handling ----------------------------
+def test_per_slot_stop_and_max_seq():
+    cfg, params = _params("internlm2-20b")
+    srv = BatchedServer(cfg, params, batch_slots=3, max_seq=10)
+    srv.submit(Request(0, [1, 2], 3))        # stops on max_new_tokens
+    srv.submit(Request(1, [1, 2, 3, 4], 50))  # capped by max_seq
+    srv.submit(Request(2, [7], 1))           # single-token request
+    done = srv.run()
+    assert [r.rid for r in done] == [0, 1, 2]
+    # prompt 2 + 3 generations, first emitted on the last-prompt-token step
+    assert len(done[0].out) == 3 and done[0].steps == 4
+    # max_seq cap: 10 positions, 4 prompt tokens -> 7 generations (the first
+    # emit happens on the step consuming the last prompt token)
+    assert len(done[1].out) == 10 - 4 + 1 and done[1].steps == 10
+    assert len(done[2].out) == 1 and done[2].steps == 1
+    assert all(r.done for r in done)
+
+
+def test_run_max_steps_and_rid_order():
+    cfg, params = _params("rwkv6-3b")
+    srv = BatchedServer(cfg, params, batch_slots=2, max_seq=20)
+    srv.submit(Request(0, [1, 2], 9))  # rid 0 finishes AFTER rid 1
+    srv.submit(Request(1, [3, 4], 2))
+    partial = srv.run(max_steps=2)
+    assert partial == [] and srv.metrics.steps == 2
+    done = srv.run()
+    assert [r.rid for r in done] == [0, 1]  # deterministic despite finish order
+    assert [r.rid for r in srv.finished] == [1, 0]
+
+
+def test_submit_validation_and_encdec_rejected():
+    cfg, params = _params("rwkv6-3b")
+    srv = BatchedServer(cfg, params, batch_slots=1, max_seq=8)
+    with pytest.raises(ValueError, match="empty prompt"):
+        srv.submit(Request(0, [], 4))
+    with pytest.raises(ValueError, match="max_seq"):
+        srv.submit(Request(1, list(range(1, 9)), 4))
+    with pytest.raises(ValueError, match="admission"):
+        BatchedServer(cfg, params, batch_slots=1, max_seq=8, admission="magic")
+    ed = get_reduced_config("seamless-m4t-medium")
+    with pytest.raises(ValueError, match="decoder-only"):
+        BatchedServer(ed, {}, batch_slots=1, max_seq=8)
+
+
+# ------------------------------- sharding --------------------------------------
+def test_sharded_path_decision_and_fallbacks():
+    cfg, params = _params("internlm2-20b")  # reduced: n_kv_heads = 2
+    srv = BatchedServer(cfg, params, batch_slots=4, max_seq=16)
+    mesh = jax.sharding.AbstractMesh((4, 2), ("data", "model"))
+    assert srv.sharded_path(mesh) == ("gspmd", ("data",), "model")
+    # slots not divisible by data axes: replicated + recorded
+    srv3 = BatchedServer(cfg, params, batch_slots=3, max_seq=16)
+    meshes.clear_fallbacks()
+    assert srv3.sharded_path(mesh) == ("gspmd", (), "model")
+    assert any(t == "serve_cache" and ax == "batch"
+               for t, (ax, _), _ in meshes.fallbacks())
+    # head dim not divisible by the model axis
+    meshes.clear_fallbacks()
+    mesh3 = jax.sharding.AbstractMesh((1, 3), ("data", "model"))
+    assert srv.sharded_path(mesh3) == ("gspmd", (), None)
+    assert any(t == "serve_cache" and ax == "kv_heads"
+               for t, (ax, _), _ in meshes.fallbacks())
+    # MLA latent cache has no head dim: model axis shards params only
+    mla_cfg, mla_params = _params("minicpm3-4b")
+    srv_mla = BatchedServer(mla_cfg, mla_params, batch_slots=4, max_seq=16)
+    meshes.clear_fallbacks()
+    assert srv_mla.sharded_path(mesh) == ("gspmd", ("data",), None)
+    assert any(t == "serve_cache" for t, _, _ in meshes.fallbacks())
+
+
+def test_degenerate_mesh_parity_in_process():
+    """mesh= on a 1-device host mesh must not change the served tokens."""
+    cfg = get_reduced_config("internlm2-20b")
+    params, specs = model_zoo.init_params(cfg, jax.random.PRNGKey(2))
+    prompts = [[5, 6, 7], [1, 2, 9, 4]]
+
+    def serve(mesh, param_specs=None):
+        srv = BatchedServer(cfg, params, batch_slots=2, max_seq=20, mesh=mesh,
+                            param_specs=param_specs)
+        for i, p in enumerate(prompts):
+            srv.submit(Request(i, list(p), 5))
+        return [r.out for r in srv.run()], srv
+
+    ref, _ = serve(None)
+    got, srv = serve(meshes.make_host_mesh(), param_specs=specs)
+    assert got == ref
+    assert srv.last_sharded_path is not None
+
+
+# --------------------------- 8-device subprocess -------------------------------
+_MULTI_DEVICE_SCRIPT = textwrap.dedent(
+    """
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import jax, numpy as np
+    import jax.numpy as jnp
+    from repro.configs import get_reduced_config
+    from repro.dist import meshes
+    from repro.models import model_zoo
+    from repro.serve.serving import BatchedServer, Request
+
+    assert jax.device_count() == 8
+    cfg = get_reduced_config("internlm2-20b")
+    params, specs = model_zoo.init_params(cfg, jax.random.PRNGKey(2))
+    mesh = meshes.make_host_mesh(model_parallel=2)  # (data 4, model 2)
+
+    # -- 1. teacher-forced per-step logits parity: the sharded cache path
+    # (slots over data, kv heads over model) must match single-device decode
+    # at the repo's decode tolerance (bf16 activations reorder reductions)
+    decode = jax.jit(model_zoo.decode_fn(cfg))
+    decode_m = jax.jit(model_zoo.decode_fn(cfg))
+    cache = model_zoo.make_cache(cfg, 4, 24)
+    with meshes.use_mesh(mesh):
+        cache_sh = meshes.tree_shardings(
+            model_zoo.cache_specs(cache), cache, mesh,
+            rules=meshes.SERVE_CACHE_RULES)
+        cache_m = jax.device_put(cache, cache_sh)
+        params_m = jax.device_put(
+            params, meshes.tree_shardings(specs, params, mesh))
+    # cache really is partitioned over (data, model)
+    k0 = jax.tree_util.tree_leaves(cache_m)[0]
+    assert not k0.sharding.is_fully_replicated, k0.sharding
+    rng = np.random.default_rng(5)
+    toks = rng.integers(1, cfg.vocab_size, (10, 4)).astype(np.int32)
+    # staggered per-slot positions: every row decodes at its own offset
+    offsets = jnp.asarray([0, 3, 1, 7], jnp.int32)
+    for t in range(toks.shape[0]):
+        tok = jnp.asarray(toks[t])
+        pos = offsets + t
+        logits, cache = decode(params, tok, cache, pos)
+        with meshes.use_mesh(mesh):
+            logits_m, cache_m = decode_m(params_m, tok, cache_m, pos)
+        l = np.asarray(logits[:, : cfg.vocab_size], np.float32)
+        lm = np.asarray(logits_m[:, : cfg.vocab_size], np.float32)
+        np.testing.assert_allclose(l, lm, rtol=6e-2, atol=6e-2)
+    print("SHARDED-DECODE-PARITY-OK")
+
+    # -- 2. mid-run admission stays token-exact inside the sharded path
+    def serve(reqs):
+        srv = BatchedServer(cfg, params, batch_slots=4, max_seq=24,
+                            mesh=mesh, param_specs=specs)
+        for rid, prompt, new in reqs:
+            srv.submit(Request(rid, list(prompt), new))
+        return {r.rid: r.out for r in srv.run()}, srv
+
+    stream = [(0, [5, 6, 7, 8], 12), (1, [1, 2], 3), (2, [8, 8], 4),
+              (3, [3, 1, 4, 1], 5), (4, [9, 3, 9, 4], 5)]  # 4 slots, 5 reqs
+    got, srv = serve(stream)
+    assert srv.last_sharded_path == ("gspmd", ("data",), "model")
+    solo, _ = serve([(4, [9, 3, 9, 4], 5)])
+    assert got[4] == solo[4], (got[4], solo[4])
+    m = srv.metrics
+    assert m.admitted == 5 and m.finished == 5 and m.occupancy_pct > 50
+    print("SHARDED-ADMISSION-OK")
+    """
+)
+
+
+def test_sharded_serving_8_devices_subprocess():
+    """8 forced host devices: mesh-sharded KV cache (slots over data, heads
+    over model) matches single-device decode; admission exact under mesh."""
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run(
+        [sys.executable, "-c", _MULTI_DEVICE_SCRIPT],
+        env=env, capture_output=True, text=True, timeout=600, cwd=REPO,
+    )
+    assert out.returncode == 0, out.stdout[-2000:] + out.stderr[-2000:]
+    for marker in ("SHARDED-DECODE-PARITY-OK", "SHARDED-ADMISSION-OK"):
+        assert marker in out.stdout, out.stdout
+
+
+# ------------------------------- CLI smoke -------------------------------------
+def test_launch_serve_cli_smoke(capsys):
+    from repro.launch import serve as serve_cli
+
+    done = serve_cli.main([
+        "--arch", "rwkv6-3b", "--reduced", "--batch", "2", "--requests", "3",
+        "--prompt-len", "4", "--max-new", "3",
+    ])
+    assert len(done) == 3 and all(len(r.out) == 3 for r in done)
+    msg = capsys.readouterr().out
+    assert "tok/s" in msg and "occupancy" in msg
