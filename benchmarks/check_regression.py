@@ -19,6 +19,10 @@ Default checks per baseline workload:
   * serving format: ``serving.occupancy_pct`` (machine-independent) may not
     drop below the baseline's ``serving.occupancy_floor_pct`` — continuous
     batching must keep the decode batch saturated.
+  * serving format, paged rung: ``serving.ttft_steps_ratio`` (dense TTFT
+    steps / paged+chunked TTFT steps, machine-independent) may not drop
+    below the baseline's ``serving.ttft_ratio_floor`` — chunked prefill
+    must keep cutting time-to-first-token.
   * with ``--abs-time``, ``pipelined.total_s`` (lower is better) /
     ``serving.tok_s`` (higher is better) are also gated — opt-in because
     absolute wall numbers only compare on identical hardware.
@@ -88,6 +92,14 @@ def check(current: dict, baseline: dict, tol: float, abs_time: bool) -> list[str
                     failures.append(
                         f"{name}: serving occupancy {occ:.1f}% below the "
                         f"{float(floor):.1f}% saturation floor"
+                    )
+            ttft_floor = base_serv.get("ttft_ratio_floor")
+            if ttft_floor is not None:
+                ratio = float(cur_serv.get("ttft_steps_ratio", 0.0))
+                if ratio < float(ttft_floor):
+                    failures.append(
+                        f"{name}: chunked-prefill TTFT ratio {ratio:.2f}x "
+                        f"below the {float(ttft_floor):.1f}x floor"
                     )
             if abs_time:
                 _ratio_check(

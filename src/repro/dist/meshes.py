@@ -171,6 +171,10 @@ DEFAULT_RULES: dict[str, str | tuple[str, ...] | None] = {
     # heap pages streamed into the access engine: decode is page-parallel
     # (each device's Strider decodes its local page range)
     "heap_pages": ("pod", "data"),
+    # paged serving KV: the block pool spreads over the data axes (blocks are
+    # the unit of placement, like heap pages for the Striders); the in-block
+    # token dim never shards
+    "kv_blocks": ("pod", "data"),
     # ZeRO-partitioned optimizer-state dim (train.optimizer.state_specs)
     "zero": ("pod", "data"),
     # tensor parallelism (Megatron TP pattern)
@@ -209,7 +213,7 @@ MODEL_SHARD_RULES: dict[str, str | tuple[str, ...] | None] = dict(
 SERVE_CACHE_RULES: dict[str, str | tuple[str, ...] | None] = dict(
     DEFAULT_RULES,
     layers=None, kv_seq=None, seq=None, head_dim=None, lora=None,
-    state=None, conv=None, embed=None,
+    state=None, conv=None, embed=None, block=None,
 )
 
 

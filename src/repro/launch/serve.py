@@ -6,7 +6,11 @@
 Submit more requests than slots (``--requests``) to exercise mid-run
 admission; ``--mesh host`` serves with the KV caches sharded over whatever
 devices exist (``--model-parallel`` splits heads over the model axis).
-Prints the ``serve.metrics`` rollup (occupancy %, tok/s, TTFT).
+``--kv paged`` swaps the dense per-slot cache for the block-pool layout
+(``--block-size`` tokens per block, ``--kv-blocks`` total — default
+dense-equivalent capacity); ``--prefill-chunk C`` feeds C prompt tokens per
+fused step (TTFT drops ~C× in steps). Prints the ``serve.metrics`` rollup
+(occupancy %, tok/s, TTFT, paged blocks-in-use %).
 """
 from __future__ import annotations
 
@@ -40,6 +44,16 @@ def main(argv=None):
                     default="continuous",
                     help="drain = static-batch ablation (refill only when "
                          "the whole batch finished)")
+    ap.add_argument("--kv", choices=["dense", "paged"], default="dense",
+                    help="paged: block-pool KV cache (serve/kv_pool.py)")
+    ap.add_argument("--block-size", type=int, default=16,
+                    help="tokens per KV block (paged only)")
+    ap.add_argument("--kv-blocks", type=int, default=None,
+                    help="total blocks in the paged pool (default: "
+                         "slots * ceil(max_seq/block_size), i.e. dense-"
+                         "equivalent capacity; pass less to oversubscribe)")
+    ap.add_argument("--prefill-chunk", type=int, default=1,
+                    help="prompt tokens fed per fused step (chunked prefill)")
     ap.add_argument("--max-steps", type=int, default=None)
     args = ap.parse_args(argv)
 
@@ -57,7 +71,9 @@ def main(argv=None):
     server = BatchedServer(cfg, params, batch_slots=args.batch, max_seq=max_seq,
                            temperature=args.temperature, seed=args.seed,
                            mesh=mesh, param_specs=specs if mesh else None,
-                           admission=args.admission)
+                           admission=args.admission, kv=args.kv,
+                           block_size=args.block_size, kv_blocks=args.kv_blocks,
+                           prefill_chunk=args.prefill_chunk)
     n_requests = args.requests if args.requests is not None else args.batch
     for i in range(n_requests):
         prompt = rng.integers(1, cfg.vocab_size, args.prompt_len).tolist()
@@ -67,11 +83,15 @@ def main(argv=None):
     m = server.metrics
     mesh_desc = f" mesh={dict(mesh.shape)} path={server.last_sharded_path}" \
         if mesh is not None else ""
+    kv_desc = (f" kv=paged blocks {m.kv_blocks_peak}/{m.kv_blocks_total} "
+               f"({m.kv_blocks_peak_pct:.0f}% peak)"
+               if server.kv_mode == "paged" else "")
+    ttft = (f"{m.mean_ttft_s*1e3:.0f}ms/{m.mean_ttft_steps:.0f} steps"
+            if m.mean_ttft_s is not None else "n/a")
     print(f"[serve] {cfg.name}: {m.finished}/{n_requests} requests, "
           f"{m.tokens_generated} tokens in {m.wall_s:.2f}s "
           f"({m.tok_per_s:.1f} tok/s, occupancy {m.occupancy_pct:.0f}%, "
-          f"mean TTFT {m.mean_ttft_s*1e3:.0f}ms/"
-          f"{m.mean_ttft_steps:.0f} steps){mesh_desc}")
+          f"mean TTFT {ttft}){kv_desc}{mesh_desc}")
     for r in done[:4]:
         print(f"  req {r.rid}: {r.out[:12]}{'...' if len(r.out) > 12 else ''}")
     return done

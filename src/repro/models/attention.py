@@ -202,6 +202,89 @@ def init_gqa_cache(cfg: ModelConfig, batch: int, seq: int, window=0,
     return {"k": z, "v": z}
 
 
+# ============================ paged decode ===================================
+# Paged KV: instead of a dense per-slot row (B, S, ...), the cache is a pool
+# of fixed-size token blocks (num_blocks, block_size, ...) shared by every
+# slot; ``table`` (B, nb_slot) maps a slot's logical block index to a
+# physical block id (serve/kv_pool.py owns the allocation). Decode writes the
+# current token through the table and gathers the slot's blocks back into a
+# (B, nb_slot*block_size, ...) view — the access-engine-walks-page-layouts
+# pattern. Padding rows (beyond max_seq / ring width, or in not-yet-mapped
+# blocks) are masked with NEG, which softmaxes to exactly 0.0 in f32, so the
+# paged path is token-exact vs the dense reference.
+
+
+def _paged_write_idx(table, pos_b, block_size, ring_width, num_blocks,
+                     write_ok):
+    """(block id, in-block offset) each row writes. ``ring_width`` > 0 maps
+    positions onto ring rows ``pos % ring_width`` (SWA). Rows with
+    ``write_ok`` False get an out-of-range block id — the scatter drops
+    them (idle chunked-prefill rows, parked slots)."""
+    row = pos_b % ring_width if ring_width else pos_b
+    blk = table[jnp.arange(pos_b.shape[0]), row // block_size]
+    if write_ok is not None:
+        blk = jnp.where(write_ok, blk, num_blocks)
+    return blk, row % block_size
+
+
+def _paged_valid(pos_b, s_pad, ring_width, max_rows):
+    """Per-row validity over the gathered (ring-ordered for SWA) view.
+    Full region: rows <= pos. Ring region: the dense ring's exact rule —
+    rows <= pos while cold, every ring row once warm — with the gather
+    padding (rows >= width) always invalid."""
+    kpos = jnp.arange(s_pad)[None, :]
+    if ring_width:
+        return (kpos < ring_width) & (
+            (kpos <= pos_b[:, None]) | (pos_b[:, None] >= ring_width)
+        )
+    return (kpos <= pos_b[:, None]) & (kpos < max_rows)
+
+
+def gqa_decode_paged(p, x, cache, pos, cfg: ModelConfig, table, block_size,
+                     ring_width=0, max_seq=None, write_ok=None):
+    """Paged variant of ``gqa_decode``: cache {k,v}: (NB, bs, KVH, D) block
+    pools; ``table`` (B, nb_slot) int32. ``ring_width`` > 0 selects SWA ring
+    semantics (the table then maps ring rows). Returns (out, new_cache)."""
+    b = x.shape[0]
+    dt = x.dtype
+    pos_b = _batch_pos(pos, b)
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(dt))
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(dt))
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(dt))
+    cos, sin = rope_tables(pos_b[:, None], cfg.hd, cfg.rope_theta)
+    cos, sin = cos[:, :, None, :], sin[:, :, None, :]
+    q, k = apply_rope(q, cos, sin), apply_rope(k, cos, sin)
+
+    blk, off = _paged_write_idx(table, pos_b, block_size, ring_width,
+                                cache["k"].shape[0], write_ok)
+    ck = cache["k"].at[blk, off].set(k[:, 0].astype(cache["k"].dtype))
+    cv = cache["v"].at[blk, off].set(v[:, 0].astype(cache["v"].dtype))
+    ck = shard_act(ck, ("kv_blocks", "block", "kv_heads", "head_dim"), "ck")
+    cv = shard_act(cv, ("kv_blocks", "block", "kv_heads", "head_dim"), "cv")
+
+    kvh, hd = cfg.n_kv_heads, cfg.hd
+    g = cfg.n_heads // kvh
+    gk = ck[table].reshape(b, -1, kvh, hd)
+    gv = cv[table].reshape(b, -1, kvh, hd)
+    valid = _paged_valid(pos_b, gk.shape[1], ring_width,
+                         max_seq if max_seq else gk.shape[1])
+    mask = jnp.where(valid, 0.0, NEG).astype(jnp.float32)[:, None, None, None, :]
+    out = _sdpa(q.reshape(b, 1, kvh, g, hd), gk, gv, mask, 1.0 / math.sqrt(hd))
+    out = out.reshape(b, 1, cfg.n_heads, hd).astype(dt)
+    out = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(dt))
+    return out, {"k": ck, "v": cv}
+
+
+def init_gqa_cache_paged(cfg: ModelConfig, num_blocks: int, block_size: int,
+                         abstract=False):
+    shape = (num_blocks, block_size, cfg.n_kv_heads, cfg.hd)
+    if abstract:
+        z = jax.ShapeDtypeStruct(shape, jnp.bfloat16)
+    else:
+        z = jnp.zeros(shape, jnp.bfloat16)
+    return {"k": z, "v": z}
+
+
 # =============================== MLA =========================================
 def make_mla(m: Maker, cfg: ModelConfig):
     d = cfg.d_model
@@ -311,6 +394,56 @@ def mla_decode(p, x, cache, pos, cfg: ModelConfig):
     out = jnp.einsum("bhr,rhv->bhv", out_lat, w_uv)
     out = jnp.einsum("bhv,hvd->bd", out, p["wo"].astype(dt))[:, None, :]
     return out, {"c": c, "kr": kr}
+
+
+def mla_decode_paged(p, x, cache, pos, cfg: ModelConfig, table, block_size,
+                     max_seq=None, write_ok=None):
+    """Paged variant of ``mla_decode``: cache {c: (NB, bs, kv_lora),
+    kr: (NB, bs, rope)} block pools gathered through ``table`` (B, nb_slot).
+    The latent cache has no head dim, so paging is the only sharding lever
+    it gets (blocks over the data axes)."""
+    dt = x.dtype
+    b = x.shape[0]
+    pos_b = _batch_pos(pos, b)
+    qn, qr = _mla_q(p, x, cfg, pos_b[:, None])
+    c_t, kr_t = _mla_latent(p, x, cfg, pos_b[:, None])
+
+    blk, off = _paged_write_idx(table, pos_b, block_size, 0,
+                                cache["c"].shape[0], write_ok)
+    c = cache["c"].at[blk, off].set(c_t[:, 0].astype(cache["c"].dtype))
+    kr = cache["kr"].at[blk, off].set(kr_t[:, 0].astype(cache["kr"].dtype))
+    c = shard_act(c, ("kv_blocks", "block", "lora"), "mla_c")
+    kr = shard_act(kr, ("kv_blocks", "block", "head_dim"), "mla_kr")
+
+    gc = c[table].reshape(b, -1, cfg.kv_lora_rank)
+    gkr = kr[table].reshape(b, -1, cfg.qk_rope_head_dim)
+    s_pad = gc.shape[1]
+
+    w_uk = p["wkv_b"][..., : cfg.qk_nope_head_dim].astype(dt)
+    w_uv = p["wkv_b"][..., cfg.qk_nope_head_dim :].astype(dt)
+    q_lat = jnp.einsum("bthk,rhk->bthr", qn, w_uk)
+    scores = jnp.einsum("bthr,bsr->bhs", q_lat, gc.astype(dt))
+    scores = scores + jnp.einsum("bthk,bsk->bhs", qr, gkr.astype(dt))
+    scale = 1.0 / math.sqrt(cfg.qk_nope_head_dim + cfg.qk_rope_head_dim)
+    valid = _paged_valid(pos_b, s_pad, 0, max_seq if max_seq else s_pad)
+    scores = scores.astype(jnp.float32) * scale + jnp.where(valid, 0.0, NEG)[:, None]
+    probs = jax.nn.softmax(scores, axis=-1)
+    out_lat = jnp.einsum("bhs,bsr->bhr", probs, gc.astype(jnp.float32)).astype(dt)
+    out = jnp.einsum("bhr,rhv->bhv", out_lat, w_uv)
+    out = jnp.einsum("bhv,hvd->bd", out, p["wo"].astype(dt))[:, None, :]
+    return out, {"c": c, "kr": kr}
+
+
+def init_mla_cache_paged(cfg: ModelConfig, num_blocks: int, block_size: int,
+                         abstract=False):
+    sc = (num_blocks, block_size, cfg.kv_lora_rank)
+    sk = (num_blocks, block_size, cfg.qk_rope_head_dim)
+    if abstract:
+        return {
+            "c": jax.ShapeDtypeStruct(sc, jnp.bfloat16),
+            "kr": jax.ShapeDtypeStruct(sk, jnp.bfloat16),
+        }
+    return {"c": jnp.zeros(sc, jnp.bfloat16), "kr": jnp.zeros(sk, jnp.bfloat16)}
 
 
 def init_mla_cache(cfg: ModelConfig, batch: int, seq: int, abstract=False):

@@ -120,6 +120,21 @@ def make_cache(cfg: ModelConfig, batch: int, seq: int, abstract: bool = False):
     return transformer.init_cache(cfg, batch, seq, abstract=abstract)
 
 
+def make_paged_cache(cfg: ModelConfig, slots: int, num_blocks: int,
+                     block_size: int, ring_num_blocks: int = 0,
+                     ring_width: int = 0, abstract: bool = False):
+    """Paged decode cache: attention leaves are block pools
+    ``(num_blocks, block_size, ...)`` shared across slots (serve/kv_pool.py
+    allocates them); recurrent state stays per-slot. Decoder-only families
+    only — enc-dec and pure-recurrent models have no per-token cache."""
+    if cfg.family in ("encdec", "ssm"):
+        raise ValueError(f"family {cfg.family!r} has no paged attention cache")
+    return transformer.init_paged_cache(
+        cfg, slots, num_blocks, block_size, ring_num_blocks=ring_num_blocks,
+        ring_width=ring_width, abstract=abstract,
+    )
+
+
 # ------------------------------------------------------------------------
 _CACHE_AXES = {
     "k": ("batch", "kv_seq", "kv_heads", "head_dim"),
@@ -136,15 +151,29 @@ _CACHE_AXES = {
 }
 
 
-def cache_specs(cache):
-    """Logical-axis tree parallel to a decode cache (for dry-run shardings)."""
+# paged layout (make_paged_cache): attention leaves lose their batch dim and
+# gain (kv_blocks, block) — the block pool shards over the data axes instead
+# of the slot dim, per meshes.SERVE_CACHE_RULES
+_PAGED_CACHE_AXES = {
+    "k": ("kv_blocks", "block", "kv_heads", "head_dim"),
+    "v": ("kv_blocks", "block", "kv_heads", "head_dim"),
+    "c": ("kv_blocks", "block", "lora"),
+    "kr": ("kv_blocks", "block", "head_dim"),
+}
+
+
+def cache_specs(cache, paged: bool = False):
+    """Logical-axis tree parallel to a decode cache (for dry-run shardings).
+    ``paged=True`` maps the attention leaves of a ``make_paged_cache`` tree
+    to their block-pool axes; per-slot recurrent leaves keep the dense axes."""
+    axes_map = {**_CACHE_AXES, **_PAGED_CACHE_AXES} if paged else _CACHE_AXES
 
     def walk(node, key=None):
         if isinstance(node, dict):
             return {k: walk(v, k) for k, v in node.items()}
         if isinstance(node, list):
             return [walk(v, key) for v in node]
-        axes = _CACHE_AXES[key]
+        axes = axes_map[key]
         if len(node.shape) == len(axes) + 1:  # stacked over layers
             return ("layers",) + axes
         return axes

@@ -281,7 +281,47 @@ def _init_layer_cache(cfg: ModelConfig, kind: str, b: int, s: int, abstract):
     return cache
 
 
-def _layer_decode(p, x, cache, pos, cfg: ModelConfig, kind: str):
+def init_paged_cache(cfg: ModelConfig, slots: int, num_blocks: int,
+                     block_size: int, ring_num_blocks: int = 0,
+                     ring_width: int = 0, abstract: bool = False):
+    """Paged decode cache: attention leaves become block pools
+    ``(num_blocks, block_size, ...)`` shared by all slots (SWA layers draw
+    from the ring pool), while recurrent per-slot state (wkv/shift/ssm/conv)
+    keeps its dense ``(slots, ...)`` layout — it is O(1) per slot, not
+    per-token, so there is nothing to page."""
+    caches = []
+    for seg in segments_for(cfg):
+        layer_caches = [
+            _init_layer_cache_paged(cfg, seg.kind, slots, num_blocks,
+                                    block_size, ring_num_blocks, ring_width,
+                                    abstract)
+            for _ in range(seg.n_layers)
+        ]
+        caches.append(_stack_caches(layer_caches))
+    return caches
+
+
+def _init_layer_cache_paged(cfg: ModelConfig, kind: str, slots: int, nb: int,
+                            bs: int, ring_nb: int, ring_width: int, abstract):
+    if kind == "rwkv":
+        return _init_layer_cache(cfg, kind, slots, bs, abstract)
+    mk = (lambda sh, dt: jax.ShapeDtypeStruct(sh, dt)) if abstract else (
+        lambda sh, dt: jnp.zeros(sh, dt)
+    )
+    cache = {}
+    if kind in ("hybrid_swa", "hybrid_global"):
+        di = cfg.ssm_expand * cfg.d_model
+        cache["ssm"] = mk((slots, di, cfg.ssm_state), jnp.float32)
+        cache["conv"] = mk((slots, cfg.ssm_conv - 1, di), jnp.bfloat16)
+    if cfg.attn_kind == "mla":
+        cache.update(attn.init_mla_cache_paged(cfg, nb, bs, abstract=abstract))
+    else:
+        n = ring_nb if (kind == "hybrid_swa" and ring_width) else nb
+        cache.update(attn.init_gqa_cache_paged(cfg, n, bs, abstract=abstract))
+    return cache
+
+
+def _layer_decode(p, x, cache, pos, cfg: ModelConfig, kind: str, paged=None):
     if kind == "rwkv":
         h = apply_norm(p["ln_t"], x, cfg.norm_eps)
         h, (wkv_s, shift_t) = ssm.rwkv_tmix(
@@ -301,13 +341,33 @@ def _layer_decode(p, x, cache, pos, cfg: ModelConfig, kind: str):
     h = apply_norm(p["ln1"], x, cfg.norm_eps)
     new_cache = dict(cache)
     if cfg.attn_kind == "mla":
-        a, upd = attn.mla_decode(p["attn"], h, {"c": cache["c"], "kr": cache["kr"]},
-                                 pos, cfg)
+        if paged is None:
+            a, upd = attn.mla_decode(
+                p["attn"], h, {"c": cache["c"], "kr": cache["kr"]}, pos, cfg
+            )
+        else:
+            a, upd = attn.mla_decode_paged(
+                p["attn"], h, {"c": cache["c"], "kr": cache["kr"]}, pos, cfg,
+                table=paged["table"], block_size=paged["block_size"],
+                max_seq=paged["max_seq"], write_ok=paged["write_ok"],
+            )
         new_cache.update(upd)
     else:
         w = cfg.swa_window if kind == "hybrid_swa" else 0
-        a, upd = attn.gqa_decode(p["attn"], h, {"k": cache["k"], "v": cache["v"]},
-                                 pos, cfg, window=w)
+        if paged is None:
+            a, upd = attn.gqa_decode(
+                p["attn"], h, {"k": cache["k"], "v": cache["v"]}, pos, cfg,
+                window=w,
+            )
+        else:
+            ring = bool(w and paged["ring_width"])
+            a, upd = attn.gqa_decode_paged(
+                p["attn"], h, {"k": cache["k"], "v": cache["v"]}, pos, cfg,
+                table=paged["ring_table"] if ring else paged["table"],
+                block_size=paged["block_size"],
+                ring_width=paged["ring_width"] if ring else 0,
+                max_seq=paged["max_seq"], write_ok=paged["write_ok"],
+            )
         new_cache.update(upd)
     if kind in ("hybrid_swa", "hybrid_global"):
         sm, (ssm_s, conv_s) = ssm.mamba_mix(
@@ -331,18 +391,22 @@ def _layer_decode(p, x, cache, pos, cfg: ModelConfig, kind: str):
 
 
 def lm_decode_step(params, tokens, caches, pos, cfg: ModelConfig,
-                   unroll: bool = False):
+                   unroll: bool = False, paged=None):
     """tokens (B,) int32; caches from init_cache; pos: current position —
     a scalar, or a (B,) vector of per-slot positions (continuous batching;
     recurrent rwkv/mamba caches are position-free, attention caches take the
     per-row write/validity path in models/attention.py).
+    ``paged`` switches the attention caches to the block-pool layout
+    (init_paged_cache): a dict with ``table``/``ring_table`` (B, nb) int32
+    block tables, ``write_ok`` (B,) bool (or None), and static
+    ``block_size``/``ring_width``/``max_seq``.
     Returns (logits (B, padded_vocab), new_caches)."""
     x = embed(params["embed"], tokens[:, None], cfg)
     new_caches = []
     for seg, sp, sc in zip(segments_for(cfg), params["segments"], caches):
         def body(carry, layer, kind=seg.kind):
             lp, lc = layer
-            y, nc = _layer_decode(lp, carry, lc, pos, cfg, kind)
+            y, nc = _layer_decode(lp, carry, lc, pos, cfg, kind, paged=paged)
             return y, nc
         x, nc = jax.lax.scan(body, x, (sp, sc),
                              unroll=seg.n_layers if unroll else 1)

@@ -1,0 +1,280 @@
+"""Paged KV-cache block pool: fixed-size token blocks behind the serving engine.
+
+DAnA's Striders replace dense hand-routed buffer access with an access engine
+that walks page layouts directly (PAPER.md §Striders); the serving analogue is
+vLLM-style paged attention. Instead of every decode slot owning a dense
+``max_seq`` cache row — memory scaling with the *worst case* sequence — the
+cache is a pool of fixed-size token blocks:
+
+  * ``KVBlockPool`` — the allocator. A free list of physical block ids, a
+    per-slot block table (logical block index -> physical block id),
+    alloc-on-write (a block is mapped the first time a token position inside
+    it is written), free-on-finish (a finished request returns its blocks),
+    and reservation-based admission: a request is admitted only when the pool
+    can cover its worst-case block demand, so a running request can never hit
+    pool exhaustion mid-flight — OOM surfaces as *deferred admission*, never
+    as a crash. Invariants (``free + in_use == total``, no double allocation,
+    table/length consistency) are pinned by ``tests/test_kv_pool.py``.
+  * ``PagedKV`` — the serving-side composite: one pool for the full-width
+    cache regions (GQA K/V, MLA latent) and, for models with sliding-window
+    layers, a second pool whose logical rows are *ring* positions
+    (``pos % ring_width``), so SWA ring semantics map onto blocks with the
+    same validity story as the dense ring.
+
+The device-side layout lives in ``models/attention.py``
+(``gqa_decode_paged`` / ``mla_decode_paged``): cache leaves are block pools
+``(num_blocks, block_size, ...)`` shared by every slot, and decode gathers a
+slot's K/V through its block-table row. The pool here is pure host-side
+bookkeeping (numpy) — the tables ship to the device as tiny int32 arrays.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.models.config import ModelConfig
+
+
+class PoolExhausted(RuntimeError):
+    """A block was demanded that the free list cannot supply. Never raised
+    when admission goes through ``can_admit``/``admit`` (reservations cover
+    the worst case); reaching it means the admission protocol was bypassed."""
+
+
+def blocks_for(n_tokens: int, block_size: int) -> int:
+    """Blocks needed to cover ``n_tokens`` token rows (ceil division)."""
+    return -(-max(0, n_tokens) // block_size)
+
+
+class KVBlockPool:
+    """Fixed-size token-block allocator with a free list, per-slot block
+    tables, alloc-on-write and reservation-based admission.
+
+    Logical rows (cache row indices: token positions for full regions, ring
+    positions for SWA regions) map onto logical block indices ``row //
+    block_size``; the table maps those to physical block ids. Unmapped table
+    entries hold ``-1``.
+    """
+
+    def __init__(self, num_blocks: int, block_size: int, slots: int,
+                 blocks_per_slot: int):
+        if num_blocks < 0 or block_size < 1 or slots < 1 or blocks_per_slot < 1:
+            raise ValueError(
+                f"bad pool shape: num_blocks={num_blocks} "
+                f"block_size={block_size} slots={slots} "
+                f"blocks_per_slot={blocks_per_slot}"
+            )
+        self.num_blocks = int(num_blocks)
+        self.block_size = int(block_size)
+        self.slots = int(slots)
+        self.blocks_per_slot = int(blocks_per_slot)
+        self.table = np.full((slots, blocks_per_slot), -1, np.int32)
+        self.n_mapped = np.zeros(slots, np.int32)
+        # LIFO free list: recycled blocks are re-mapped first, which is what
+        # the parity tests lean on to prove stale contents are harmless
+        self._free: list[int] = list(range(num_blocks - 1, -1, -1))
+        self._reserved = np.zeros(slots, np.int64)
+
+    # -- accounting ----------------------------------------------------------
+    @property
+    def free_blocks(self) -> int:
+        return len(self._free)
+
+    @property
+    def blocks_in_use(self) -> int:
+        return self.num_blocks - len(self._free)
+
+    @property
+    def reserved_blocks(self) -> int:
+        """Outstanding worst-case demand of admitted slots not yet mapped."""
+        return int(self._reserved.sum())
+
+    # -- admission -----------------------------------------------------------
+    def can_admit(self, n_blocks: int) -> bool:
+        """True iff ``n_blocks`` can be guaranteed on top of every admitted
+        slot's outstanding reservation (so admission never overcommits)."""
+        if n_blocks > self.blocks_per_slot:
+            return False
+        return n_blocks <= self.free_blocks - self.reserved_blocks
+
+    def admit(self, slot: int, n_blocks: int) -> None:
+        """Reserve ``n_blocks`` of worst-case demand for ``slot``. Blocks are
+        mapped lazily by ``ensure`` (alloc-on-write)."""
+        if self.n_mapped[slot] or self._reserved[slot]:
+            raise ValueError(f"slot {slot} already holds blocks; release first")
+        if not self.can_admit(n_blocks):
+            raise PoolExhausted(
+                f"cannot admit {n_blocks} blocks: {self.free_blocks} free, "
+                f"{self.reserved_blocks} reserved"
+            )
+        self._reserved[slot] = n_blocks
+
+    # -- alloc-on-write ------------------------------------------------------
+    def ensure(self, slot: int, last_row: int) -> bool:
+        """Map blocks so logical rows ``[0, last_row]`` of ``slot`` are
+        backed; returns True when the table changed. Mapping consumes the
+        slot's reservation first."""
+        need = last_row // self.block_size + 1
+        if need > self.blocks_per_slot:
+            raise ValueError(
+                f"row {last_row} needs {need} blocks > blocks_per_slot "
+                f"{self.blocks_per_slot}"
+            )
+        changed = False
+        while self.n_mapped[slot] < need:
+            if not self._free:
+                raise PoolExhausted(
+                    f"pool exhausted mapping block {self.n_mapped[slot]} of "
+                    f"slot {slot} (admission bypassed?)"
+                )
+            bid = self._free.pop()
+            self.table[slot, self.n_mapped[slot]] = bid
+            self.n_mapped[slot] += 1
+            if self._reserved[slot] > 0:
+                self._reserved[slot] -= 1
+            changed = True
+        return changed
+
+    # -- free-on-finish ------------------------------------------------------
+    def release(self, slot: int) -> int:
+        """Return ``slot``'s blocks to the free list and drop its
+        reservation; returns how many blocks were freed."""
+        n = int(self.n_mapped[slot])
+        for i in range(n):
+            self._free.append(int(self.table[slot, i]))
+        self.table[slot] = -1
+        self.n_mapped[slot] = 0
+        self._reserved[slot] = 0
+        return n
+
+    # -- views / invariants --------------------------------------------------
+    def table_array(self) -> np.ndarray:
+        """Device-shippable copy of the block table with unmapped entries
+        clamped to block 0: jax gathers wrap negative indices, and a ``-1``
+        would silently read the *last* block. Reads through clamped entries
+        are masked out by the validity masks; writes are gated by the
+        write-ok sentinel."""
+        return np.maximum(self.table, 0).astype(np.int32)
+
+    def check(self) -> None:
+        """Assert the allocator invariants (test hook):
+        free + in_use == total, no block id appears twice (across tables and
+        the free list), mapped entries form a contiguous prefix of each
+        table row, and reservations never exceed the free list."""
+        mapped = [int(b) for row in self.table for b in row if b >= 0]
+        assert len(mapped) + len(self._free) == self.num_blocks, (
+            f"conservation broken: {len(mapped)} mapped + "
+            f"{len(self._free)} free != {self.num_blocks}"
+        )
+        seen = mapped + [int(b) for b in self._free]
+        assert len(set(seen)) == len(seen), "block id allocated twice"
+        for s in range(self.slots):
+            n = int(self.n_mapped[s])
+            assert (self.table[s, :n] >= 0).all() and (
+                self.table[s, n:] == -1
+            ).all(), f"slot {s} table not a contiguous mapped prefix"
+        assert self.reserved_blocks <= self.free_blocks, (
+            f"reservations {self.reserved_blocks} exceed free "
+            f"{self.free_blocks}: admission overcommitted"
+        )
+
+
+# ---------------------------------------------------------------------------
+# Serving-side composite: full-width pool + optional SWA ring pool
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class PagedKV:
+    """Block pools + table bookkeeping for one ``BatchedServer``.
+
+    ``pool`` backs the full-width cache regions (GQA K/V, MLA latent): logical
+    rows are token positions ``0..max_seq-1``. ``ring`` (models with
+    sliding-window layers only) backs the SWA ring regions: logical rows are
+    ring positions ``pos % ring_width`` — a bounded region, sized per slot.
+    """
+
+    block_size: int
+    max_seq: int
+    pool: KVBlockPool
+    ring_width: int = 0
+    ring: KVBlockPool | None = None
+
+    @classmethod
+    def for_model(cls, cfg: ModelConfig, slots: int, max_seq: int,
+                  block_size: int, kv_blocks: int | None = None) -> "PagedKV":
+        """Build pools sized for ``cfg``. ``kv_blocks`` caps the full-region
+        pool (default: ``slots * ceil(max_seq/block_size)``, i.e. dense-
+        equivalent capacity — pass less to oversubscribe slots against a
+        fixed memory budget). The ring pool is always fully provisioned: the
+        window bounds it, so it is not the memory lever."""
+        from repro.models.transformer import segments_for
+
+        if cfg.family in ("encdec", "ssm"):
+            raise ValueError(
+                f"family {cfg.family!r} has no paged attention cache "
+                "(recurrent/enc-dec state is per-slot, not per-token)"
+            )
+        per_slot = blocks_for(max_seq, block_size)
+        num_blocks = slots * per_slot if kv_blocks is None else int(kv_blocks)
+        pool = KVBlockPool(num_blocks, block_size, slots, per_slot)
+        ring_width, ring = 0, None
+        if any(s.kind == "hybrid_swa" for s in segments_for(cfg)):
+            ring_width = min(cfg.swa_window, max_seq)
+            ring_per_slot = blocks_for(ring_width, block_size)
+            ring = KVBlockPool(slots * ring_per_slot, block_size, slots,
+                               ring_per_slot)
+        return cls(block_size=block_size, max_seq=max_seq, pool=pool,
+                   ring_width=ring_width, ring=ring)
+
+    # -- request lifetime ----------------------------------------------------
+    def required(self, prompt_len: int, max_new: int,
+                 chunk: int = 1) -> tuple[int, int]:
+        """Worst-case (full, ring) block demand of a request: it writes
+        ``min(max_seq, prompt_len + max_new - 1)`` positions (prefill-as-
+        decode: the first generation lands on the final prompt step),
+        rounded up to the chunk boundary when the server steps ``chunk``
+        tokens at a time (the host retires a slot at step end, so the last
+        chunk may overshoot by up to ``chunk - 1`` discarded positions)."""
+        positions = prompt_len + max_new - 1
+        positions = -(-positions // chunk) * chunk
+        # never reserve less than one step's writes: the engine always runs
+        # at least one chunk for an admitted slot, so a degenerate request
+        # must not slip in with a zero reservation and then steal blocks
+        positions = min(self.max_seq, max(positions, min(chunk, self.max_seq)))
+        full = blocks_for(positions, self.block_size)
+        ring = blocks_for(min(self.ring_width, positions), self.block_size) \
+            if self.ring is not None else 0
+        return full, ring
+
+    def can_admit(self, prompt_len: int, max_new: int, chunk: int = 1) -> bool:
+        full, ring = self.required(prompt_len, max_new, chunk)
+        if not self.pool.can_admit(full):
+            return False
+        return self.ring is None or self.ring.can_admit(ring)
+
+    def admit(self, slot: int, prompt_len: int, max_new: int,
+              chunk: int = 1) -> None:
+        full, ring = self.required(prompt_len, max_new, chunk)
+        self.pool.admit(slot, full)
+        if self.ring is not None:
+            self.ring.admit(slot, ring)
+
+    def release(self, slot: int) -> int:
+        n = self.pool.release(slot)
+        if self.ring is not None:
+            n += self.ring.release(slot)
+        return n
+
+    def ensure_step(self, slot: int, pos: int, n_tokens: int) -> bool:
+        """Alloc-on-write for one fused step: map blocks covering the rows
+        this slot will write — positions ``pos .. pos+n_tokens-1`` in the
+        full region, their ring images in the ring region."""
+        last = min(pos + n_tokens - 1, self.max_seq - 1)
+        changed = self.pool.ensure(slot, last)
+        if self.ring is not None:
+            changed |= self.ring.ensure(slot, min(last, self.ring_width - 1))
+        return changed
+
+    def tables(self) -> tuple[np.ndarray, np.ndarray | None]:
+        return (self.pool.table_array(),
+                self.ring.table_array() if self.ring is not None else None)

@@ -7,15 +7,26 @@ derives the numbers the benchmarks and tests gate on:
     of continuous batching is keeping this near 100 under a request stream;
     the drain-then-refill baseline collapses it as slots empty out.
   * ``tok_per_s``      — generated tokens per wall second across the batch.
-  * ``admitted`` / ``finished`` — request throughput accounting.
+  * ``admitted`` / ``finished`` / ``deferrals`` — request throughput
+    accounting; ``deferrals`` counts admission attempts pushed back by the
+    paged KV pool (OOM surfaces as deferred admission, never a crash).
   * ``ttft_s`` / ``ttft_steps`` — per-request time-to-first-token.
     ``ttft_s`` counts wall seconds from *submission*, so it includes queue
     wait — the component drain-then-refill's waves inflate. ``ttft_steps``
-    counts decode steps from admission, which equals the prompt length under
-    prefill-as-decode.
+    counts decode steps from admission: ``ceil(prompt_len / prefill_chunk)``
+    under chunked prefill (== prompt length at chunk 1).
+  * ``prompt_tokens`` vs ``tokens_generated`` — prefill vs decode token
+    counts (``prefill_tokens`` / ``decode_tokens`` in the JSON rollup).
+  * ``kv_blocks_total`` / ``kv_blocks_peak`` — paged-KV pool pressure
+    (``kv_blocks_peak_pct`` is the blocks-in-use high-water mark).
+
+Zero-request edge cases are defined, not exceptions: with nothing finished,
+``tok_per_s``/``occupancy_pct`` report 0.0 and the TTFT means report None.
 
 ``as_dict()`` is the JSON rollup ``benchmarks/bench_serve.py`` writes and
-``benchmarks/check_regression.py`` gates in CI.
+``benchmarks/check_regression.py`` gates in CI; ``from_dict`` round-trips it
+(raw TTFT samples ride along in the dict precisely so nothing derived is
+lost), so archived bench artifacts can be reloaded for analysis.
 """
 from __future__ import annotations
 
@@ -29,9 +40,12 @@ class ServeMetrics:
     active_slot_steps: int = 0
     admitted: int = 0
     finished: int = 0
+    deferrals: int = 0
     tokens_generated: int = 0
     prompt_tokens: int = 0
     wall_s: float = 0.0
+    kv_blocks_total: int = 0
+    kv_blocks_peak: int = 0
     ttft_s: list[float] = dataclasses.field(default_factory=list)
     ttft_steps: list[int] = dataclasses.field(default_factory=list)
 
@@ -49,12 +63,21 @@ class ServeMetrics:
         return self.tokens_generated / self.wall_s if self.wall_s > 0 else 0.0
 
     @property
-    def mean_ttft_s(self) -> float:
-        return sum(self.ttft_s) / len(self.ttft_s) if self.ttft_s else 0.0
+    def mean_ttft_s(self) -> float | None:
+        """Mean submission-to-first-token wall seconds; None before any
+        request produced a token (0.0 would read as an impossibly great
+        TTFT in dashboards)."""
+        return sum(self.ttft_s) / len(self.ttft_s) if self.ttft_s else None
 
     @property
-    def mean_ttft_steps(self) -> float:
-        return sum(self.ttft_steps) / len(self.ttft_steps) if self.ttft_steps else 0.0
+    def mean_ttft_steps(self) -> float | None:
+        return sum(self.ttft_steps) / len(self.ttft_steps) if self.ttft_steps else None
+
+    @property
+    def kv_blocks_peak_pct(self) -> float:
+        """Blocks-in-use high-water mark as % of the paged pool (0 = dense)."""
+        return 100.0 * self.kv_blocks_peak / self.kv_blocks_total \
+            if self.kv_blocks_total else 0.0
 
     def as_dict(self) -> dict:
         return {
@@ -65,10 +88,29 @@ class ServeMetrics:
             "occupancy_pct": self.occupancy_pct,
             "admitted": self.admitted,
             "finished": self.finished,
+            "deferrals": self.deferrals,
             "tokens_generated": self.tokens_generated,
             "prompt_tokens": self.prompt_tokens,
+            # prefill vs decode split under the names the bench JSON uses
+            "prefill_tokens": self.prompt_tokens,
+            "decode_tokens": self.tokens_generated,
             "wall_s": self.wall_s,
             "tok_per_s": self.tok_per_s,
             "mean_ttft_s": self.mean_ttft_s,
             "mean_ttft_steps": self.mean_ttft_steps,
+            "kv_blocks_total": self.kv_blocks_total,
+            "kv_blocks_peak": self.kv_blocks_peak,
+            "kv_blocks_peak_pct": self.kv_blocks_peak_pct,
+            "ttft_s": list(self.ttft_s),
+            "ttft_steps": list(self.ttft_steps),
         }
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "ServeMetrics":
+        """Rebuild from ``as_dict()`` output (e.g. a bench JSON artifact);
+        derived fields are recomputed, so round-tripping is lossless."""
+        fields = {f.name for f in dataclasses.fields(cls)}
+        kw = {k: v for k, v in d.items() if k in fields}
+        kw["ttft_s"] = list(d.get("ttft_s", ()))
+        kw["ttft_steps"] = list(d.get("ttft_steps", ()))
+        return cls(**kw)

@@ -11,25 +11,44 @@ deployment needs, vLLM-style but reduced to its core:
     additionally invalidated logically by the per-row validity masks in
     models/attention.py), so batch occupancy stays saturated under a request
     stream instead of draining to one straggler;
+  * **paged KV** (``kv="paged"``): attention caches become a pool of
+    fixed-size token blocks (serve/kv_pool.py) shared by every slot — memory
+    scales with tokens actually resident, not slots x worst-case ``max_seq``,
+    and a single long prompt can span blocks a dense layout could never give
+    one slot. Admission is reservation-gated: a request the pool cannot
+    guarantee is *deferred*, never admitted into a future OOM. The dense
+    layout stays as the bit-for-bit reference (parity pinned in
+    tests/test_serving_cb.py);
+  * **chunked stepping** (``prefill_chunk=C``): each fused step advances
+    every active slot by up to C tokens (an inner masked scan — one device
+    program, C sub-steps). Prefilling slots chew C prompt tokens per step,
+    so time-to-first-token drops ~C× in steps; decoding slots emit up to C
+    tokens per step (the host truncates at ``max_new_tokens``), amortizing
+    per-step dispatch ~C×. Mid-run admission between steps is untouched,
+    and C=1 reproduces the one-token engine exactly — any C is token-exact
+    against it because each sub-step IS a one-token step;
   * prefill-as-decode per slot with per-slot stop handling (max_new_tokens /
     max_seq), greedy or temperature sampling restricted to the true
     (unpadded) vocab;
   * one fused device program per step: next-token selection (prompt feed vs
     last sample), decode, sampling, and position advance all trace into a
-    single jitted call over device arrays — tokens, per-slot positions, and
-    the active mask; the host loop only does request bookkeeping on the
-    step's (sampled, emitted) output;
+    single jitted call over device arrays — tokens, per-slot positions, the
+    active mask, and (paged) the block tables; the host loop only does
+    request bookkeeping on the step's (sampled, emitted) output;
   * mesh-backed serving: ``BatchedServer(mesh=...)`` shards the KV/state
-    caches over the ``data`` axis (slots) and ``model`` axis (heads /
-    features) via ``dist.meshes.SERVE_CACHE_RULES``, with the same
-    divisibility-fallback bookkeeping ``Engine.sharded_path`` uses;
-  * a ``serve.metrics.ServeMetrics`` rollup (occupancy %, admitted/finished,
-    tok/s, time-to-first-token) so benchmarks and tests assert saturation.
+    caches over the ``data`` axis (slots for dense caches, *blocks* for the
+    paged pool) and ``model`` axis (heads / features) via
+    ``dist.meshes.SERVE_CACHE_RULES``, with the same divisibility-fallback
+    bookkeeping ``Engine.sharded_path`` uses;
+  * a ``serve.metrics.ServeMetrics`` rollup (occupancy %, admitted/finished/
+    deferrals, tok/s, TTFT, prefill vs decode tokens, blocks-in-use %), so
+    benchmarks and tests assert saturation.
 """
 from __future__ import annotations
 
 import contextlib
 import dataclasses
+import functools
 import time
 
 import jax
@@ -39,7 +58,12 @@ import numpy as np
 from repro.dist import meshes
 from repro.models import model_zoo
 from repro.models.config import ModelConfig
+from repro.serve.kv_pool import PagedKV
 from repro.serve.metrics import ServeMetrics
+
+# cache leaves that stay per-slot (B at axis 1 of the layer-stacked leaf)
+# even under paged KV: recurrent state is O(1) per slot, not per-token
+_PER_SLOT_KEYS = frozenset({"wkv", "shift_t", "shift_c", "ssm", "conv"})
 
 
 @dataclasses.dataclass
@@ -49,14 +73,35 @@ class Request:
     max_new_tokens: int
     out: list[int] = dataclasses.field(default_factory=list)
     done: bool = False
-    # decode steps consumed so far == the slot's current position; one prompt
-    # token or one generation per step (prefill-as-decode)
+    # fused steps consumed so far; one step advances a slot by up to
+    # ``prefill_chunk`` tokens, so TTFT in steps is ceil(prompt_len / chunk)
     steps: int = 0
     submit_s: float | None = None  # wall clock at submission (queue entry)
     admit_s: float | None = None  # wall clock at admission into a slot
     # wall seconds from submission to first generated token — includes queue
     # wait, which is exactly what drain-then-refill's waves inflate
     ttft_s: float | None = None
+
+
+def _leaf_key(path) -> str | None:
+    k = path[-1] if path else None
+    return getattr(k, "key", None)
+
+
+def _reset_slot_rows(cache, idx, paged: bool):
+    """Zero the batch rows listed in ``idx`` (padded with out-of-range
+    sentinels, which the scatter drops) across the per-slot cache leaves.
+    Leaves are layer-stacked (L, B, ...): rows live on axis 1; with donation
+    this is an in-place row write, not a whole-cache rebuild. Under paged KV
+    only the recurrent per-slot leaves are touched — block-pool leaves have
+    no slot rows; recycled blocks are invalidated by the validity masks."""
+
+    def zero(path, c):
+        if paged and _leaf_key(path) not in _PER_SLOT_KEYS:
+            return c
+        return c.at[:, idx].set(jnp.zeros((), c.dtype))
+
+    return jax.tree_util.tree_map_with_path(zero, cache)
 
 
 class BatchedServer:
@@ -66,11 +111,20 @@ class BatchedServer:
     refills freed slots mid-run; ``"drain"`` is the static-batch ablation that
     only admits when every slot is empty (drain-then-refill) — the baseline
     ``benchmarks/bench_serve.py`` measures continuous batching against.
+
+    ``kv`` picks the cache layout: ``"dense"`` (reference; every slot owns a
+    ``max_seq`` row) or ``"paged"`` (block pool, ``block_size`` tokens per
+    block, ``kv_blocks`` total — default dense-equivalent capacity). Models
+    with no attention cache (pure recurrent) silently serve dense; the
+    effective layout is ``server.kv_mode``. ``prefill_chunk`` sets the
+    chunked-prefill width C (1 = classic one-token prefill).
     """
 
     def __init__(self, cfg: ModelConfig, params, batch_slots: int, max_seq: int,
                  temperature: float = 0.0, seed: int = 0, mesh=None,
-                 param_specs=None, admission: str = "continuous"):
+                 param_specs=None, admission: str = "continuous",
+                 kv: str = "dense", block_size: int = 16,
+                 kv_blocks: int | None = None, prefill_chunk: int = 1):
         if cfg.family == "encdec":
             raise ValueError(
                 "BatchedServer serves decoder-only families; enc-dec decode "
@@ -78,18 +132,40 @@ class BatchedServer:
             )
         if admission not in ("continuous", "drain"):
             raise ValueError(f"admission must be continuous|drain, got {admission!r}")
+        if kv not in ("dense", "paged"):
+            raise ValueError(f"kv must be dense|paged, got {kv!r}")
+        if prefill_chunk < 1:
+            raise ValueError(f"prefill_chunk must be >= 1, got {prefill_chunk}")
+        if kv == "paged" and block_size < 1:
+            raise ValueError(f"block_size must be >= 1, got {block_size}")
         self.cfg = cfg
         self.params = params
         self.slots = batch_slots
         self.max_seq = max_seq
         self.temperature = float(temperature)
         self.admission = admission
-        self.cache = model_zoo.make_cache(cfg, batch_slots, max_seq)
+        self.prefill_chunk = int(prefill_chunk)
+        # pure-recurrent models have no per-token cache to page
+        self.kv_mode = kv if not (kv == "paged" and cfg.family == "ssm") else "dense"
+        if self.kv_mode == "paged":
+            self._paged = PagedKV.for_model(cfg, batch_slots, max_seq,
+                                            block_size, kv_blocks)
+            ring = self._paged.ring
+            self.cache = model_zoo.make_paged_cache(
+                cfg, batch_slots, self._paged.pool.num_blocks, block_size,
+                ring_num_blocks=ring.num_blocks if ring is not None else 0,
+                ring_width=self._paged.ring_width,
+            )
+        else:
+            self._paged = None
+            self.cache = model_zoo.make_cache(cfg, batch_slots, max_seq)
         self.key = jax.random.PRNGKey(seed)
         self.active: list[Request | None] = [None] * batch_slots
         self.queue: list[Request] = []
         self.finished: list[Request] = []
         self.metrics = ServeMetrics(slots=batch_slots)
+        if self._paged is not None:
+            self.metrics.kv_blocks_total = self._paged.pool.num_blocks
 
         # per-slot device-program state (held as host numpy, shipped to the
         # device as tiny arrays each step; the cache stays resident on device)
@@ -101,6 +177,11 @@ class BatchedServer:
         # the prompt buffer is the one per-slot array that is not O(slots):
         # keep its device copy resident and refresh it only on admission
         self._prompt_buf_dev = jnp.asarray(self._prompt_buf)
+        # block tables ship as tiny int32 arrays, refreshed only when the
+        # allocator maps or releases blocks (dense mode passes empty dummies)
+        self._no_table = jnp.zeros((0,), jnp.int32)
+        self._table_dev = self._ring_dev = self._no_table
+        self._tables_fresh = False
 
         self.mesh = mesh
         self.last_sharded_path: tuple | None = None
@@ -108,8 +189,9 @@ class BatchedServer:
             self.last_sharded_path = self.sharded_path(mesh)
             with meshes.use_mesh(mesh):
                 cache_sh = meshes.tree_shardings(
-                    model_zoo.cache_specs(self.cache), self.cache, mesh,
-                    rules=meshes.SERVE_CACHE_RULES,
+                    model_zoo.cache_specs(self.cache,
+                                          paged=self._paged is not None),
+                    self.cache, mesh, rules=meshes.SERVE_CACHE_RULES,
                 )
                 self.cache = jax.device_put(self.cache, cache_sh)
                 if param_specs is not None:
@@ -124,21 +206,34 @@ class BatchedServer:
         # + output cache buffers live — a 2x peak that matters at multi-GB
         # KV-cache scale
         self._step_fn = jax.jit(self._build_step(), donate_argnums=(1,))
-        self._reset_fn = jax.jit(self._reset_slots, donate_argnums=(0,))
+        self._reset_fn = jax.jit(
+            functools.partial(_reset_slot_rows, paged=self._paged is not None),
+            donate_argnums=(0,),
+        )
 
     # -- sharding ------------------------------------------------------------
     def sharded_path(self, mesh) -> tuple:
         """Decide how the serving caches shard on ``mesh``: returns
-        ``("gspmd", data_axes, model_axis)``. The cache batch (slot) dim goes
-        over the data axes when the slot count divides them; head/feature
-        dims go over the model axis when the family has a head-partitioned
-        cache tensor that divides it. Divisibility drops are recorded in
-        ``meshes.fallbacks()`` — the same bookkeeping ``Engine.sharded_path``
-        uses — and the dropped dim stays replicated (GSPMD still shards
-        whatever per-tensor dims do resolve)."""
+        ``("gspmd", data_axes, model_axis)``. The cache batch (slot) dim — or
+        the block-pool dim under paged KV — goes over the data axes when it
+        divides them; head/feature dims go over the model axis when the
+        family has a head-partitioned cache tensor that divides it.
+        Divisibility drops are recorded in ``meshes.fallbacks()`` — the same
+        bookkeeping ``Engine.sharded_path`` uses — and the dropped dim stays
+        replicated (GSPMD still shards whatever per-tensor dims do resolve).
+        """
         data = meshes.mesh_data_axes(mesh)
         n_data = meshes.mesh_axis_size(mesh, *data) if data else 1
-        if data and self.slots % n_data != 0:
+        if self._paged is not None:
+            nb = self._paged.pool.num_blocks
+            if data and nb % n_data != 0:
+                meshes.record_fallback(
+                    "serve_cache", "kv_blocks", 1,
+                    f"paged pool of {nb} blocks not divisible by data axes "
+                    f"{data}={n_data}; block pool stays replicated",
+                )
+                data = ()
+        elif data and self.slots % n_data != 0:
             meshes.record_fallback(
                 "serve_cache", "batch", 0,
                 f"batch slots {self.slots} not divisible by data axes "
@@ -178,11 +273,26 @@ class BatchedServer:
     def submit(self, req: Request):
         if not req.prompt:
             raise ValueError(f"request {req.rid}: empty prompt")
+        if req.max_new_tokens < 1:
+            raise ValueError(
+                f"request {req.rid}: max_new_tokens must be >= 1, "
+                f"got {req.max_new_tokens}"
+            )
         if len(req.prompt) >= self.max_seq:
             raise ValueError(
                 f"request {req.rid}: prompt len {len(req.prompt)} >= "
                 f"max_seq {self.max_seq}"
             )
+        if self._paged is not None:
+            full, _ = self._paged.required(len(req.prompt), req.max_new_tokens,
+                                           self.prefill_chunk)
+            if full > self._paged.pool.num_blocks:
+                # deferral only makes sense when finish-time releases can
+                # ever satisfy it; an impossible request must fail loudly
+                raise ValueError(
+                    f"request {req.rid}: needs {full} KV blocks but the pool "
+                    f"only has {self._paged.pool.num_blocks}"
+                )
         req.submit_s = time.perf_counter()
         self.queue.append(req)
 
@@ -195,7 +305,20 @@ class BatchedServer:
         now = time.perf_counter()
         for slot in range(self.slots):
             if self.active[slot] is None and self.queue:
+                head = self.queue[0]
+                if self._paged is not None and not self._paged.can_admit(
+                    len(head.prompt), head.max_new_tokens, self.prefill_chunk
+                ):
+                    # the pool cannot guarantee this request's worst-case
+                    # block demand: defer (FIFO head-of-line — skipping ahead
+                    # would starve long prompts) until finish-time releases
+                    # free capacity. Never admit into a future OOM.
+                    self.metrics.deferrals += 1
+                    break
                 req = self.queue.pop(0)
+                if self._paged is not None:
+                    self._paged.admit(slot, len(req.prompt),
+                                      req.max_new_tokens, self.prefill_chunk)
                 self.active[slot] = req
                 req.steps = 0
                 req.admit_s = now
@@ -208,29 +331,19 @@ class BatchedServer:
                 self.metrics.admitted += 1
                 newly.append(slot)
         if newly:
-            # reset the freed slots' cache rows: recurrent state (wkv/ssm/
-            # conv/shift) must start from zeros; KV rows get zeroed too,
-            # belt-and-braces on top of the per-row validity masks. Fixed
-            # (slots,) index vector padded with an out-of-range sentinel
-            # (scatter drops OOB rows) keeps this a single compiled program
-            # that only writes the admitted rows — continuous batching calls
-            # it per admission, so it must not touch the whole cache
+            # reset the freed slots' per-slot cache rows: recurrent state
+            # (wkv/ssm/conv/shift) must start from zeros; dense KV rows get
+            # zeroed too, belt-and-braces on top of the per-row validity
+            # masks (paged block pools skip this — recycled blocks are
+            # invalidated by the masks alone). Fixed (slots,) index vector
+            # padded with an out-of-range sentinel (scatter drops OOB rows)
+            # keeps this a single compiled program that only writes the
+            # admitted rows — continuous batching calls it per admission, so
+            # it must not touch the whole cache
             idx = np.full(self.slots, self.slots, np.int32)
             idx[: len(newly)] = newly
             self.cache = self._reset_fn(self.cache, jnp.asarray(idx))
             self._prompt_buf_dev = jnp.asarray(self._prompt_buf)
-
-    @staticmethod
-    def _reset_slots(cache, idx):
-        """Zero the batch rows listed in ``idx`` (padded with out-of-range
-        sentinels, which the scatter drops) across every cache leaf. Leaves
-        are layer-stacked (L, B, ...): rows live on axis 1; with donation
-        this is an in-place row write, not a whole-cache rebuild."""
-
-        def zero(c):
-            return c.at[:, idx].set(jnp.zeros((), c.dtype))
-
-        return jax.tree_util.tree_map(zero, cache)
 
     # -- the fused device step -------------------------------------------------
     def _build_step(self):
@@ -238,31 +351,89 @@ class BatchedServer:
         decode = model_zoo.decode_fn(cfg)
         temperature = self.temperature
         vocab = cfg.vocab_size
+        chunk = self.prefill_chunk
+        paged = self._paged
+        if paged is not None:
+            block_size, ring_width = paged.block_size, paged.ring_width
+            max_seq = self.max_seq
+
+        # chunk == 1: every active row runs the (single) sub-step, so the
+        # PR-4 semantics hold as-is — inactive rows' dummy writes land at
+        # their parked position behind the validity masks and are reset on
+        # admission — and skipping the select keeps the donated cache an
+        # in-place update. chunk > 1 needs it: an idle row's recurrent
+        # state must freeze mid-chunk and a horizon-capped row must not
+        # clobber its last KV row, at the cost of a per-sub-step select
+        # (the write-gated dense scatter that would remove it is ROADMAP'd).
+        gate_idle_rows = chunk > 1
+
+        def select_rows(run, new, old):
+            """Keep ``old`` for rows that did not run this sub-step. Cache
+            leaves carry the slot dim at axis 1 ((L, B, ...)); paged block
+            leaves have no slot rows — their writes were already gated by
+            the write-ok sentinel inside the attention scatter."""
+
+            def one(path, n, o):
+                if paged is not None and _leaf_key(path) not in _PER_SLOT_KEYS:
+                    return n
+                m = run.reshape((1, run.shape[0]) + (1,) * (n.ndim - 2))
+                return jnp.where(m, n, o)
+
+            return jax.tree_util.tree_map_with_path(one, new, old)
+
+        seq_limit = self.max_seq
 
         def step(params, cache, positions, prompt_buf, prompt_len, last_tok,
-                 active, key):
+                 active, key, table, ring_table):
             b = positions.shape[0]
             rows = jnp.arange(b)
-            # next input per slot: prompt token while prefilling, else the
-            # last sampled token; inactive slots feed a dummy 0 at their
-            # parked position (their writes are reset on admission)
-            in_prompt = positions < prompt_len
-            idx = jnp.clip(positions, 0, prompt_buf.shape[1] - 1)
-            tok = jnp.where(in_prompt, prompt_buf[rows, idx], last_tok)
-            tok = jnp.where(active, tok, 0).astype(jnp.int32)
-            logits, cache = decode(params, tok, cache, positions)
-            logits = logits[:, :vocab].astype(jnp.float32)
-            if temperature > 0:
-                key, sub = jax.random.split(key)
-                nxt = jax.random.categorical(sub, logits / temperature, axis=-1)
-            else:
-                nxt = jnp.argmax(logits, axis=-1)
-            nxt = nxt.astype(jnp.int32)
-            # the sample is a real generation once the prompt is consumed
-            emitted = active & (positions + 1 >= prompt_len)
-            positions = jnp.where(active, positions + 1, positions)
-            last_tok = jnp.where(active, nxt, last_tok)
-            return cache, positions, last_tok, key, nxt, emitted
+
+            # chunked stepping: C masked sub-steps inside the ONE jitted
+            # program, each one a full one-token decode for every running
+            # slot (prefill feeds the prompt buffer, decode feeds the last
+            # sample — every sub-step does useful work for every row). Rows
+            # at the max_seq horizon idle with cache/state/position frozen,
+            # so C=1 reproduces the one-token engine bit for bit and any C
+            # is token-exact against it.
+            def substep(carry, _):
+                cache, positions, last_tok, key = carry
+                run = active & (positions < seq_limit)
+                in_prompt = positions < prompt_len
+                idx = jnp.clip(positions, 0, prompt_buf.shape[1] - 1)
+                tok = jnp.where(in_prompt, prompt_buf[rows, idx], last_tok)
+                tok = jnp.where(run, tok, 0).astype(jnp.int32)
+                if paged is not None:
+                    ctx = {
+                        "table": table, "ring_table": ring_table,
+                        "write_ok": run, "block_size": block_size,
+                        "ring_width": ring_width, "max_seq": max_seq,
+                    }
+                    logits, new_cache = decode(params, tok, cache, positions,
+                                               paged=ctx)
+                else:
+                    logits, new_cache = decode(params, tok, cache, positions)
+                cache = (select_rows(run, new_cache, cache)
+                         if gate_idle_rows else new_cache)
+                logits = logits[:, :vocab].astype(jnp.float32)
+                if temperature > 0:
+                    key, sub = jax.random.split(key)
+                    nxt = jax.random.categorical(sub, logits / temperature,
+                                                 axis=-1)
+                else:
+                    nxt = jnp.argmax(logits, axis=-1)
+                nxt = nxt.astype(jnp.int32)
+                # the sample is a real generation once the prompt is consumed
+                emit = run & (positions + 1 >= prompt_len)
+                positions = jnp.where(run, positions + 1, positions)
+                last_tok = jnp.where(run, nxt, last_tok)
+                return (cache, positions, last_tok, key), (nxt, emit)
+
+            init = (cache, positions, last_tok, key)
+            (cache, positions, last_tok, key), (toks, emits) = jax.lax.scan(
+                substep, init, None, length=chunk
+            )
+            # toks/emits: (C, B) — the host truncates at max_new_tokens
+            return cache, positions, last_tok, key, toks, emits
 
         return step
 
@@ -270,7 +441,31 @@ class BatchedServer:
     def step(self):
         """Admit into free slots, then one fused decode step across all slots."""
         self._admit()
+        # t0 before block allocation: the paged-only host work (ensure_step
+        # + table upload) must count against paged wall time, or the
+        # CI-gated paged-vs-dense tok/s ratio flatters paged
         t0 = time.perf_counter()
+        if self._paged is not None:
+            # alloc-on-write: map blocks for the rows each slot writes this
+            # step (guaranteed to succeed — admission reserved the worst case)
+            changed = False
+            for i, req in enumerate(self.active):
+                if req is None:
+                    continue
+                pos = int(self._positions[i])
+                n = min(self.prefill_chunk, self.max_seq - pos)
+                if n > 0:
+                    changed |= self._paged.ensure_step(i, pos, n)
+            if changed or not self._tables_fresh:
+                tf, tr = self._paged.tables()
+                self._table_dev = jnp.asarray(tf)
+                self._ring_dev = (jnp.asarray(tr) if tr is not None
+                                  else self._no_table)
+                self._tables_fresh = True
+            self.metrics.kv_blocks_peak = max(
+                self.metrics.kv_blocks_peak, self._paged.pool.blocks_in_use
+            )
+        old_pos = self._positions.copy()
         ctx = (meshes.use_mesh(self.mesh) if self.mesh is not None
                else contextlib.nullcontext())
         with ctx:
@@ -279,10 +474,11 @@ class BatchedServer:
                 jnp.asarray(self._positions), self._prompt_buf_dev,
                 jnp.asarray(self._prompt_len), jnp.asarray(self._last_tok),
                 jnp.asarray(self._active_mask), self.key,
+                self._table_dev, self._ring_dev,
             )
-        self.cache, positions, last_tok, self.key, nxt, emitted = out
-        nxt = np.asarray(nxt)
-        emitted = np.asarray(emitted)  # sync point: one per step
+        self.cache, positions, last_tok, self.key, toks, emits = out
+        toks = np.asarray(toks)  # (C, B)
+        emits = np.asarray(emits)  # sync point: one per step
         # np.array (not asarray): device arrays view as read-only numpy, and
         # _admit writes these in place on admission
         self._positions = np.array(positions)
@@ -290,32 +486,47 @@ class BatchedServer:
         now = time.perf_counter()
 
         n_active = 0
+        generated = 0
         for i, req in enumerate(self.active):
             if req is None:
                 continue
             n_active += 1
             req.steps += 1
-            if emitted[i]:
-                req.out.append(int(nxt[i]))
+            plen = int(self._prompt_len[i])
+            # prefill vs decode token split: prompt tokens fed this step
+            # (chunked stepping feeds up to C), generations counted on emit
+            self.metrics.prompt_tokens += (
+                min(int(self._positions[i]), plen) - min(int(old_pos[i]), plen)
+            )
+            for j in range(toks.shape[0]):
+                # truncate at max_new: the device may over-generate up to
+                # C-1 tokens in the final chunk of a request
+                if not emits[j, i] or len(req.out) >= req.max_new_tokens:
+                    continue
+                req.out.append(int(toks[j, i]))
+                generated += 1
                 if req.ttft_s is None:
                     req.ttft_s = now - req.submit_s
                     self.metrics.ttft_s.append(req.ttft_s)
                     self.metrics.ttft_steps.append(req.steps)
-            else:
-                self.metrics.prompt_tokens += 1
-            if len(req.out) >= req.max_new_tokens or req.steps >= self.max_seq:
+            if (len(req.out) >= req.max_new_tokens
+                    or int(self._positions[i]) >= self.max_seq):
                 req.done = True
                 self.finished.append(req)
                 self.active[i] = None
                 self._active_mask[i] = False
                 self.metrics.finished += 1
+                if self._paged is not None:
+                    self._paged.release(i)  # free-on-finish
+                    self._tables_fresh = False
         self.metrics.steps += 1
         self.metrics.active_slot_steps += n_active
-        self.metrics.tokens_generated += int(emitted.sum())
+        self.metrics.tokens_generated += generated
         self.metrics.wall_s += now - t0
 
     def reset_metrics(self):
-        self.metrics = ServeMetrics(slots=self.slots)
+        kv_total = self.metrics.kv_blocks_total
+        self.metrics = ServeMetrics(slots=self.slots, kv_blocks_total=kv_total)
 
     def run(self, max_steps: int | None = None) -> list[Request]:
         """Step until queue and slots drain (or ``max_steps``); returns ALL

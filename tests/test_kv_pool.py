@@ -1,0 +1,211 @@
+"""Property tests for the paged KV block allocator (serve/kv_pool.py).
+
+A randomized request lifecycle — admit / alloc-on-write extension / release
+interleavings driven by a seeded RNG — must preserve the allocator
+invariants after EVERY operation:
+
+  * no double allocation: a physical block id is mapped by at most one
+    (slot, logical-block) entry, and never while also on the free list;
+  * conservation: ``free + in_use == total``, always;
+  * table/length consistency: each slot's mapped entries are a contiguous
+    prefix of its table row, exactly ``ceil(covered_rows / block_size)`` long;
+  * OOM is deferral, not a crash: when ``can_admit`` says no, admitting
+    raises ``PoolExhausted`` *without corrupting state*, and a request that
+    was admitted can always map every block its reservation covers.
+
+Runs under real ``hypothesis`` when installed, else the deterministic
+``tests/_hypothesis_fallback.py`` shim conftest.py registers.
+"""
+import random
+
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.serve.kv_pool import KVBlockPool, PagedKV, PoolExhausted, blocks_for
+
+
+# ------------------------------ unit edges ------------------------------------
+def test_blocks_for():
+    assert blocks_for(0, 8) == 0
+    assert blocks_for(1, 8) == 1
+    assert blocks_for(8, 8) == 1
+    assert blocks_for(9, 8) == 2
+    assert blocks_for(-3, 8) == 0
+
+
+def test_pool_rejects_bad_shapes():
+    with pytest.raises(ValueError, match="bad pool shape"):
+        KVBlockPool(8, 0, 2, 4)
+    with pytest.raises(ValueError, match="bad pool shape"):
+        KVBlockPool(-1, 4, 2, 4)
+
+
+def test_admit_release_cycle_and_oom_defers():
+    pool = KVBlockPool(num_blocks=4, block_size=2, slots=3, blocks_per_slot=4)
+    pool.admit(0, 3)
+    assert pool.reserved_blocks == 3 and pool.blocks_in_use == 0
+    # 3 of 4 blocks promised: a 2-block request must be deferred...
+    assert not pool.can_admit(2)
+    with pytest.raises(PoolExhausted):
+        pool.admit(1, 2)
+    pool.check()  # ...and the failed admit corrupted nothing
+    assert pool.can_admit(1)
+    pool.admit(1, 1)
+    # alloc-on-write consumes the reservation as rows are covered
+    assert pool.ensure(0, 5) is True  # rows 0..5 -> 3 blocks
+    assert pool.n_mapped[0] == 3 and pool.reserved_blocks == 1
+    assert pool.ensure(0, 5) is False  # idempotent: nothing new to map
+    pool.check()
+    assert pool.release(0) == 3
+    # slot 1 still holds its 1-block reservation: 4 free, 3 admittable
+    assert pool.free_blocks == 4 and pool.can_admit(3) and not pool.can_admit(4)
+    pool.check()
+
+
+def test_admit_occupied_slot_rejected():
+    pool = KVBlockPool(8, 2, 2, 4)
+    pool.admit(0, 2)
+    with pytest.raises(ValueError, match="already holds"):
+        pool.admit(0, 1)
+    pool.ensure(0, 0)
+    pool.release(0)
+    pool.admit(0, 2)  # fine after release
+
+
+def test_ensure_beyond_blocks_per_slot_rejected():
+    pool = KVBlockPool(8, 2, 2, 2)
+    pool.admit(0, 2)
+    with pytest.raises(ValueError, match="blocks_per_slot"):
+        pool.ensure(0, 4)  # row 4 -> 3 blocks > 2 per slot
+
+
+def test_table_array_clamps_unmapped():
+    pool = KVBlockPool(4, 2, 2, 2)
+    pool.admit(0, 1)
+    pool.ensure(0, 0)
+    t = pool.table_array()
+    assert t.min() >= 0, "unmapped entries must clamp to block 0 (jax gathers wrap -1)"
+    assert t[0, 0] == pool.table[0, 0]
+
+
+# --------------------------- property: lifecycles -----------------------------
+@settings(max_examples=30, deadline=None)
+@given(
+    seed=st.integers(0, 10_000),
+    num_blocks=st.integers(1, 24),
+    block_size=st.integers(1, 8),
+    slots=st.integers(1, 6),
+    n_ops=st.integers(5, 60),
+)
+def test_random_lifecycles_preserve_invariants(seed, num_blocks, block_size,
+                                               slots, n_ops):
+    """Random admit/extend/release interleavings through the admission
+    protocol: invariants hold after every op and OOM only ever defers."""
+    rng = random.Random(seed)
+    max_seq = 4 * block_size
+    per_slot = blocks_for(max_seq, block_size)
+    pool = KVBlockPool(num_blocks, block_size, slots, per_slot)
+    # model state: slot -> (target_rows, covered_rows); None = empty
+    live: dict[int, list[int]] = {}
+
+    for _ in range(n_ops):
+        op = rng.choice(("admit", "extend", "release"))
+        if op == "admit":
+            slot = rng.randrange(slots)
+            if slot in live:
+                continue
+            rows = rng.randint(1, max_seq)
+            need = blocks_for(rows, block_size)
+            if pool.can_admit(need):
+                pool.admit(slot, need)
+                live[slot] = [rows, 0]
+            else:
+                # OOM defers: admitting anyway must raise, not corrupt
+                with pytest.raises(PoolExhausted):
+                    pool.admit(slot, need)
+        elif op == "extend" and live:
+            slot = rng.choice(list(live))
+            rows, covered = live[slot]
+            if covered >= rows:
+                continue
+            covered = rng.randint(covered + 1, rows)
+            # the admission guarantee: within the reservation, ensure NEVER
+            # raises no matter how the pool is otherwise loaded
+            pool.ensure(slot, covered - 1)
+            live[slot][1] = covered
+            assert pool.n_mapped[slot] == blocks_for(covered, block_size)
+        elif op == "release" and live:
+            slot = rng.choice(list(live))
+            freed = pool.release(slot)
+            assert freed == blocks_for(live[slot][1], block_size)
+            del live[slot]
+        pool.check()  # conservation + no-double-alloc + prefix consistency
+
+    for slot in list(live):
+        pool.release(slot)
+    pool.check()
+    assert pool.blocks_in_use == 0 and pool.free_blocks == num_blocks
+    assert pool.reserved_blocks == 0
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    seed=st.integers(0, 10_000),
+    block_size=st.integers(1, 8),
+    num_blocks=st.integers(1, 16),
+)
+def test_block_ids_unique_across_slots(seed, block_size, num_blocks):
+    """Interleaved alloc-on-write across slots never hands the same physical
+    block to two (slot, logical-block) entries — the property that makes
+    per-row KV scatters collision-free on the device."""
+    rng = random.Random(seed)
+    slots = 4
+    pool = KVBlockPool(num_blocks, block_size, slots, blocks_per_slot=8)
+    admitted = []
+    for slot in range(slots):
+        need = rng.randint(1, min(8, max(1, num_blocks)))
+        if pool.can_admit(need):
+            pool.admit(slot, need)
+            admitted.append((slot, need))
+    # interleave the writes row by row
+    for row in range(8 * block_size):
+        for slot, need in admitted:
+            if row // block_size < need:
+                pool.ensure(slot, row)
+        pool.check()
+    mapped = [int(b) for r in pool.table for b in r if b >= 0]
+    assert len(mapped) == len(set(mapped))
+    assert len(mapped) + pool.free_blocks == num_blocks
+
+
+# ------------------------------ PagedKV composite -----------------------------
+def test_paged_kv_for_model_rejects_recurrent():
+    from repro.configs import get_reduced_config
+
+    with pytest.raises(ValueError, match="no paged attention cache"):
+        PagedKV.for_model(get_reduced_config("rwkv6-3b"), 2, 16, 4)
+
+
+def test_paged_kv_required_and_ring_sizing():
+    import dataclasses
+
+    from repro.configs import get_reduced_config
+
+    cfg = dataclasses.replace(get_reduced_config("hymba-1.5b"),
+                              n_global_layers=1)  # force a real SWA segment
+    kv = PagedKV.for_model(cfg, slots=2, max_seq=24, block_size=5)
+    assert kv.ring_width == min(cfg.swa_window, 24) == 16
+    assert kv.ring is not None and kv.ring.blocks_per_slot == blocks_for(16, 5)
+    # request lifetime: min(max_seq, plen + new - 1) positions
+    full, ring = kv.required(prompt_len=4, max_new=30)
+    assert full == blocks_for(24, 5) and ring == blocks_for(16, 5)
+    full, ring = kv.required(prompt_len=3, max_new=4)
+    assert full == blocks_for(6, 5) == 2 and ring == blocks_for(6, 5)
+    # admission + step coverage + release round-trips both pools
+    kv.admit(0, 4, 30)
+    assert kv.ensure_step(0, 0, 4)
+    assert kv.pool.n_mapped[0] == 1 and kv.ring.n_mapped[0] == 1
+    kv.release(0)
+    kv.pool.check(), kv.ring.check()
+    assert kv.pool.blocks_in_use == 0 and kv.ring.blocks_in_use == 0
