@@ -1,5 +1,6 @@
-"""Serving benchmarks: (1) continuous batching vs drain-then-refill, and
-(2) paged KV + chunked prefill vs the dense one-token reference.
+"""Serving benchmarks: (1) continuous batching vs drain-then-refill,
+(2) paged KV + chunked prefill vs the dense one-token reference, and
+(3) token-level batched stepping vs the chunked engine.
 
 Rung 1 (``serve_stream``): both modes run the SAME fused per-slot decode
 engine (serve.BatchedServer); only the admission discipline differs:
@@ -21,6 +22,19 @@ demonstrates, and CI gates:
   * chunked prefill cuts TTFT steps by >= the gated ratio (~C×);
   * paged+chunked sustains >= the dense tok/s on the stream (it runs
     strictly fewer fused steps; the block-table gather is the overhead).
+
+Rung 3 (``serve_tokbatch``): same engine, paged KV, prefill-heavy stream
+with more requests than slots; the contender flattens live prefill chunks
+and decode tokens into one variable-composition batch per fused step
+(``step_mode="tokens"``) against the chunked gather engine at the same C.
+Chunked pays ``slots * C`` token rows every step whether a row is live or
+not; token batching pays only scheduled tokens, so both the wall tok/s
+ratio (gated >= ``TOKBATCH_SPEEDUP_FLOOR``) and the per-batched-token
+throughput ratio (tok/s normalised by mean rows per step, gated >=
+``TOKBATCH_PER_TOKEN_FLOOR``) must clear their floors. A
+``step_mode="tokens", attn_impl="pallas"`` variant rides along for the
+kernel path (on CPU it dispatches to the gather oracle; the kernel itself
+is exercised by the interpret-mode test suite and on TPU backends).
 
 Because request lengths vary, ``speedup_x`` (tok/s ratio) is a same-machine
 ratio that transfers across runner generations; occupancy_pct and the TTFT
@@ -57,9 +71,24 @@ PAGED_QUICK = dict(QUICK, block_size=4, prefill_chunk=4, horizon_x=2,
 PAGED_FULL = dict(FULL, block_size=8, prefill_chunk=4, horizon_x=2,
                   long_prompt=100, long_new=16)
 
+# tokbatch rung: prefill-heavy (long prompts, short generations) with more
+# requests than slots — the regime where chunked stepping burns slot rows on
+# finished/idle slots and past-prompt-end chunk positions while token-level
+# batching pays only for scheduled tokens
+TOKBATCH_QUICK = dict(arch="internlm2-20b", slots=12, n_requests=24,
+                      prompt_lo=20, prompt_hi=28, new_lo=2, new_hi=4,
+                      max_seq=64, seed=0, reps=5, block_size=4,
+                      prefill_chunk=4)
+TOKBATCH_FULL = dict(arch="internlm2-20b", slots=16, n_requests=48,
+                     prompt_lo=24, prompt_hi=40, new_lo=2, new_hi=6,
+                     max_seq=96, seed=0, reps=5, block_size=8,
+                     prefill_chunk=4)
+
 OCCUPANCY_FLOOR_PCT = 75.0  # continuous batching must stay this saturated
 PAGED_OCCUPANCY_FLOOR_PCT = 65.0  # reservation deferrals cost a little
 TTFT_RATIO_FLOOR = 2.0  # chunked prefill must at least halve TTFT steps
+TOKBATCH_SPEEDUP_FLOOR = 1.2  # token batching tok/s over chunked gather
+TOKBATCH_PER_TOKEN_FLOOR = 1.5  # tok/s per batched token row, ratio floor
 
 
 def _requests(shape: dict, cfg, rid0: int = 0) -> list[Request]:
@@ -263,13 +292,87 @@ def bench_paged(shape: dict, quick: bool = False) -> dict:
     return result
 
 
+# ------------- rung 3: token-level batching vs chunked stepping ---------------
+def bench_tokbatch(shape: dict, quick: bool = False) -> dict:
+    cfg = get_reduced_config(shape["arch"])
+    params, _ = model_zoo.init_params(cfg, jax.random.PRNGKey(1))
+    kw = dict(kv="paged", block_size=shape["block_size"],
+              prefill_chunk=shape["prefill_chunk"])
+    servers = {
+        "chunked": _make_server(cfg, params, shape, **kw),
+        "tokens": _make_server(cfg, params, shape, step_mode="tokens", **kw),
+        "tokens_pallas": _make_server(cfg, params, shape, step_mode="tokens",
+                                      attn_impl="pallas", **kw),
+    }
+    reps: dict[str, list[float]] = {m: [] for m in servers}
+    for rep in range(shape["reps"]):  # interleaved: noise hits every mode
+        for mode, server in servers.items():
+            reps[mode].append(_one_rep(server, cfg, shape, rep))
+    results = {}
+    for mode, server in servers.items():
+        out = server.metrics.as_dict()
+        out["tok_per_s"] = sorted(reps[mode])[len(reps[mode]) // 2]
+        out["tok_per_s_reps"] = reps[mode]
+        # recompute the per-batched-token number from the median tok/s (the
+        # step/batched_tokens counts are deterministic per stream)
+        out["tok_s_per_batched_tok"] = (
+            out["tok_per_s"] / out["step_batched_tokens"]
+            if out["step_batched_tokens"] else 0.0
+        )
+        results[mode] = out
+    ch, tk = results["chunked"], results["tokens"]
+    speedup = tk["tok_per_s"] / ch["tok_per_s"] if ch["tok_per_s"] else 0.0
+    per_tok_ratio = (tk["tok_s_per_batched_tok"] / ch["tok_s_per_batched_tok"]
+                     if ch["tok_s_per_batched_tok"] else 0.0)
+
+    result = {
+        "workload": "serve_tokbatch",
+        "arch": shape["arch"],
+        "slots": shape["slots"],
+        "n_requests": shape["n_requests"],
+        "max_seq": shape["max_seq"],
+        "prefill_chunk": shape["prefill_chunk"],
+        "chunked": ch,
+        "tokens": tk,
+        "tokens_pallas": results["tokens_pallas"],
+        "speedup_x": speedup,
+        "serving": {
+            "tok_s": tk["tok_per_s"],
+            "occupancy_pct": tk["occupancy_pct"],
+            "tok_s_per_batched_tok": tk["tok_s_per_batched_tok"],
+            "tok_s_per_batched_tok_ratio": per_tok_ratio,
+            "tok_s_per_batched_tok_ratio_floor": TOKBATCH_PER_TOKEN_FLOOR,
+        },
+    }
+    if quick:
+        # SystemExit, not assert: gates CI, must survive python -O
+        if tk["batched_tokens"] >= ch["batched_tokens"]:
+            raise SystemExit(
+                f"token batching computed {tk['batched_tokens']} rows vs "
+                f"chunked {ch['batched_tokens']} — the FLOP claim is vacuous"
+            )
+        if speedup < TOKBATCH_SPEEDUP_FLOOR:
+            raise SystemExit(
+                f"token batching {speedup:.2f}x tok/s below the "
+                f"{TOKBATCH_SPEEDUP_FLOOR}x floor over chunked gather"
+            )
+        if per_tok_ratio < TOKBATCH_PER_TOKEN_FLOOR:
+            raise SystemExit(
+                f"per-batched-token throughput ratio {per_tok_ratio:.2f}x "
+                f"below the {TOKBATCH_PER_TOKEN_FLOOR}x floor"
+            )
+    return result
+
+
 def bench_all(quick: bool = False) -> dict:
-    shapes = (QUICK, PAGED_QUICK) if quick else (FULL, PAGED_FULL)
+    shapes = ((QUICK, PAGED_QUICK, TOKBATCH_QUICK) if quick
+              else (FULL, PAGED_FULL, TOKBATCH_FULL))
     return {
         "devices": jax.device_count(),
         "quick": quick,
         "results": [bench(shapes[0], quick=quick),
-                    bench_paged(shapes[1], quick=quick)],
+                    bench_paged(shapes[1], quick=quick),
+                    bench_tokbatch(shapes[2], quick=quick)],
     }
 
 
@@ -297,6 +400,17 @@ def run(csv_rows: list[str]) -> list[str]:
         f";speedup_x={pres['speedup_x']:.2f}"
         f";ttft_ratio={pres['serving']['ttft_steps_ratio']:.2f}"
         f";blocks_peak_pct={pres['kv']['blocks_peak_pct']:.0f}"
+    )
+    tres = bench_tokbatch(TOKBATCH_QUICK, quick=False)
+    tt, tc = tres["tokens"], tres["chunked"]
+    us_per_tok = 1e6 / tt["tok_per_s"] if tt["tok_per_s"] else 0
+    csv_rows.append(
+        f"serve/tokbatch_{tres['arch']},{us_per_tok:.0f},"
+        f"slots={tres['slots']}"
+        f";tokens_tok_s={tt['tok_per_s']:.1f}"
+        f";chunked_tok_s={tc['tok_per_s']:.1f}"
+        f";speedup_x={tres['speedup_x']:.2f}"
+        f";per_brow_x={tres['serving']['tok_s_per_batched_tok_ratio']:.2f}"
     )
     return csv_rows
 
@@ -332,6 +446,16 @@ def main() -> None:
           f"long prompt {rp['long_prompt']['len']} tok "
           f"(dense rejected: {rp['long_prompt']['dense_rejected']}), "
           f"blocks peak {rp['kv']['blocks_peak_pct']:.0f}%")
+    rt = res["results"][2]
+    for name in ("tokens", "tokens_pallas", "chunked"):
+        m = rt[name]
+        print(f"{name:>13}: {m['tok_per_s']:8.1f} tok/s  "
+              f"rows/step {m['step_batched_tokens']:6.1f}  "
+              f"steps {m['steps']:4d}  "
+              f"tok/s/row {m['tok_s_per_batched_tok']:7.2f}")
+    print(f"token batching vs chunked gather: {rt['speedup_x']:.2f}x tok/s, "
+          f"{rt['serving']['tok_s_per_batched_tok_ratio']:.2f}x per batched "
+          f"token row")
     if args.out:
         with open(args.out, "w") as f:
             json.dump(res, f, indent=2)

@@ -23,6 +23,11 @@ Default checks per baseline workload:
     steps / paged+chunked TTFT steps, machine-independent) may not drop
     below the baseline's ``serving.ttft_ratio_floor`` — chunked prefill
     must keep cutting time-to-first-token.
+  * serving format, tokbatch rung: ``serving.tok_s_per_batched_tok_ratio``
+    (token-batched vs chunked throughput per computed token row — the
+    compute normalisation cancels most machine speed) may not drop below
+    the baseline's ``serving.tok_s_per_batched_tok_ratio_floor`` — token-
+    level stepping must keep beating chunked per unit of step compute.
   * with ``--abs-time``, ``pipelined.total_s`` (lower is better) /
     ``serving.tok_s`` (higher is better) are also gated — opt-in because
     absolute wall numbers only compare on identical hardware.
@@ -100,6 +105,15 @@ def check(current: dict, baseline: dict, tol: float, abs_time: bool) -> list[str
                     failures.append(
                         f"{name}: chunked-prefill TTFT ratio {ratio:.2f}x "
                         f"below the {float(ttft_floor):.1f}x floor"
+                    )
+            pbt_floor = base_serv.get("tok_s_per_batched_tok_ratio_floor")
+            if pbt_floor is not None:
+                ratio = float(
+                    cur_serv.get("tok_s_per_batched_tok_ratio", 0.0))
+                if ratio < float(pbt_floor):
+                    failures.append(
+                        f"{name}: per-batched-token throughput ratio "
+                        f"{ratio:.2f}x below the {float(pbt_floor):.1f}x floor"
                     )
             if abs_time:
                 _ratio_check(

@@ -216,6 +216,15 @@ SERVE_CACHE_RULES: dict[str, str | tuple[str, ...] | None] = dict(
     state=None, conv=None, embed=None, block=None,
 )
 
+# Kernel-path variant: the paged-attention Pallas kernel walks the whole
+# block pool through a scalar-prefetched block table (any token may map any
+# physical block), so the pool's block dim must stay replicated — a
+# data-sharded pool would strand most of a slot's blocks off-device. The
+# server records a fallback when a mesh would otherwise have sharded it.
+SERVE_KERNEL_CACHE_RULES: dict[str, str | tuple[str, ...] | None] = dict(
+    SERVE_CACHE_RULES, kv_blocks=None,
+)
+
 
 # ---------------------------------------------------------------------------
 # Current-mesh context + fallback bookkeeping (thread-local: shard_act runs
@@ -428,6 +437,7 @@ __all__ = [
     "FSDP_PARAM_RULES",
     "MODEL_SHARD_RULES",
     "SERVE_CACHE_RULES",
+    "SERVE_KERNEL_CACHE_RULES",
     "Mesh",
     "clear_fallbacks",
     "current_mesh",

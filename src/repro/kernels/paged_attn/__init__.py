@@ -1,0 +1,7 @@
+"""Block-table-aware paged decode attention (Pallas kernel + gather oracle).
+
+``ops.paged_attention`` is the public entry point; ``ref.paged_attn_ref`` is
+the pure-jnp gather oracle the kernel is verified against.
+"""
+from repro.kernels.paged_attn.ops import paged_attention  # noqa: F401
+from repro.kernels.paged_attn.ref import paged_attn_ref  # noqa: F401

@@ -1,0 +1,124 @@
+"""Block-table-aware paged decode attention Pallas kernel (TPU target).
+
+The serving analogue of DAnA's access engine walking page layouts directly:
+instead of gathering a padded ``(T, nb*bs)`` K/V view (the oracle in
+``ref.py``), the kernel's grid walks each token's *mapped* blocks through a
+scalar-prefetched block table — the physical block id feeds the K/V
+BlockSpec index maps, so only the pages a sequence actually owns are ever
+touched, and blocks past the token's position are skipped entirely
+(``pl.when`` on the block's first logical row vs the position).
+
+Grid: ``(T, KVH, nb_slot)`` — one token x kv-head per outer step, inner
+walk over that token's table row. Online-softmax state (running max, sum,
+value accumulator) lives in VMEM scratch, revisited across the sequential
+inner walk and flushed to the output block on the last step.
+
+``ops.py`` pads G to the 8-sublane and Dk/Dv to the 128-lane boundary
+before calling in; ``block_size`` itself is taken as-is (TPU deployments
+want it lane-aligned, the CI interpret path does not care).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG = -1e9
+
+
+def _paged_attn_kernel(table_ref, pos_ref, q_ref, k_ref, v_ref, o_ref,
+                       m_ref, l_ref, acc_ref, *, block_size: int,
+                       ring_width: int, max_rows: int, scale: float,
+                       nb_slot: int):
+    t = pl.program_id(0)
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    p = pos_ref[t]
+    # last logical row this token may read: its own position in the full
+    # region (clamped to max_rows), the whole ring once warm
+    if ring_width:
+        last = jnp.where(p >= ring_width, ring_width - 1, p)
+    else:
+        last = jnp.minimum(p, max_rows - 1)
+
+    @pl.when(j * block_size <= last)
+    def _block():
+        q = q_ref[0, 0].astype(jnp.float32)        # (G, Dk)
+        k = k_ref[0, :, 0, :].astype(jnp.float32)  # (bs, Dk)
+        v = v_ref[0, :, 0, :].astype(jnp.float32)  # (bs, Dv)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        ) * scale                                   # (G, bs)
+        rows = j * block_size + jax.lax.broadcasted_iota(
+            jnp.int32, (1, block_size), 1
+        )
+        if ring_width:
+            valid = (rows < ring_width) & ((rows <= p) | (p >= ring_width))
+        else:
+            valid = (rows <= p) & (rows < max_rows)
+        s = jnp.where(valid, s, NEG)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        alpha = jnp.exp(m_prev - m_new)
+        probs = jnp.exp(s - m_new)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(probs, axis=-1,
+                                                  keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            probs, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        m_ref[...] = m_new
+
+    @pl.when(j == nb_slot - 1)
+    def _flush():
+        o_ref[0, 0] = acc_ref[...] / l_ref[...]
+
+
+def paged_attn_pallas(q, k_pool, v_pool, table, pos, *, block_size: int,
+                      ring_width: int = 0, max_rows: int, scale: float,
+                      interpret: bool = False):
+    """q (T, KVH, G, Dk); k_pool (NB, bs, KVH, Dk); v_pool (NB, bs, KVH, Dv);
+    table (T, nb_slot) int32; pos (T,) int32. Returns (T, KVH, G, Dv) f32.
+    Shapes come in pre-padded from ops.py."""
+    t, kvh, g, dk = q.shape
+    dv = v_pool.shape[-1]
+    nb_slot = table.shape[1]
+    bs = block_size
+    kernel = functools.partial(
+        _paged_attn_kernel, block_size=bs, ring_width=ring_width,
+        max_rows=max_rows, scale=scale, nb_slot=nb_slot,
+    )
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(t, kvh, nb_slot),
+        in_specs=[
+            pl.BlockSpec((1, 1, g, dk), lambda ti, h, j, tbl, ps: (ti, h, 0, 0)),
+            pl.BlockSpec((1, bs, 1, dk),
+                         lambda ti, h, j, tbl, ps: (tbl[ti, j], 0, h, 0)),
+            pl.BlockSpec((1, bs, 1, dv),
+                         lambda ti, h, j, tbl, ps: (tbl[ti, j], 0, h, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, dv),
+                               lambda ti, h, j, tbl, ps: (ti, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((g, 1), jnp.float32),   # running max
+            pltpu.VMEM((g, 1), jnp.float32),   # running denominator
+            pltpu.VMEM((g, dv), jnp.float32),  # value accumulator
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((t, kvh, g, dv), jnp.float32),
+        interpret=interpret,
+    )(table, pos, q, k_pool, v_pool)

@@ -1,0 +1,44 @@
+"""Gather oracle for block-table paged decode attention.
+
+Exactly the math ``models/attention.py`` has always used for paged decode:
+gather every table-mapped block into a padded ``(T, nb*bs, KVH, D)`` view,
+mask invalid rows to NEG (which softmaxes to exactly 0.0 in f32), and run a
+plain softmax attention. The Pallas kernel in ``kernel.py`` must match this
+oracle on every mapped-block pattern — partial trailing blocks, recycled
+(re-mapped, stale-content) blocks, and SWA ring rows included.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG = -1e9
+
+
+def paged_valid(pos, s_pad, ring_width: int, max_rows: int):
+    """(T, s_pad) bool validity over the gathered (ring-ordered for SWA)
+    view. Full region: rows <= pos and rows < max_rows. Ring region: rows <=
+    pos while cold, every ring row once warm, gather padding always dead."""
+    kpos = jnp.arange(s_pad)[None, :]
+    if ring_width:
+        return (kpos < ring_width) & (
+            (kpos <= pos[:, None]) | (pos[:, None] >= ring_width)
+        )
+    return (kpos <= pos[:, None]) & (kpos < max_rows)
+
+
+def paged_attn_ref(q, k_pool, v_pool, table, pos, *, block_size: int,
+                   ring_width: int = 0, max_rows: int, scale: float):
+    """q (T, KVH, G, Dk); k_pool (NB, bs, KVH, Dk); v_pool (NB, bs, KVH, Dv);
+    table (T, nb_slot) int32 physical block ids; pos (T,) int32 positions.
+    Returns (T, KVH, G, Dv) float32."""
+    t, kvh, g, dk = q.shape
+    dv = v_pool.shape[-1]
+    gk = k_pool[table].reshape(t, -1, kvh, dk)
+    gv = v_pool[table].reshape(t, -1, kvh, dv)
+    scores = jnp.einsum("tkgd,tskd->tkgs", q.astype(jnp.float32),
+                        gk.astype(jnp.float32)) * scale
+    valid = paged_valid(pos, gk.shape[1], ring_width, max_rows)
+    scores = scores + jnp.where(valid, 0.0, NEG)[:, None, None, :]
+    probs = jax.nn.softmax(scores.astype(jnp.float32), axis=-1)
+    return jnp.einsum("tkgs,tskd->tkgd", probs, gv.astype(jnp.float32))

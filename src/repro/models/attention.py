@@ -25,6 +25,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.dist.meshes import shard_act
+from repro.kernels.paged_attn import ops as paged_attn_ops
 from repro.models.config import ModelConfig
 from repro.models.layers import apply_norm, apply_rope, make_norm, rope_tables
 from repro.models.params import Maker
@@ -152,10 +153,15 @@ def _batch_pos(pos, b: int):
     return jnp.full((b,), pos) if pos.ndim == 0 else pos
 
 
-def gqa_decode(p, x, cache, pos, cfg: ModelConfig, window=0):
+def gqa_decode(p, x, cache, pos, cfg: ModelConfig, window=0, slot=None,
+               write_ok=None):
     """x (B,1,d); cache {k,v}: (B,S,KVH,D) (full) or (B,W,KVH,D) (SWA ring).
     Returns (out (B,1,d), new_cache). ``pos`` is the current position — a
-    scalar, or a (B,) vector of per-slot positions (continuous batching)."""
+    scalar, or a (B,) vector of per-slot positions (continuous batching).
+    ``slot`` (B,) maps batch rows onto cache rows for the token-batched
+    serving step (several tokens of one sequence flattened into the batch;
+    None keeps the classic row==slot identity); ``write_ok`` (B,) bool gates
+    the cache scatter (padding rows write out of range and are dropped)."""
     b = x.shape[0]
     dt = x.dtype
     pos_b = _batch_pos(pos, b)
@@ -167,10 +173,12 @@ def gqa_decode(p, x, cache, pos, cfg: ModelConfig, window=0):
     q, k = apply_rope(q, cos, sin), apply_rope(k, cos, sin)
 
     s = cache["k"].shape[1]
-    slot = pos_b % s if window else jnp.minimum(pos_b, s - 1)
-    rows = jnp.arange(b)
-    ck = cache["k"].at[rows, slot].set(k[:, 0].astype(cache["k"].dtype))
-    cv = cache["v"].at[rows, slot].set(v[:, 0].astype(cache["v"].dtype))
+    nslots = cache["k"].shape[0]
+    row = pos_b % s if window else jnp.minimum(pos_b, s - 1)
+    rows = jnp.arange(b) if slot is None else slot
+    wrow = rows if write_ok is None else jnp.where(write_ok, rows, nslots)
+    ck = cache["k"].at[wrow, row].set(k[:, 0].astype(cache["k"].dtype))
+    cv = cache["v"].at[wrow, row].set(v[:, 0].astype(cache["v"].dtype))
     ck = shard_act(ck, ("batch", "kv_seq", "kv_heads", "head_dim"), "ck")
     cv = shard_act(cv, ("batch", "kv_seq", "kv_heads", "head_dim"), "cv")
 
@@ -184,8 +192,9 @@ def gqa_decode(p, x, cache, pos, cfg: ModelConfig, window=0):
     valid = kpos <= pos_b[:, None]
     if window:
         valid |= pos_b[:, None] >= s
+    gk, gv = (ck, cv) if slot is None else (ck[slot], cv[slot])
     mask = jnp.where(valid, 0.0, NEG).astype(jnp.float32)[:, None, None, None, :]
-    out = _sdpa(q.reshape(b, 1, kvh, g, hd), ck, cv, mask, 1.0 / math.sqrt(hd))
+    out = _sdpa(q.reshape(b, 1, kvh, g, hd), gk, gv, mask, 1.0 / math.sqrt(hd))
     out = out.reshape(b, 1, cfg.n_heads, hd).astype(dt)
     out = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(dt))
     return out, {"k": ck, "v": cv}
@@ -241,10 +250,13 @@ def _paged_valid(pos_b, s_pad, ring_width, max_rows):
 
 
 def gqa_decode_paged(p, x, cache, pos, cfg: ModelConfig, table, block_size,
-                     ring_width=0, max_seq=None, write_ok=None):
+                     ring_width=0, max_seq=None, write_ok=None,
+                     impl="gather"):
     """Paged variant of ``gqa_decode``: cache {k,v}: (NB, bs, KVH, D) block
     pools; ``table`` (B, nb_slot) int32. ``ring_width`` > 0 selects SWA ring
-    semantics (the table then maps ring rows). Returns (out, new_cache)."""
+    semantics (the table then maps ring rows). ``impl`` picks the attention
+    read path: ``"gather"`` (padded-view reference) or ``"pallas"`` (the
+    block-walking kernel in kernels/paged_attn). Returns (out, new_cache)."""
     b = x.shape[0]
     dt = x.dtype
     pos_b = _batch_pos(pos, b)
@@ -264,14 +276,24 @@ def gqa_decode_paged(p, x, cache, pos, cfg: ModelConfig, table, block_size,
 
     kvh, hd = cfg.n_kv_heads, cfg.hd
     g = cfg.n_heads // kvh
-    gk = ck[table].reshape(b, -1, kvh, hd)
-    gv = cv[table].reshape(b, -1, kvh, hd)
-    valid = _paged_valid(pos_b, gk.shape[1], ring_width,
-                         max_seq if max_seq else gk.shape[1])
-    mask = jnp.where(valid, 0.0, NEG).astype(jnp.float32)[:, None, None, None, :]
-    out = _sdpa(q.reshape(b, 1, kvh, g, hd), gk, gv, mask, 1.0 / math.sqrt(hd))
-    out = out.reshape(b, 1, cfg.n_heads, hd).astype(dt)
-    out = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(dt))
+    max_rows = (max_seq if max_seq is not None
+                else table.shape[1] * block_size)
+    scale = 1.0 / math.sqrt(hd)
+    if impl == "pallas":
+        out = paged_attn_ops.paged_attention(
+            q.reshape(b, kvh, g, hd), ck, cv, table, pos_b,
+            block_size=block_size, ring_width=ring_width,
+            max_rows=max_rows, scale=scale,
+        ).reshape(b, 1, cfg.n_heads, hd)
+    else:
+        gk = ck[table].reshape(b, -1, kvh, hd)
+        gv = cv[table].reshape(b, -1, kvh, hd)
+        valid = _paged_valid(pos_b, gk.shape[1], ring_width, max_rows)
+        mask = jnp.where(valid, 0.0, NEG).astype(
+            jnp.float32)[:, None, None, None, :]
+        out = _sdpa(q.reshape(b, 1, kvh, g, hd), gk, gv, mask, scale)
+        out = out.reshape(b, 1, cfg.n_heads, hd)
+    out = jnp.einsum("bshk,hkd->bsd", out.astype(dt), p["wo"].astype(dt))
     return out, {"k": ck, "v": cv}
 
 
@@ -364,9 +386,11 @@ def mla_train(p, x, cfg: ModelConfig, positions, kind="causal", window=0):
     return shard_act(out, ("batch", "seq", "embed"), "attn_out")
 
 
-def mla_decode(p, x, cache, pos, cfg: ModelConfig):
+def mla_decode(p, x, cache, pos, cfg: ModelConfig, slot=None, write_ok=None):
     """Absorbed-latent decode: cache {c (B,S,kv_lora), kr (B,S,rope)}.
-    ``pos`` is a scalar or a (B,) vector of per-slot positions."""
+    ``pos`` is a scalar or a (B,) vector of per-slot positions. ``slot`` /
+    ``write_ok`` map a flattened token batch onto cache rows exactly as in
+    ``gqa_decode``."""
     dt = x.dtype
     b = x.shape[0]
     pos_b = _batch_pos(pos, b)
@@ -374,34 +398,39 @@ def mla_decode(p, x, cache, pos, cfg: ModelConfig):
     c_t, kr_t = _mla_latent(p, x, cfg, pos_b[:, None])
 
     s = cache["c"].shape[1]
-    slot = jnp.minimum(pos_b, s - 1)
-    rows = jnp.arange(b)
-    c = cache["c"].at[rows, slot].set(c_t[:, 0].astype(cache["c"].dtype))
-    kr = cache["kr"].at[rows, slot].set(kr_t[:, 0].astype(cache["kr"].dtype))
+    nslots = cache["c"].shape[0]
+    row = jnp.minimum(pos_b, s - 1)
+    rows = jnp.arange(b) if slot is None else slot
+    wrow = rows if write_ok is None else jnp.where(write_ok, rows, nslots)
+    c = cache["c"].at[wrow, row].set(c_t[:, 0].astype(cache["c"].dtype))
+    kr = cache["kr"].at[wrow, row].set(kr_t[:, 0].astype(cache["kr"].dtype))
     c = shard_act(c, ("batch", "kv_seq", "lora"), "mla_c")
     kr = shard_act(kr, ("batch", "kv_seq", "head_dim"), "mla_kr")
+    gc, gkr = (c, kr) if slot is None else (c[slot], kr[slot])
 
     w_uk = p["wkv_b"][..., : cfg.qk_nope_head_dim].astype(dt)  # (r, H, nope)
     w_uv = p["wkv_b"][..., cfg.qk_nope_head_dim :].astype(dt)  # (r, H, v)
     q_lat = jnp.einsum("bthk,rhk->bthr", qn, w_uk)  # absorb: query -> latent
-    scores = jnp.einsum("bthr,bsr->bhs", q_lat, c.astype(dt))
-    scores = scores + jnp.einsum("bthk,bsk->bhs", qr, kr.astype(dt))
+    scores = jnp.einsum("bthr,bsr->bhs", q_lat, gc.astype(dt))
+    scores = scores + jnp.einsum("bthk,bsk->bhs", qr, gkr.astype(dt))
     scale = 1.0 / math.sqrt(cfg.qk_nope_head_dim + cfg.qk_rope_head_dim)
     valid = jnp.arange(s)[None, :] <= pos_b[:, None]
     scores = scores.astype(jnp.float32) * scale + jnp.where(valid, 0.0, NEG)[:, None]
     probs = jax.nn.softmax(scores, axis=-1)
-    out_lat = jnp.einsum("bhs,bsr->bhr", probs, c.astype(jnp.float32)).astype(dt)
+    out_lat = jnp.einsum("bhs,bsr->bhr", probs, gc.astype(jnp.float32)).astype(dt)
     out = jnp.einsum("bhr,rhv->bhv", out_lat, w_uv)
     out = jnp.einsum("bhv,hvd->bd", out, p["wo"].astype(dt))[:, None, :]
     return out, {"c": c, "kr": kr}
 
 
 def mla_decode_paged(p, x, cache, pos, cfg: ModelConfig, table, block_size,
-                     max_seq=None, write_ok=None):
+                     max_seq=None, write_ok=None, impl="gather"):
     """Paged variant of ``mla_decode``: cache {c: (NB, bs, kv_lora),
     kr: (NB, bs, rope)} block pools gathered through ``table`` (B, nb_slot).
     The latent cache has no head dim, so paging is the only sharding lever
-    it gets (blocks over the data axes)."""
+    it gets (blocks over the data axes). ``impl="pallas"`` runs the absorbed
+    attention as one MQA call on the block-walking kernel: K is the latent
+    concat [c ; kr] shared by every head, V is the latent c."""
     dt = x.dtype
     b = x.shape[0]
     pos_b = _batch_pos(pos, b)
@@ -415,20 +444,32 @@ def mla_decode_paged(p, x, cache, pos, cfg: ModelConfig, table, block_size,
     c = shard_act(c, ("kv_blocks", "block", "lora"), "mla_c")
     kr = shard_act(kr, ("kv_blocks", "block", "head_dim"), "mla_kr")
 
-    gc = c[table].reshape(b, -1, cfg.kv_lora_rank)
-    gkr = kr[table].reshape(b, -1, cfg.qk_rope_head_dim)
-    s_pad = gc.shape[1]
-
     w_uk = p["wkv_b"][..., : cfg.qk_nope_head_dim].astype(dt)
     w_uv = p["wkv_b"][..., cfg.qk_nope_head_dim :].astype(dt)
     q_lat = jnp.einsum("bthk,rhk->bthr", qn, w_uk)
-    scores = jnp.einsum("bthr,bsr->bhs", q_lat, gc.astype(dt))
-    scores = scores + jnp.einsum("bthk,bsk->bhs", qr, gkr.astype(dt))
     scale = 1.0 / math.sqrt(cfg.qk_nope_head_dim + cfg.qk_rope_head_dim)
-    valid = _paged_valid(pos_b, s_pad, 0, max_seq if max_seq else s_pad)
-    scores = scores.astype(jnp.float32) * scale + jnp.where(valid, 0.0, NEG)[:, None]
-    probs = jax.nn.softmax(scores, axis=-1)
-    out_lat = jnp.einsum("bhs,bsr->bhr", probs, gc.astype(jnp.float32)).astype(dt)
+    max_rows = (max_seq if max_seq is not None
+                else table.shape[1] * block_size)
+    if impl == "pallas":
+        q_eff = jnp.concatenate([q_lat, qr], axis=-1)[:, 0][:, None]
+        k_eff = jnp.concatenate([c, kr], axis=-1)[:, :, None, :]
+        out_lat = paged_attn_ops.paged_attention(
+            q_eff, k_eff, c[:, :, None, :], table, pos_b,
+            block_size=block_size, ring_width=0, max_rows=max_rows,
+            scale=scale,
+        )[:, 0].astype(dt)
+    else:
+        gc = c[table].reshape(b, -1, cfg.kv_lora_rank)
+        gkr = kr[table].reshape(b, -1, cfg.qk_rope_head_dim)
+        s_pad = gc.shape[1]
+        scores = jnp.einsum("bthr,bsr->bhs", q_lat, gc.astype(dt))
+        scores = scores + jnp.einsum("bthk,bsk->bhs", qr, gkr.astype(dt))
+        valid = _paged_valid(pos_b, s_pad, 0, max_rows)
+        scores = scores.astype(jnp.float32) * scale \
+            + jnp.where(valid, 0.0, NEG)[:, None]
+        probs = jax.nn.softmax(scores, axis=-1)
+        out_lat = jnp.einsum("bhs,bsr->bhr", probs,
+                             gc.astype(jnp.float32)).astype(dt)
     out = jnp.einsum("bhr,rhv->bhv", out_lat, w_uv)
     out = jnp.einsum("bhv,hvd->bd", out, p["wo"].astype(dt))[:, None, :]
     return out, {"c": c, "kr": kr}

@@ -108,7 +108,11 @@ def prefill_fn(cfg: ModelConfig, remat: str = "none", unroll: bool = False):
 def decode_fn(cfg: ModelConfig, unroll: bool = False):
     """One decode step: f(params, tokens (B,), cache, pos) -> (logits, cache).
     ``pos`` is a scalar position, or a (B,) vector when every cache row
-    decodes at its own position (the serving engine's continuous batching)."""
+    decodes at its own position (the serving engine's continuous batching).
+    Extra kwargs (``paged``, ``slot``, ``write_ok``) forward to
+    ``lm_decode_step`` — ``slot``/``write_ok`` drive the token-level batched
+    path where tokens is a flattened (T,) mix of prefill chunks and decode
+    tokens mapped onto cache rows (attention-only families)."""
     if cfg.family == "encdec":
         return partial(encdec.encdec_decode_step, cfg=cfg, unroll=unroll)
     return partial(transformer.lm_decode_step, cfg=cfg, unroll=unroll)

@@ -321,7 +321,13 @@ def _init_layer_cache_paged(cfg: ModelConfig, kind: str, slots: int, nb: int,
     return cache
 
 
-def _layer_decode(p, x, cache, pos, cfg: ModelConfig, kind: str, paged=None):
+def _layer_decode(p, x, cache, pos, cfg: ModelConfig, kind: str, paged=None,
+                  slot=None, write_ok=None):
+    if slot is not None and kind not in ("attn_mlp", "attn_moe"):
+        raise ValueError(
+            f"token-batched decode (slot mapping) needs per-token caches; "
+            f"segment kind {kind!r} carries per-slot recurrent state"
+        )
     if kind == "rwkv":
         h = apply_norm(p["ln_t"], x, cfg.norm_eps)
         h, (wkv_s, shift_t) = ssm.rwkv_tmix(
@@ -343,13 +349,15 @@ def _layer_decode(p, x, cache, pos, cfg: ModelConfig, kind: str, paged=None):
     if cfg.attn_kind == "mla":
         if paged is None:
             a, upd = attn.mla_decode(
-                p["attn"], h, {"c": cache["c"], "kr": cache["kr"]}, pos, cfg
+                p["attn"], h, {"c": cache["c"], "kr": cache["kr"]}, pos, cfg,
+                slot=slot, write_ok=write_ok,
             )
         else:
             a, upd = attn.mla_decode_paged(
                 p["attn"], h, {"c": cache["c"], "kr": cache["kr"]}, pos, cfg,
                 table=paged["table"], block_size=paged["block_size"],
                 max_seq=paged["max_seq"], write_ok=paged["write_ok"],
+                impl=paged.get("impl", "gather"),
             )
         new_cache.update(upd)
     else:
@@ -357,7 +365,7 @@ def _layer_decode(p, x, cache, pos, cfg: ModelConfig, kind: str, paged=None):
         if paged is None:
             a, upd = attn.gqa_decode(
                 p["attn"], h, {"k": cache["k"], "v": cache["v"]}, pos, cfg,
-                window=w,
+                window=w, slot=slot, write_ok=write_ok,
             )
         else:
             ring = bool(w and paged["ring_width"])
@@ -367,6 +375,7 @@ def _layer_decode(p, x, cache, pos, cfg: ModelConfig, kind: str, paged=None):
                 block_size=paged["block_size"],
                 ring_width=paged["ring_width"] if ring else 0,
                 max_seq=paged["max_seq"], write_ok=paged["write_ok"],
+                impl=paged.get("impl", "gather"),
             )
         new_cache.update(upd)
     if kind in ("hybrid_swa", "hybrid_global"):
@@ -391,22 +400,31 @@ def _layer_decode(p, x, cache, pos, cfg: ModelConfig, kind: str, paged=None):
 
 
 def lm_decode_step(params, tokens, caches, pos, cfg: ModelConfig,
-                   unroll: bool = False, paged=None):
+                   unroll: bool = False, paged=None, slot=None,
+                   write_ok=None):
     """tokens (B,) int32; caches from init_cache; pos: current position —
     a scalar, or a (B,) vector of per-slot positions (continuous batching;
     recurrent rwkv/mamba caches are position-free, attention caches take the
     per-row write/validity path in models/attention.py).
     ``paged`` switches the attention caches to the block-pool layout
-    (init_paged_cache): a dict with ``table``/``ring_table`` (B, nb) int32
-    block tables, ``write_ok`` (B,) bool (or None), and static
-    ``block_size``/``ring_width``/``max_seq``.
+    (init_paged_cache): a dict with ``table``/``ring_table`` block tables
+    ((B, nb) int32, or per-token (T, nb) when ``slot`` is given),
+    ``write_ok`` (B,) bool (or None), static
+    ``block_size``/``ring_width``/``max_seq``, and optional ``impl``
+    (``"gather"`` | ``"pallas"`` paged-attention backend).
+    ``slot``/``write_ok`` enable token-level batching over dense caches:
+    tokens is a flattened (T,) mix of prefill chunks and decode tokens,
+    ``slot`` (T,) maps each token to its cache row, and ``write_ok`` (T,)
+    masks padding rows out of cache writes. Attention-only segments only —
+    recurrent segments carry per-slot state and reject slot mapping.
     Returns (logits (B, padded_vocab), new_caches)."""
     x = embed(params["embed"], tokens[:, None], cfg)
     new_caches = []
     for seg, sp, sc in zip(segments_for(cfg), params["segments"], caches):
         def body(carry, layer, kind=seg.kind):
             lp, lc = layer
-            y, nc = _layer_decode(lp, carry, lc, pos, cfg, kind, paged=paged)
+            y, nc = _layer_decode(lp, carry, lc, pos, cfg, kind, paged=paged,
+                                  slot=slot, write_ok=write_ok)
             return y, nc
         x, nc = jax.lax.scan(body, x, (sp, sc),
                              unroll=seg.n_layers if unroll else 1)

@@ -227,34 +227,41 @@ class PagedKV:
                    ring_width=ring_width, ring=ring)
 
     # -- request lifetime ----------------------------------------------------
-    def required(self, prompt_len: int, max_new: int,
-                 chunk: int = 1) -> tuple[int, int]:
+    def required(self, prompt_len: int, max_new: int, chunk: int = 1,
+                 token_step: bool = False) -> tuple[int, int]:
         """Worst-case (full, ring) block demand of a request: it writes
         ``min(max_seq, prompt_len + max_new - 1)`` positions (prefill-as-
         decode: the first generation lands on the final prompt step),
         rounded up to the chunk boundary when the server steps ``chunk``
-        tokens at a time (the host retires a slot at step end, so the last
-        chunk may overshoot by up to ``chunk - 1`` discarded positions)."""
+        uniform tokens at a time (the host retires a slot at step end, so the
+        last chunk may overshoot by up to ``chunk - 1`` discarded positions).
+        Token-level stepping (``token_step=True``) schedules exactly the
+        tokens a request needs — prefill rows are capped at the prompt end
+        and decode emits one token per step — so no chunk rounding applies
+        and the reservation is exactly the written positions."""
         positions = prompt_len + max_new - 1
-        positions = -(-positions // chunk) * chunk
+        if not token_step:
+            positions = -(-positions // chunk) * chunk
         # never reserve less than one step's writes: the engine always runs
         # at least one chunk for an admitted slot, so a degenerate request
         # must not slip in with a zero reservation and then steal blocks
-        positions = min(self.max_seq, max(positions, min(chunk, self.max_seq)))
+        floor = 1 if token_step else min(chunk, self.max_seq)
+        positions = min(self.max_seq, max(positions, floor))
         full = blocks_for(positions, self.block_size)
         ring = blocks_for(min(self.ring_width, positions), self.block_size) \
             if self.ring is not None else 0
         return full, ring
 
-    def can_admit(self, prompt_len: int, max_new: int, chunk: int = 1) -> bool:
-        full, ring = self.required(prompt_len, max_new, chunk)
+    def can_admit(self, prompt_len: int, max_new: int, chunk: int = 1,
+                  token_step: bool = False) -> bool:
+        full, ring = self.required(prompt_len, max_new, chunk, token_step)
         if not self.pool.can_admit(full):
             return False
         return self.ring is None or self.ring.can_admit(ring)
 
     def admit(self, slot: int, prompt_len: int, max_new: int,
-              chunk: int = 1) -> None:
-        full, ring = self.required(prompt_len, max_new, chunk)
+              chunk: int = 1, token_step: bool = False) -> None:
+        full, ring = self.required(prompt_len, max_new, chunk, token_step)
         self.pool.admit(slot, full)
         if self.ring is not None:
             self.ring.admit(slot, ring)
@@ -278,3 +285,14 @@ class PagedKV:
     def tables(self) -> tuple[np.ndarray, np.ndarray | None]:
         return (self.pool.table_array(),
                 self.ring.table_array() if self.ring is not None else None)
+
+    def token_tables(self, slot_ids) -> tuple[np.ndarray, np.ndarray | None]:
+        """Per-token block tables for a flattened token batch: row ``i`` is
+        the table of the slot token ``i`` maps to (what the paged-attention
+        kernel scalar-prefetches). ``slot_ids`` is any int sequence; padding
+        tokens may point at any live slot — their reads are masked and their
+        writes are gated off by ``write_ok``."""
+        ids = np.asarray(slot_ids, np.int32)
+        full = self.pool.table_array()[ids]
+        ring = self.ring.table_array()[ids] if self.ring is not None else None
+        return full, ring

@@ -7,9 +7,18 @@ derives the numbers the benchmarks and tests gate on:
     of continuous batching is keeping this near 100 under a request stream;
     the drain-then-refill baseline collapses it as slots empty out.
   * ``tok_per_s``      — generated tokens per wall second across the batch.
-  * ``admitted`` / ``finished`` / ``deferrals`` — request throughput
-    accounting; ``deferrals`` counts admission attempts pushed back by the
-    paged KV pool (OOM surfaces as deferred admission, never a crash).
+  * ``admitted`` / ``finished`` / ``deferrals`` / ``deferral_steps`` —
+    request throughput accounting. ``deferrals`` counts *distinct deferral
+    episodes*: a request pushed back by the paged KV pool counts once, no
+    matter how many steps it stays blocked at the head of the queue (OOM
+    surfaces as deferred admission, never a crash). ``deferral_steps``
+    counts every blocked step, so ``deferral_steps / max(deferrals, 1)``
+    is the mean episode length.
+  * ``batched_tokens`` — token rows the fused step computed, summed over
+    steps. Chunked stepping pays ``slots x chunk`` rows every step whether
+    or not a slot is live; token-level stepping pays only the scheduled
+    (live) tokens. ``tok_s_per_batched_tok`` normalises throughput by this
+    compute — the number the ``serve_tokbatch`` bench floor gates on.
   * ``ttft_s`` / ``ttft_steps`` — per-request time-to-first-token.
     ``ttft_s`` counts wall seconds from *submission*, so it includes queue
     wait — the component drain-then-refill's waves inflate. ``ttft_steps``
@@ -41,6 +50,8 @@ class ServeMetrics:
     admitted: int = 0
     finished: int = 0
     deferrals: int = 0
+    deferral_steps: int = 0
+    batched_tokens: int = 0
     tokens_generated: int = 0
     prompt_tokens: int = 0
     wall_s: float = 0.0
@@ -74,6 +85,18 @@ class ServeMetrics:
         return sum(self.ttft_steps) / len(self.ttft_steps) if self.ttft_steps else None
 
     @property
+    def step_batched_tokens(self) -> float:
+        """Mean token rows computed per fused step (the step's FLOP scale)."""
+        return self.batched_tokens / self.steps if self.steps else 0.0
+
+    @property
+    def tok_s_per_batched_tok(self) -> float:
+        """Throughput per unit of step compute: tok/s divided by mean token
+        rows per step. Rises when the engine stops paying for dead rows."""
+        return self.tok_per_s / self.step_batched_tokens \
+            if self.step_batched_tokens else 0.0
+
+    @property
     def kv_blocks_peak_pct(self) -> float:
         """Blocks-in-use high-water mark as % of the paged pool (0 = dense)."""
         return 100.0 * self.kv_blocks_peak / self.kv_blocks_total \
@@ -89,6 +112,10 @@ class ServeMetrics:
             "admitted": self.admitted,
             "finished": self.finished,
             "deferrals": self.deferrals,
+            "deferral_steps": self.deferral_steps,
+            "batched_tokens": self.batched_tokens,
+            "step_batched_tokens": self.step_batched_tokens,
+            "tok_s_per_batched_tok": self.tok_s_per_batched_tok,
             "tokens_generated": self.tokens_generated,
             "prompt_tokens": self.prompt_tokens,
             # prefill vs decode split under the names the bench JSON uses

@@ -27,6 +27,23 @@ deployment needs, vLLM-style but reduced to its core:
     per-step dispatch ~C×. Mid-run admission between steps is untouched,
     and C=1 reproduces the one-token engine exactly — any C is token-exact
     against it because each sub-step IS a one-token step;
+  * **token-level stepping** (``step_mode="tokens"``): instead of C uniform
+    sub-steps for every slot, each fused step runs ONE variable-composition
+    batch of live tokens — prefilling slots contribute ``min(C, remaining
+    prompt)`` rows, decoding slots contribute one row each (vLLM-style token
+    batching). Step FLOPs scale with scheduled tokens, not ``slots x C``:
+    idle slots and past-prompt-end chunk rows cost nothing. Attention-only
+    families (every segment kind ``attn_mlp``) only — recurrent segments
+    carry per-slot state that cannot flatten, and MoE routes a decode batch
+    as one capacity group where padding rows would steal expert slots; the
+    server falls back to chunked stepping (recorded in
+    ``meshes.fallbacks()``). Token-exact against chunked stepping because
+    every scheduled row is the same one-token decode at the same position;
+  * **paged-attention kernel** (``attn_impl="pallas"``, paged KV only): the
+    block-table-aware Pallas kernel in ``kernels/paged_attn`` walks each
+    token's mapped blocks directly instead of gathering the padded
+    ``(B, nb*bs)`` K/V view; the gather path stays as the bit-exact
+    reference (``attn_impl="gather"``, the default);
   * prefill-as-decode per slot with per-slot stop handling (max_new_tokens /
     max_seq), greedy or temperature sampling restricted to the true
     (unpadded) vocab;
@@ -58,6 +75,7 @@ import numpy as np
 from repro.dist import meshes
 from repro.models import model_zoo
 from repro.models.config import ModelConfig
+from repro.models.transformer import segments_for
 from repro.serve.kv_pool import PagedKV
 from repro.serve.metrics import ServeMetrics
 
@@ -118,13 +136,26 @@ class BatchedServer:
     with no attention cache (pure recurrent) silently serve dense; the
     effective layout is ``server.kv_mode``. ``prefill_chunk`` sets the
     chunked-prefill width C (1 = classic one-token prefill).
+
+    ``step_mode`` picks the fused-step composition: ``"chunked"`` (default,
+    the reference) runs C uniform sub-steps across all slots;  ``"tokens"``
+    flattens live prefill chunks and decode tokens into one variable-size
+    token batch per step (attention-only families; other families fall back
+    to chunked, recorded in ``meshes.fallbacks()``). The effective mode is
+    ``server.step_mode``.
+
+    ``attn_impl`` picks the paged decode-attention backend: ``"gather"``
+    (default, bit-exact reference) or ``"pallas"`` (block-table kernel;
+    requires ``kv="paged"``, otherwise falls back to gather with a recorded
+    fallback). The effective backend is ``server.attn_impl``.
     """
 
     def __init__(self, cfg: ModelConfig, params, batch_slots: int, max_seq: int,
                  temperature: float = 0.0, seed: int = 0, mesh=None,
                  param_specs=None, admission: str = "continuous",
                  kv: str = "dense", block_size: int = 16,
-                 kv_blocks: int | None = None, prefill_chunk: int = 1):
+                 kv_blocks: int | None = None, prefill_chunk: int = 1,
+                 step_mode: str = "chunked", attn_impl: str = "gather"):
         if cfg.family == "encdec":
             raise ValueError(
                 "BatchedServer serves decoder-only families; enc-dec decode "
@@ -134,6 +165,14 @@ class BatchedServer:
             raise ValueError(f"admission must be continuous|drain, got {admission!r}")
         if kv not in ("dense", "paged"):
             raise ValueError(f"kv must be dense|paged, got {kv!r}")
+        if step_mode not in ("chunked", "tokens"):
+            raise ValueError(f"step_mode must be chunked|tokens, got {step_mode!r}")
+        if attn_impl not in ("gather", "pallas"):
+            raise ValueError(f"attn_impl must be gather|pallas, got {attn_impl!r}")
+        # explicit >= 1 check, not truthiness: a falsy 0 must fail loudly
+        # here instead of slipping through downstream `or` defaults
+        if max_seq < 1:
+            raise ValueError(f"max_seq must be >= 1, got {max_seq}")
         if prefill_chunk < 1:
             raise ValueError(f"prefill_chunk must be >= 1, got {prefill_chunk}")
         if kv == "paged" and block_size < 1:
@@ -159,10 +198,36 @@ class BatchedServer:
         else:
             self._paged = None
             self.cache = model_zoo.make_cache(cfg, batch_slots, max_seq)
+        if attn_impl == "pallas" and self._paged is None:
+            meshes.record_fallback(
+                "serve_attn", "impl", 0,
+                "attn_impl='pallas' needs kv='paged' (the kernel walks block "
+                "tables); dense layout falls back to gather attention",
+            )
+            attn_impl = "gather"
+        self.attn_impl = attn_impl
+        if step_mode == "tokens":
+            kinds = {s.kind for s in segments_for(cfg)}
+            if kinds != {"attn_mlp"}:
+                meshes.record_fallback(
+                    "serve_step", "token_batch", 0,
+                    f"token-level stepping needs attention-only segments, got "
+                    f"{sorted(kinds)}: recurrent state is per-slot and MoE "
+                    "capacity groups see padding rows; falling back to "
+                    "chunked stepping",
+                )
+                step_mode = "chunked"
+        self.step_mode = step_mode
         self.key = jax.random.PRNGKey(seed)
         self.active: list[Request | None] = [None] * batch_slots
         self.queue: list[Request] = []
         self.finished: list[Request] = []
+        # head-of-line request currently blocked by the pool: one deferral
+        # *episode* per request, however many steps it stays blocked
+        self._deferring_rid: int | None = None
+        # wall seconds the latest step spent inside _admit (the admission
+        # portion of that step's wall_s)
+        self.last_admit_s = 0.0
         self.metrics = ServeMetrics(slots=batch_slots)
         if self._paged is not None:
             self.metrics.kv_blocks_total = self._paged.pool.num_blocks
@@ -191,7 +256,10 @@ class BatchedServer:
                 cache_sh = meshes.tree_shardings(
                     model_zoo.cache_specs(self.cache,
                                           paged=self._paged is not None),
-                    self.cache, mesh, rules=meshes.SERVE_CACHE_RULES,
+                    self.cache, mesh,
+                    rules=(meshes.SERVE_KERNEL_CACHE_RULES
+                           if self.attn_impl == "pallas"
+                           else meshes.SERVE_CACHE_RULES),
                 )
                 self.cache = jax.device_put(self.cache, cache_sh)
                 if param_specs is not None:
@@ -206,6 +274,10 @@ class BatchedServer:
         # + output cache buffers live — a 2x peak that matters at multi-GB
         # KV-cache scale
         self._step_fn = jax.jit(self._build_step(), donate_argnums=(1,))
+        self._token_step_fn = (
+            jax.jit(self._build_token_step(), donate_argnums=(1,))
+            if self.step_mode == "tokens" else None
+        )
         self._reset_fn = jax.jit(
             functools.partial(_reset_slot_rows, paged=self._paged is not None),
             donate_argnums=(0,),
@@ -226,7 +298,15 @@ class BatchedServer:
         n_data = meshes.mesh_axis_size(mesh, *data) if data else 1
         if self._paged is not None:
             nb = self._paged.pool.num_blocks
-            if data and nb % n_data != 0:
+            if data and self.attn_impl == "pallas":
+                meshes.record_fallback(
+                    "serve_cache", "kv_blocks", 1,
+                    "paged-attention kernel walks the whole block pool "
+                    "through its scalar-prefetched table (any token may map "
+                    "any physical block); block pool stays replicated",
+                )
+                data = ()
+            elif data and nb % n_data != 0:
                 meshes.record_fallback(
                     "serve_cache", "kv_blocks", 1,
                     f"paged pool of {nb} blocks not divisible by data axes "
@@ -284,8 +364,10 @@ class BatchedServer:
                 f"max_seq {self.max_seq}"
             )
         if self._paged is not None:
-            full, _ = self._paged.required(len(req.prompt), req.max_new_tokens,
-                                           self.prefill_chunk)
+            full, _ = self._paged.required(
+                len(req.prompt), req.max_new_tokens, self.prefill_chunk,
+                token_step=self.step_mode == "tokens",
+            )
             if full > self._paged.pool.num_blocks:
                 # deferral only makes sense when finish-time releases can
                 # ever satisfy it; an impossible request must fail loudly
@@ -303,22 +385,33 @@ class BatchedServer:
             return  # static batching: refill only once the batch has drained
         newly = []
         now = time.perf_counter()
+        token_step = self.step_mode == "tokens"
         for slot in range(self.slots):
             if self.active[slot] is None and self.queue:
                 head = self.queue[0]
                 if self._paged is not None and not self._paged.can_admit(
-                    len(head.prompt), head.max_new_tokens, self.prefill_chunk
+                    len(head.prompt), head.max_new_tokens, self.prefill_chunk,
+                    token_step=token_step,
                 ):
                     # the pool cannot guarantee this request's worst-case
                     # block demand: defer (FIFO head-of-line — skipping ahead
                     # would starve long prompts) until finish-time releases
-                    # free capacity. Never admit into a future OOM.
-                    self.metrics.deferrals += 1
+                    # free capacity. Never admit into a future OOM. One
+                    # deferral *episode* per request (a request blocked for
+                    # ten steps is one deferred request, not ten);
+                    # deferral_steps counts every blocked step.
+                    if self._deferring_rid != head.rid:
+                        self._deferring_rid = head.rid
+                        self.metrics.deferrals += 1
+                    self.metrics.deferral_steps += 1
                     break
                 req = self.queue.pop(0)
+                if req.rid == self._deferring_rid:
+                    self._deferring_rid = None  # episode over: admitted
                 if self._paged is not None:
                     self._paged.admit(slot, len(req.prompt),
-                                      req.max_new_tokens, self.prefill_chunk)
+                                      req.max_new_tokens, self.prefill_chunk,
+                                      token_step=token_step)
                 self.active[slot] = req
                 req.steps = 0
                 req.admit_s = now
@@ -353,6 +446,7 @@ class BatchedServer:
         vocab = cfg.vocab_size
         chunk = self.prefill_chunk
         paged = self._paged
+        attn_impl = self.attn_impl
         if paged is not None:
             block_size, ring_width = paged.block_size, paged.ring_width
             max_seq = self.max_seq
@@ -407,6 +501,7 @@ class BatchedServer:
                         "table": table, "ring_table": ring_table,
                         "write_ok": run, "block_size": block_size,
                         "ring_width": ring_width, "max_seq": max_seq,
+                        "impl": attn_impl,
                     }
                     logits, new_cache = decode(params, tok, cache, positions,
                                                paged=ctx)
@@ -437,14 +532,71 @@ class BatchedServer:
 
         return step
 
+    def _build_token_step(self):
+        """Fused decode over a flattened (T,) token batch. ``tokens``/
+        ``slot``/``pos``/``live`` come from the host scheduler
+        (``_step_tokens``): ``slot`` maps each row onto its cache slot,
+        ``live`` gates padding rows out of cache writes. Returns per-row
+        next-token samples; the host reads each slot's last scheduled row.
+        Per-slot recurrent gating (``select_rows``) is unnecessary here:
+        eligible families are attention-only, and every cache mutation is a
+        scatter already gated by ``write_ok``."""
+        cfg = self.cfg
+        decode = model_zoo.decode_fn(cfg)
+        temperature = self.temperature
+        vocab = cfg.vocab_size
+        paged = self._paged
+        attn_impl = self.attn_impl
+        if paged is not None:
+            block_size, ring_width = paged.block_size, paged.ring_width
+            max_seq = self.max_seq
+
+        def step(params, cache, tokens, slot, pos, live, key, table,
+                 ring_table):
+            tok = jnp.where(live, tokens, 0).astype(jnp.int32)
+            if paged is not None:
+                ctx = {
+                    # per-token tables: row i is token i's slot's table
+                    "table": table, "ring_table": ring_table,
+                    "write_ok": live, "block_size": block_size,
+                    "ring_width": ring_width, "max_seq": max_seq,
+                    "impl": attn_impl,
+                }
+                logits, cache = decode(params, tok, cache, pos, paged=ctx,
+                                       slot=slot, write_ok=live)
+            else:
+                logits, cache = decode(params, tok, cache, pos,
+                                       slot=slot, write_ok=live)
+            logits = logits[:, :vocab].astype(jnp.float32)
+            if temperature > 0:
+                key, sub = jax.random.split(key)
+                nxt = jax.random.categorical(sub, logits / temperature,
+                                             axis=-1)
+            else:
+                nxt = jnp.argmax(logits, axis=-1)
+            return cache, nxt.astype(jnp.int32), key
+
+        return step
+
     # -- stepping ---------------------------------------------------------------
     def step(self):
-        """Admit into free slots, then one fused decode step across all slots."""
-        self._admit()
-        # t0 before block allocation: the paged-only host work (ensure_step
-        # + table upload) must count against paged wall time, or the
-        # CI-gated paged-vs-dense tok/s ratio flatters paged
+        """Admit into free slots, then one fused decode step. Wall time
+        (``metrics.wall_s``) covers the whole step, admission included;
+        ``last_admit_s`` records the admission portion so the split stays
+        assertable."""
         t0 = time.perf_counter()
+        self._admit()
+        self.last_admit_s = time.perf_counter() - t0
+        if self.step_mode == "tokens":
+            self._step_tokens(t0)
+        else:
+            self._step_chunked(t0)
+
+    def _step_chunked(self, t0: float):
+        """C uniform masked sub-steps across all slots (the reference)."""
+        # block allocation counts into wall time too: the paged-only host
+        # work (ensure_step + table upload) must count against paged wall
+        # time, or the CI-gated paged-vs-dense tok/s ratio flatters paged
         if self._paged is not None:
             # alloc-on-write: map blocks for the rows each slot writes this
             # step (guaranteed to succeed — admission reserved the worst case)
@@ -522,6 +674,115 @@ class BatchedServer:
         self.metrics.steps += 1
         self.metrics.active_slot_steps += n_active
         self.metrics.tokens_generated += generated
+        # chunked honesty: the fused program computes every slot row for all
+        # C sub-steps, live or not
+        self.metrics.batched_tokens += self.slots * self.prefill_chunk
+        self.metrics.wall_s += now - t0
+
+    def _step_tokens(self, t0: float):
+        """One variable-composition token batch (vLLM-style): prefilling
+        slots schedule ``min(C, remaining prompt)`` rows, decoding slots one
+        row each, flattened into a single fused decode whose FLOPs scale
+        with live tokens. Token-exact against chunked stepping — every
+        scheduled row is the same one-token decode at the same position —
+        with two differences that cannot change tokens: prompt-overshoot
+        rows are never scheduled, and idle slots contribute no rows."""
+        chunk = self.prefill_chunk
+        sched: list[tuple[int, int, int]] = []  # (slot, start_pos, n_rows)
+        for i, req in enumerate(self.active):
+            if req is None:
+                continue
+            p = int(self._positions[i])
+            plen = int(self._prompt_len[i])
+            n = min(chunk, plen - p) if p < plen else 1
+            n = min(n, self.max_seq - p)
+            sched.append((i, p, n))
+        t_live = sum(n for _, _, n in sched)
+        if t_live == 0:
+            # nothing runnable this step (empty batch); still a step
+            self.metrics.steps += 1
+            self.metrics.wall_s += time.perf_counter() - t0
+            return
+        # pad the batch to an 8-token bucket: bounds the set of distinct
+        # shapes the jitted step compiles for; padding rows are dead (live
+        # False gates their writes, their samples are never read)
+        t_pad = max(8, -(-t_live // 8) * 8)
+        tokens = np.zeros(t_pad, np.int32)
+        slot_ids = np.zeros(t_pad, np.int32)
+        pos = np.zeros(t_pad, np.int32)
+        live = np.zeros(t_pad, bool)
+        last_row: dict[int, int] = {}
+        k = 0
+        for i, p, n in sched:
+            plen = int(self._prompt_len[i])
+            if p < plen:
+                tokens[k:k + n] = self._prompt_buf[i, p:p + n]
+            else:
+                tokens[k] = self._last_tok[i]
+            slot_ids[k:k + n] = i
+            pos[k:k + n] = np.arange(p, p + n, dtype=np.int32)
+            live[k:k + n] = True
+            last_row[i] = k + n - 1
+            k += n
+        if self._paged is not None:
+            for i, p, n in sched:
+                self._paged.ensure_step(i, p, n)
+            tf, tr = self._paged.token_tables(slot_ids)
+            table_dev = jnp.asarray(tf)
+            ring_dev = (jnp.asarray(tr) if tr is not None
+                        else self._no_table)
+            self.metrics.kv_blocks_peak = max(
+                self.metrics.kv_blocks_peak, self._paged.pool.blocks_in_use
+            )
+        else:
+            table_dev = ring_dev = self._no_table
+        ctx = (meshes.use_mesh(self.mesh) if self.mesh is not None
+               else contextlib.nullcontext())
+        with ctx:
+            self.cache, nxt, self.key = self._token_step_fn(
+                self.params, self.cache, jnp.asarray(tokens),
+                jnp.asarray(slot_ids), jnp.asarray(pos), jnp.asarray(live),
+                self.key, table_dev, ring_dev,
+            )
+        nxt = np.asarray(nxt)  # sync point: one per step
+        now = time.perf_counter()
+
+        n_active = 0
+        generated = 0
+        for i, p, n in sched:
+            req = self.active[i]
+            n_active += 1
+            req.steps += 1
+            plen = int(self._prompt_len[i])
+            new_p = p + n
+            self._positions[i] = new_p
+            self.metrics.prompt_tokens += min(new_p, plen) - min(p, plen)
+            if new_p >= plen:
+                # the slot's last scheduled row sits at the final prompt
+                # position or beyond: its sample is a real generation
+                tok = int(nxt[last_row[i]])
+                self._last_tok[i] = tok
+                if len(req.out) < req.max_new_tokens:
+                    req.out.append(tok)
+                    generated += 1
+                    if req.ttft_s is None:
+                        req.ttft_s = now - req.submit_s
+                        self.metrics.ttft_s.append(req.ttft_s)
+                        self.metrics.ttft_steps.append(req.steps)
+            if (len(req.out) >= req.max_new_tokens
+                    or new_p >= self.max_seq):
+                req.done = True
+                self.finished.append(req)
+                self.active[i] = None
+                self._active_mask[i] = False
+                self.metrics.finished += 1
+                if self._paged is not None:
+                    self._paged.release(i)  # free-on-finish
+                    self._tables_fresh = False
+        self.metrics.steps += 1
+        self.metrics.active_slot_steps += n_active
+        self.metrics.tokens_generated += generated
+        self.metrics.batched_tokens += t_live
         self.metrics.wall_s += now - t0
 
     def reset_metrics(self):
@@ -544,7 +805,10 @@ def generate_greedy(cfg: ModelConfig, params, prompts: list[list[int]],
                     max_new_tokens: int, max_seq: int | None = None):
     """Convenience: run a batch of prompts to completion, return token lists
     (rid order == prompt order, straight from ``run``)."""
-    max_seq = max_seq or (max(len(p) for p in prompts) + max_new_tokens + 1)
+    # `is None`, not `or`: max_seq=0 must reach BatchedServer's >= 1 check
+    # as the caller's value, not silently become a derived default
+    if max_seq is None:
+        max_seq = max(len(p) for p in prompts) + max_new_tokens + 1
     server = BatchedServer(cfg, params, batch_slots=len(prompts), max_seq=max_seq)
     for i, p in enumerate(prompts):
         server.submit(Request(rid=i, prompt=list(p), max_new_tokens=max_new_tokens))

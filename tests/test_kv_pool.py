@@ -209,3 +209,75 @@ def test_paged_kv_required_and_ring_sizing():
     kv.release(0)
     kv.pool.check(), kv.ring.check()
     assert kv.pool.blocks_in_use == 0 and kv.ring.blocks_in_use == 0
+
+
+def test_required_token_step_skips_chunk_rounding():
+    kv = PagedKV(block_size=4, max_seq=64,
+                 pool=KVBlockPool(16, 4, 1, blocks_for(64, 4)))
+    # chunked overshoots to the chunk boundary; token stepping writes exactly
+    # plen + max_new - 1 positions
+    assert kv.required(5, 5, chunk=8)[0] == blocks_for(16, 4)
+    assert kv.required(5, 5, chunk=8, token_step=True)[0] == blocks_for(9, 4)
+    # degenerate request still reserves at least one written position
+    assert kv.required(1, 1, chunk=8, token_step=True)[0] == 1
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    max_seq=st.integers(2, 32),
+    prompt_len=st.integers(1, 31),
+    max_new=st.integers(1, 8),
+    chunk=st.integers(1, 8),
+    block_size=st.integers(1, 8),
+    token_step=st.booleans(),
+)
+def test_reservation_covers_engine_to_completion(max_seq, prompt_len, max_new,
+                                                 chunk, block_size, token_step):
+    """Admission-reservation sufficiency, end to end: size the pool at
+    EXACTLY ``required()`` and replay the engine's scheduling (chunked or
+    token-level) through ``admit``/``ensure_step`` to request completion.
+    Any step demanding a block beyond the reservation raises PoolExhausted —
+    so finishing at all proves the reservation covers the whole lifecycle —
+    and ``release`` must hand every block back."""
+    prompt_len = min(prompt_len, max_seq - 1)  # submit() invariant
+    kv = PagedKV(block_size=block_size, max_seq=max_seq,
+                 pool=KVBlockPool(0, block_size, 1,
+                                  blocks_for(max_seq, block_size)))
+    full, _ = kv.required(prompt_len, max_new, chunk, token_step=token_step)
+    kv.pool = KVBlockPool(full, block_size, 1,
+                          blocks_for(max_seq, block_size))
+    kv.admit(0, prompt_len, max_new, chunk, token_step=token_step)
+    pos, out = 0, 0
+    for _ in range(10 * max_seq):  # bounded replay of the serve loop
+        if token_step:
+            n = min(chunk, prompt_len - pos) if pos < prompt_len else 1
+            n = min(n, max_seq - pos)
+            if n <= 0:
+                break
+            kv.ensure_step(0, pos, n)  # must never raise PoolExhausted
+            pos += n
+            if pos >= prompt_len and out < max_new:
+                out += 1
+        else:
+            n = min(chunk, max_seq - pos)
+            if n <= 0:
+                break
+            kv.ensure_step(0, pos, n)
+            # the device runs every sub-step; the host truncates emissions
+            for sub in range(pos, pos + n):
+                if sub + 1 >= prompt_len and out < max_new:
+                    out += 1
+            pos += n
+        kv.pool.check()
+        if out >= max_new or pos >= max_seq:
+            break
+    assert out >= max_new or pos >= max_seq, "request never completed"
+    if token_step and prompt_len + max_new - 1 <= max_seq:
+        # token stepping writes exactly the reserved positions: the exact-
+        # sized pool ends fully mapped, proving the bound is tight too
+        assert int(kv.pool.n_mapped[0]) == full
+    mapped = int(kv.pool.n_mapped[0])
+    assert kv.release(0) == mapped, "release must report every mapped block"
+    kv.pool.check()
+    assert kv.pool.blocks_in_use == 0 and kv.pool.reserved_blocks == 0
+    assert kv.pool.free_blocks == full, "release must return every block"

@@ -1,0 +1,206 @@
+"""Token-level batched stepping (``BatchedServer(step_mode="tokens")``) and
+the paged-attention kernel path (``attn_impl="pallas"``).
+
+Contracts pinned here:
+
+  * token-exactness: the flattened variable-composition token batch produces
+    EXACTLY the chunked engine's outputs — per family (GQA, MLA), per cache
+    layout (dense, paged, paged+pallas), per chunk width C in {1, 4, plen};
+  * TTFT-in-steps: prefill still takes ceil(plen / C) fused steps;
+  * eligibility fallback: recurrent / hybrid / MoE families serve chunked
+    (recorded in ``meshes.fallbacks()``), never silently wrong;
+  * step FLOP accounting: ``batched_tokens`` counts live scheduled rows in
+    tokens mode vs. ``slots * C`` every step in chunked mode;
+  * serving-accounting fixes: ``deferrals`` counts distinct deferral
+    episodes (with ``deferral_steps`` counting blocked steps), ``wall_s``
+    includes the admission portion (``last_admit_s``), and falsy-zero
+    ``max_seq`` is rejected at the server boundary.
+"""
+import jax
+import pytest
+
+from repro.configs import get_reduced_config
+from repro.dist import meshes
+from repro.kernels.paged_attn import ops as paged_attn_ops
+from repro.models import model_zoo
+from repro.serve.serving import BatchedServer, Request, generate_greedy
+
+TOKEN_FAMILIES = ["internlm2-20b", "minicpm3-4b"]  # GQA + MLA, attn-only
+
+_STREAM = [([5, 6, 7, 8], 9), ([1, 2], 3), ([9, 3, 9, 4], 5), ([2, 7], 4),
+           ([8, 1, 6], 6), ([4, 4, 4, 4, 4], 3)]
+
+
+def _params(arch, seed=2):
+    cfg = get_reduced_config(arch)
+    params, _ = model_zoo.init_params(cfg, jax.random.PRNGKey(seed))
+    return cfg, params
+
+
+def _serve(cfg, params, stream=_STREAM, slots=2, max_seq=24, **kw):
+    srv = BatchedServer(cfg, params, batch_slots=slots, max_seq=max_seq, **kw)
+    for i, (p, n) in enumerate(stream):
+        srv.submit(Request(i, list(p), n))
+    return [r.out for r in srv.run()], srv
+
+
+# ------------------------- token-exactness ------------------------------------
+@pytest.mark.parametrize("arch", TOKEN_FAMILIES)
+@pytest.mark.parametrize("chunk", [1, 4, 7])
+def test_tokens_vs_chunked_token_exact(arch, chunk):
+    """Every (family, C): tokens mode == the PR-5 chunked engine, dense and
+    paged. C=7 >= the longest prompt, so whole prompts flatten in one step."""
+    cfg, params = _params(arch)
+    ref, _ = _serve(cfg, params, prefill_chunk=chunk)
+    got, srv = _serve(cfg, params, prefill_chunk=chunk, step_mode="tokens")
+    assert srv.step_mode == "tokens"
+    assert got == ref
+    gotp, srvp = _serve(cfg, params, prefill_chunk=chunk, step_mode="tokens",
+                        kv="paged", block_size=4)
+    assert srvp.kv_mode == "paged" and gotp == ref
+
+
+@pytest.mark.parametrize("arch", TOKEN_FAMILIES)
+def test_tokens_pallas_token_exact(arch, monkeypatch):
+    """attn_impl='pallas' with the kernel FORCED (interpret on CPU) under
+    token-level stepping reproduces the chunked gather engine exactly."""
+    monkeypatch.setattr(paged_attn_ops, "_default_use_kernel", lambda: True)
+    cfg, params = _params(arch)
+    ref, _ = _serve(cfg, params, prefill_chunk=4)
+    got, srv = _serve(cfg, params, prefill_chunk=4, step_mode="tokens",
+                      kv="paged", block_size=4, attn_impl="pallas")
+    assert srv.attn_impl == "pallas"
+    assert got == ref
+
+
+def test_chunked_pallas_token_exact(monkeypatch):
+    """The kernel also backs the B-batched chunked paged path."""
+    monkeypatch.setattr(paged_attn_ops, "_default_use_kernel", lambda: True)
+    cfg, params = _params("internlm2-20b")
+    ref, _ = _serve(cfg, params, prefill_chunk=4)
+    got, srv = _serve(cfg, params, prefill_chunk=4, kv="paged", block_size=4,
+                      attn_impl="pallas")
+    assert srv.step_mode == "chunked" and srv.attn_impl == "pallas"
+    assert got == ref
+
+
+def test_tokens_ttft_steps_contract():
+    """Prefill still takes ceil(plen / C) fused steps in tokens mode."""
+    cfg, params = _params("internlm2-20b")
+    for chunk in (1, 3, 4):
+        _, srv = _serve(cfg, params, stream=[([3, 1, 4, 1, 5], 2)], slots=1,
+                        prefill_chunk=chunk, step_mode="tokens")
+        assert srv.metrics.ttft_steps == [-(-5 // chunk)]
+
+
+# --------------------------- eligibility fallback -----------------------------
+@pytest.mark.parametrize("arch", ["rwkv6-3b", "hymba-1.5b", "olmoe-1b-7b"])
+def test_tokens_fallback_non_attn_families(arch):
+    """Recurrent state, hybrid SWA ring hazards, and MoE capacity-group
+    coupling all exclude token batching: the server must fall back to
+    chunked and record why."""
+    cfg, params = _params(arch)
+    meshes.clear_fallbacks()
+    srv = BatchedServer(cfg, params, batch_slots=2, max_seq=16,
+                        step_mode="tokens")
+    assert srv.step_mode == "chunked"
+    assert any(t == "serve_step" for t, _, _ in meshes.fallbacks())
+    # and the fallen-back server still serves correctly
+    srv.submit(Request(0, [1, 2, 3], 3))
+    assert len(srv.run()[0].out) == 3
+
+
+def test_pallas_requires_paged_fallback():
+    cfg, params = _params("internlm2-20b")
+    meshes.clear_fallbacks()
+    srv = BatchedServer(cfg, params, batch_slots=2, max_seq=16,
+                        attn_impl="pallas")
+    assert srv.attn_impl == "gather"
+    assert any(t == "serve_attn" for t, _, _ in meshes.fallbacks())
+
+
+def test_invalid_flags_rejected():
+    cfg, params = _params("internlm2-20b")
+    with pytest.raises(ValueError, match="step_mode"):
+        BatchedServer(cfg, params, batch_slots=1, max_seq=8, step_mode="fused")
+    with pytest.raises(ValueError, match="attn_impl"):
+        BatchedServer(cfg, params, batch_slots=1, max_seq=8, attn_impl="cuda")
+
+
+# ------------------------- step FLOP accounting -------------------------------
+def test_batched_tokens_accounting():
+    """Chunked pays slots*C rows per step regardless of liveness; tokens
+    pays only scheduled rows — strictly fewer over the same stream."""
+    cfg, params = _params("internlm2-20b")
+    _, ch = _serve(cfg, params, prefill_chunk=4)
+    _, tk = _serve(cfg, params, prefill_chunk=4, step_mode="tokens")
+    assert ch.metrics.batched_tokens == ch.metrics.steps * 2 * 4
+    # tokens mode schedules at most what it computes and skips dead rows
+    assert 0 < tk.metrics.batched_tokens < ch.metrics.batched_tokens
+    assert tk.metrics.tok_s_per_batched_tok > 0
+
+
+# --------------------- serving-accounting bugfixes ----------------------------
+def test_deferral_episodes_not_steps():
+    """A single request blocked at the head of the queue for several steps is
+    ONE deferral episode; deferral_steps counts every blocked step."""
+    cfg, params = _params("internlm2-20b")
+    srv = BatchedServer(cfg, params, batch_slots=2, max_seq=24, kv="paged",
+                        block_size=4, kv_blocks=3)
+    srv.submit(Request(0, [1, 2, 3], 8))
+    srv.submit(Request(1, [4, 5, 6], 6))
+    srv.run(max_steps=200)
+    m = srv.metrics
+    assert m.finished == 2
+    assert m.deferrals == 1, "one blocked request == one deferral episode"
+    assert m.deferral_steps >= 3, "blocked for several steps"
+    assert m.deferral_steps > m.deferrals
+
+
+def test_two_requests_two_episodes():
+    cfg, params = _params("internlm2-20b")
+    srv = BatchedServer(cfg, params, batch_slots=2, max_seq=24, kv="paged",
+                        block_size=4, kv_blocks=3)
+    for rid, (p, n) in enumerate([([1, 2, 3], 8), ([4, 5, 6], 6),
+                                  ([7, 8], 5)]):
+        srv.submit(Request(rid, list(p), n))
+    srv.run(max_steps=300)
+    m = srv.metrics
+    assert m.finished == 3
+    assert m.deferrals == 2, "two distinct blocked requests"
+    assert m.deferral_steps >= m.deferrals
+
+
+def test_wall_s_includes_admission():
+    """step() starts its clock BEFORE _admit: a step that admits reports
+    strictly more wall time than its post-admit portion."""
+    cfg, params = _params("internlm2-20b")
+    srv = BatchedServer(cfg, params, batch_slots=2, max_seq=16)
+    srv.submit(Request(0, [1, 2, 3], 2))
+    srv.step()
+    assert srv.metrics.admitted == 1
+    assert srv.last_admit_s > 0.0
+    post_admit = srv.metrics.wall_s - srv.last_admit_s
+    assert 0.0 < post_admit < srv.metrics.wall_s
+
+
+def test_max_seq_falsy_zero_rejected():
+    cfg, params = _params("internlm2-20b")
+    with pytest.raises(ValueError, match="max_seq"):
+        BatchedServer(cfg, params, batch_slots=1, max_seq=0)
+    # generate_greedy must forward an explicit 0, not silently derive
+    with pytest.raises(ValueError, match="max_seq"):
+        generate_greedy(cfg, params, [[1, 2]], 2, max_seq=0)
+
+
+def test_metrics_roundtrip_new_fields():
+    from repro.serve.metrics import ServeMetrics
+
+    m = ServeMetrics(slots=2, steps=4, deferrals=1, deferral_steps=5,
+                     batched_tokens=24, tokens_generated=8, wall_s=2.0)
+    d = m.as_dict()
+    assert d["deferral_steps"] == 5 and d["batched_tokens"] == 24
+    assert d["step_batched_tokens"] == 6.0
+    assert d["tok_s_per_batched_tok"] == pytest.approx((8 / 2.0) / 6.0)
+    m2 = ServeMetrics.from_dict(d)
+    assert m2.deferral_steps == 5 and m2.batched_tokens == 24
