@@ -36,9 +36,21 @@ throughput ratio (tok/s normalised by mean rows per step, gated >=
 kernel path (on CPU it dispatches to the gather oracle; the kernel itself
 is exercised by the interpret-mode test suite and on TPU backends).
 
+Rung 4 (``serve_preempt``): the scheduler rung. A saturating priority-2
+background load holds every slot mid-decode when a burst of short
+priority-0 (interactive) requests arrives. The contender serves with the
+preemptive priority scheduler (victims evicted, blocks released, resumed
+later by recompute-on-resume); the ablation serves the identical stream
+FIFO, where the burst waits for finish-time slot releases. The gated
+number is the ratio of the interactive class's mean submission-to-first-
+token STEP counts (``per_priority[0].ttft_e2e_steps``) — FIFO over
+preemptive, machine-independent, floor ``PREEMPT_TTFT_RATIO_FLOOR`` — and
+the rung also proves preemption's cost is recompute, never tokens: the
+background outputs must byte-match across both modes.
+
 Because request lengths vary, ``speedup_x`` (tok/s ratio) is a same-machine
-ratio that transfers across runner generations; occupancy_pct and the TTFT
-step ratio are machine-independent.
+ratio that transfers across runner generations; occupancy_pct, the TTFT
+step ratio, and the preemption TTFT ratio are machine-independent.
 
     PYTHONPATH=src python -m benchmarks.bench_serve [--quick] \
         [--out BENCH_serve.json]
@@ -84,11 +96,22 @@ TOKBATCH_FULL = dict(arch="internlm2-20b", slots=16, n_requests=48,
                      max_seq=96, seed=0, reps=5, block_size=8,
                      prefill_chunk=4)
 
+# preempt rung: long-running background class saturates the slots; a short
+# interactive burst lands mid-run. Step counts are deterministic, so one
+# pass per mode suffices (no wall-clock reps to median over).
+PREEMPT_QUICK = dict(arch="internlm2-20b", slots=4, n_bg=8, bg_prompt=8,
+                     bg_new=24, n_hi=4, hi_prompt=4, hi_new=2, warm_steps=3,
+                     max_seq=48, block_size=4, prefill_chunk=4, seed=0)
+PREEMPT_FULL = dict(arch="internlm2-20b", slots=8, n_bg=16, bg_prompt=12,
+                    bg_new=48, n_hi=6, hi_prompt=6, hi_new=3, warm_steps=3,
+                    max_seq=96, block_size=8, prefill_chunk=4, seed=0)
+
 OCCUPANCY_FLOOR_PCT = 75.0  # continuous batching must stay this saturated
 PAGED_OCCUPANCY_FLOOR_PCT = 65.0  # reservation deferrals cost a little
 TTFT_RATIO_FLOOR = 2.0  # chunked prefill must at least halve TTFT steps
 TOKBATCH_SPEEDUP_FLOOR = 1.2  # token batching tok/s over chunked gather
 TOKBATCH_PER_TOKEN_FLOOR = 1.5  # tok/s per batched token row, ratio floor
+PREEMPT_TTFT_RATIO_FLOOR = 2.0  # interactive TTFT steps: fifo / preemptive
 
 
 def _requests(shape: dict, cfg, rid0: int = 0) -> list[Request]:
@@ -364,15 +387,114 @@ def bench_tokbatch(shape: dict, quick: bool = False) -> dict:
     return result
 
 
+# ------------- rung 4: preemptive scheduling vs FIFO-defer --------------------
+def bench_preempt(shape: dict, quick: bool = False) -> dict:
+    cfg = get_reduced_config(shape["arch"])
+    params, _ = model_zoo.init_params(cfg, jax.random.PRNGKey(1))
+
+    def streams():
+        rng = np.random.default_rng(shape["seed"])
+        bg = [Request(rid=i,
+                      prompt=rng.integers(1, cfg.vocab_size,
+                                          shape["bg_prompt"]).tolist(),
+                      max_new_tokens=shape["bg_new"], priority=2)
+              for i in range(shape["n_bg"])]
+        hi = [Request(rid=100 + i,
+                      prompt=rng.integers(1, cfg.vocab_size,
+                                          shape["hi_prompt"]).tolist(),
+                      max_new_tokens=shape["hi_new"], priority=0)
+              for i in range(shape["n_hi"])]
+        return bg, hi
+
+    def drive(policy):
+        server = BatchedServer(cfg, params, batch_slots=shape["slots"],
+                               max_seq=shape["max_seq"], kv="paged",
+                               block_size=shape["block_size"],
+                               prefill_chunk=shape["prefill_chunk"],
+                               scheduler=policy, debug_checks=False)
+        # warmup: compile the fused step + reset programs off the clock
+        warm = np.random.default_rng(9)
+        for i in range(2):
+            server.submit(Request(rid=10_000 + i,
+                                  prompt=warm.integers(1, cfg.vocab_size,
+                                                       4).tolist(),
+                                  max_new_tokens=2))
+        server.run()
+        server.reset_metrics()
+        bg, hi = streams()  # fresh Request objects per mode (run mutates)
+        for r in bg:
+            server.submit(r)
+        for _ in range(shape["warm_steps"]):
+            server.step()  # background load is mid-decode everywhere
+        for r in hi:
+            server.submit(r)
+        server.run()
+        m = server.metrics
+        want = shape["n_bg"] + shape["n_hi"]
+        if m.finished != want:  # not assert: must survive -O
+            raise SystemExit(f"{policy}: {m.finished}/{want} finished")
+        return server, bg, hi
+
+    pre_srv, pre_bg, _ = drive("priority")
+    fifo_srv, fifo_bg, _ = drive("fifo")
+    pre, fifo = pre_srv.metrics, fifo_srv.metrics
+    hi_pre = pre.mean_prio_ttft_e2e_steps(0)
+    hi_fifo = fifo.mean_prio_ttft_e2e_steps(0)
+    ratio = hi_fifo / hi_pre if hi_pre else 0.0
+    # the integrity half of the claim: eviction costs recompute, not tokens
+    bg_outputs_match = all(a.out == b.out for a, b in zip(pre_bg, fifo_bg))
+
+    result = {
+        "workload": "serve_preempt",
+        "arch": shape["arch"],
+        "slots": shape["slots"],
+        "n_bg": shape["n_bg"],
+        "n_hi": shape["n_hi"],
+        "preemptive": pre.as_dict(),
+        "fifo": fifo.as_dict(),
+        "speedup_x": ratio,
+        "bg_outputs_match": bg_outputs_match,
+        "serving": {
+            "tok_s": pre.tok_per_s,
+            "hi_ttft_e2e_steps": hi_pre,
+            "hi_ttft_e2e_steps_fifo": hi_fifo,
+            "preempt_ttft_ratio": ratio,
+            "preempt_ttft_ratio_floor": PREEMPT_TTFT_RATIO_FLOOR,
+            "preemptions": pre.preemptions,
+            "recompute_tokens": pre.recompute_tokens,
+        },
+    }
+    if quick:
+        # SystemExit, not assert: gates CI, must survive python -O
+        if pre.preemptions == 0 or fifo.preemptions != 0:
+            raise SystemExit(
+                f"preemption accounting wrong: priority evicted "
+                f"{pre.preemptions} victims, fifo {fifo.preemptions}"
+            )
+        if not bg_outputs_match:
+            raise SystemExit(
+                "preempted-and-resumed background outputs diverged from the "
+                "FIFO run — recompute-on-resume is not token-exact"
+            )
+        if ratio < PREEMPT_TTFT_RATIO_FLOOR:
+            raise SystemExit(
+                f"interactive TTFT ratio {ratio:.2f}x below the "
+                f"{PREEMPT_TTFT_RATIO_FLOOR}x floor "
+                f"(fifo {hi_fifo:.1f} vs preemptive {hi_pre:.1f} e2e steps)"
+            )
+    return result
+
+
 def bench_all(quick: bool = False) -> dict:
-    shapes = ((QUICK, PAGED_QUICK, TOKBATCH_QUICK) if quick
-              else (FULL, PAGED_FULL, TOKBATCH_FULL))
+    shapes = ((QUICK, PAGED_QUICK, TOKBATCH_QUICK, PREEMPT_QUICK) if quick
+              else (FULL, PAGED_FULL, TOKBATCH_FULL, PREEMPT_FULL))
     return {
         "devices": jax.device_count(),
         "quick": quick,
         "results": [bench(shapes[0], quick=quick),
                     bench_paged(shapes[1], quick=quick),
-                    bench_tokbatch(shapes[2], quick=quick)],
+                    bench_tokbatch(shapes[2], quick=quick),
+                    bench_preempt(shapes[3], quick=quick)],
     }
 
 
@@ -411,6 +533,17 @@ def run(csv_rows: list[str]) -> list[str]:
         f";chunked_tok_s={tc['tok_per_s']:.1f}"
         f";speedup_x={tres['speedup_x']:.2f}"
         f";per_brow_x={tres['serving']['tok_s_per_batched_tok_ratio']:.2f}"
+    )
+    sres = bench_preempt(PREEMPT_QUICK, quick=False)
+    sp = sres["serving"]
+    csv_rows.append(
+        f"serve/preempt_{sres['arch']},{sp['hi_ttft_e2e_steps']:.1f},"
+        f"slots={sres['slots']}"
+        f";hi_ttft_steps={sp['hi_ttft_e2e_steps']:.1f}"
+        f";hi_ttft_steps_fifo={sp['hi_ttft_e2e_steps_fifo']:.1f}"
+        f";ratio_x={sp['preempt_ttft_ratio']:.2f}"
+        f";preemptions={sp['preemptions']}"
+        f";recompute_tok={sp['recompute_tokens']}"
     )
     return csv_rows
 
@@ -456,6 +589,13 @@ def main() -> None:
     print(f"token batching vs chunked gather: {rt['speedup_x']:.2f}x tok/s, "
           f"{rt['serving']['tok_s_per_batched_tok_ratio']:.2f}x per batched "
           f"token row")
+    rs = res["results"][3]["serving"]
+    print(f"preemptive vs fifo interactive TTFT: "
+          f"{rs['hi_ttft_e2e_steps']:.1f} vs "
+          f"{rs['hi_ttft_e2e_steps_fifo']:.1f} e2e steps "
+          f"({rs['preempt_ttft_ratio']:.2f}x, {rs['preemptions']} "
+          f"preemptions, {rs['recompute_tokens']} recomputed tokens, "
+          f"bg outputs match: {res['results'][3]['bg_outputs_match']})")
     if args.out:
         with open(args.out, "w") as f:
             json.dump(res, f, indent=2)

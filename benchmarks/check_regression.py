@@ -28,6 +28,11 @@ Default checks per baseline workload:
     compute normalisation cancels most machine speed) may not drop below
     the baseline's ``serving.tok_s_per_batched_tok_ratio_floor`` — token-
     level stepping must keep beating chunked per unit of step compute.
+  * serving format, preempt rung: ``serving.preempt_ttft_ratio`` (FIFO over
+    preemptive mean submission-to-first-token steps for the interactive
+    class, machine-independent) may not drop below the baseline's
+    ``serving.preempt_ttft_ratio_floor`` — preemptive scheduling must keep
+    buying the interactive class its latency win.
   * with ``--abs-time``, ``pipelined.total_s`` (lower is better) /
     ``serving.tok_s`` (higher is better) are also gated — opt-in because
     absolute wall numbers only compare on identical hardware.
@@ -114,6 +119,14 @@ def check(current: dict, baseline: dict, tol: float, abs_time: bool) -> list[str
                     failures.append(
                         f"{name}: per-batched-token throughput ratio "
                         f"{ratio:.2f}x below the {float(pbt_floor):.1f}x floor"
+                    )
+            pre_floor = base_serv.get("preempt_ttft_ratio_floor")
+            if pre_floor is not None:
+                ratio = float(cur_serv.get("preempt_ttft_ratio", 0.0))
+                if ratio < float(pre_floor):
+                    failures.append(
+                        f"{name}: preemptive interactive-TTFT ratio "
+                        f"{ratio:.2f}x below the {float(pre_floor):.1f}x floor"
                     )
             if abs_time:
                 _ratio_check(

@@ -11,6 +11,20 @@ devices exist (``--model-parallel`` splits heads over the model axis).
 dense-equivalent capacity); ``--prefill-chunk C`` feeds C prompt tokens per
 fused step (TTFT drops ~C× in steps). Prints the ``serve.metrics`` rollup
 (occupancy %, tok/s, TTFT, paged blocks-in-use %).
+
+Scheduling knobs: ``--high-frac 0.25`` marks ~25% of the stream as the
+interactive class (priority 0; the rest priority 2) so preemption has
+something to preempt for; ``--scheduler fifo`` is the no-preemption
+ablation; ``--deadline-ttft`` / ``--deadline`` attach wall-clock budgets to
+every request (misses are cancelled, not served late). ``--fault-seed N``
+replays the seeded chaos schedule ``FaultPlan.random(N)`` against the run
+(``--fault-horizon`` steps of pool shrinkage / forced preemptions /
+stalls), printing the preemption and deadline counters the chaos suite
+asserts on:
+
+    PYTHONPATH=src python -m repro.launch.serve --arch internlm2-20b \\
+        --reduced --batch 4 --requests 12 --kv paged --prefill-chunk 4 \\
+        --high-frac 0.25 --fault-seed 3
 """
 from __future__ import annotations
 
@@ -22,6 +36,7 @@ import numpy as np
 from repro.configs import ARCH_IDS, get_config, get_reduced_config
 from repro.dist import meshes
 from repro.models import model_zoo
+from repro.serve.faults import FaultPlan
 from repro.serve.serving import BatchedServer, Request
 
 
@@ -55,6 +70,22 @@ def main(argv=None):
     ap.add_argument("--prefill-chunk", type=int, default=1,
                     help="prompt tokens fed per fused step (chunked prefill)")
     ap.add_argument("--max-steps", type=int, default=None)
+    ap.add_argument("--scheduler", choices=["priority", "fifo"],
+                    default="priority",
+                    help="fifo = submission order, no preemption (ablation)")
+    ap.add_argument("--high-frac", type=float, default=0.0,
+                    help="fraction of requests in the interactive class "
+                         "(priority 0; the rest are priority 2)")
+    ap.add_argument("--deadline-ttft", type=float, default=None,
+                    help="per-request TTFT budget in seconds (miss = cancel)")
+    ap.add_argument("--deadline", type=float, default=None,
+                    help="per-request end-to-end budget in seconds")
+    ap.add_argument("--fault-seed", type=int, default=None,
+                    help="replay FaultPlan.random(SEED) against the run "
+                         "(seeded chaos: pool shrinkage, forced preempts, "
+                         "admission stalls)")
+    ap.add_argument("--fault-horizon", type=int, default=24,
+                    help="steps of injected chaos before the plan heals")
     args = ap.parse_args(argv)
 
     cfg = get_reduced_config(args.arch) if args.reduced else get_config(args.arch)
@@ -68,16 +99,24 @@ def main(argv=None):
 
     rng = np.random.default_rng(args.seed)
     max_seq = args.prompt_len + args.max_new + 1
+    plan = (FaultPlan.random(args.fault_seed, horizon=args.fault_horizon)
+            if args.fault_seed is not None else None)
     server = BatchedServer(cfg, params, batch_slots=args.batch, max_seq=max_seq,
                            temperature=args.temperature, seed=args.seed,
                            mesh=mesh, param_specs=specs if mesh else None,
                            admission=args.admission, kv=args.kv,
                            block_size=args.block_size, kv_blocks=args.kv_blocks,
-                           prefill_chunk=args.prefill_chunk)
+                           prefill_chunk=args.prefill_chunk,
+                           scheduler=args.scheduler, fault_plan=plan)
     n_requests = args.requests if args.requests is not None else args.batch
+    hi = rng.random(n_requests) < args.high_frac
     for i in range(n_requests):
         prompt = rng.integers(1, cfg.vocab_size, args.prompt_len).tolist()
-        server.submit(Request(rid=i, prompt=prompt, max_new_tokens=args.max_new))
+        server.submit(Request(rid=i, prompt=prompt,
+                              max_new_tokens=args.max_new,
+                              priority=0 if hi[i] else 2,
+                              deadline_ttft_s=args.deadline_ttft,
+                              deadline_s=args.deadline))
 
     done = server.run(max_steps=args.max_steps)
     m = server.metrics
@@ -92,6 +131,18 @@ def main(argv=None):
           f"{m.tokens_generated} tokens in {m.wall_s:.2f}s "
           f"({m.tok_per_s:.1f} tok/s, occupancy {m.occupancy_pct:.0f}%, "
           f"mean TTFT {ttft}){kv_desc}{mesh_desc}")
+    if (m.preemptions or m.deadline_misses or m.rejected
+            or plan is not None or args.high_frac > 0):
+        hi_ttft = m.mean_prio_ttft_e2e_steps(0)
+        hi_desc = (f", interactive TTFT {hi_ttft:.1f} e2e steps"
+                   if hi_ttft is not None else "")
+        print(f"[sched] scheduler={args.scheduler} "
+              f"preemptions={m.preemptions} "
+              f"recompute_tokens={m.recompute_tokens} "
+              f"deadline_misses={m.deadline_misses} "
+              f"rejected={m.rejected}{hi_desc}"
+              + (f" faults_applied={len(plan.applied)}"
+                 if plan is not None else ""))
     for r in done[:4]:
         print(f"  req {r.rid}: {r.out[:12]}{'...' if len(r.out) > 12 else ''}")
     return done

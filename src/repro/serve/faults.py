@@ -1,0 +1,155 @@
+"""Seeded fault injection for the serving engine: chaos you can replay.
+
+Nothing in a green test suite proves the engine survives the conditions the
+robustness machinery exists for — pool pressure mid-decode, forced evictions,
+a stalled admission path, deadline storms. ``FaultPlan`` scripts those
+conditions as *deterministic, seeded* schedules the server applies at chosen
+steps, so every chaos failure is a replayable unit test, not a flake:
+
+  * ``shrink_pool n`` — quarantine up to ``n`` blocks out of the paged pool's
+    free list (``KVBlockPool.shrink``). Capacity vanishes out from under
+    outstanding reservations, so a later ``ensure_step`` can hit
+    ``PoolExhausted`` mid-run — exercising the server's preempt-on-pressure
+    path. No-op on dense servers.
+  * ``grow_pool n`` — return quarantined blocks.
+  * ``force_preempt k`` — evict up to ``k`` victims via the server's victim
+    policy regardless of priority (``pick_victim(below=None)``): the
+    recompute-on-resume path under fire.
+  * ``stall_admission k`` — admission skipped for the next ``k`` steps
+    (deadline sweeps keep running): head-of-line pressure without pool
+    involvement.
+  * ``advance_clock dt`` — tick the plan's ``VirtualClock`` by ``dt``
+    seconds. A plan that carries clock events owns the server's clock, so
+    deadline pressure fires at *chosen steps* instead of wherever a real
+    runner's wall clock happens to land.
+
+Every plan **heals**: at ``heal_step`` (default: one past the last event) all
+quarantined blocks return and stalls clear, so a bounded ``run(max_steps=)``
+always drains — the chaos suite's termination guarantee. ``applied`` logs
+each event's observed effect for debugging a failing seed.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+KINDS = ("shrink_pool", "grow_pool", "force_preempt", "stall_admission",
+         "advance_clock")
+
+
+class VirtualClock:
+    """Deterministic stand-in for ``time.perf_counter``: returns a manually
+    advanced value, so wall-clock deadlines become scriptable."""
+
+    def __init__(self, t0: float = 0.0):
+        self.t = float(t0)
+
+    def __call__(self) -> float:
+        return self.t
+
+    def advance(self, dt: float) -> None:
+        self.t += float(dt)
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultEvent:
+    step: int
+    kind: str
+    arg: float = 0.0
+
+    def __post_init__(self):
+        if self.kind not in KINDS:
+            raise ValueError(f"kind must be one of {KINDS}, got {self.kind!r}")
+        if self.step < 0:
+            raise ValueError(f"step must be >= 0, got {self.step}")
+
+
+class FaultPlan:
+    """A replayable fault schedule (see module doc).
+
+    ``clock`` is created automatically when any ``advance_clock`` event is
+    present (pass one explicitly to share it with the request generator);
+    ``BatchedServer`` adopts it as the server clock when set."""
+
+    def __init__(self, events: list[FaultEvent], heal_step: int | None = None,
+                 clock: VirtualClock | None = None):
+        self.events = sorted(events, key=lambda e: (e.step, KINDS.index(e.kind)))
+        last = max((e.step for e in self.events), default=-1)
+        self.heal_step = last + 1 if heal_step is None else int(heal_step)
+        if self.heal_step <= last:
+            raise ValueError(
+                f"heal_step {self.heal_step} must come after the last "
+                f"event (step {last}): an unhealed plan can wedge the server"
+            )
+        if clock is None and any(e.kind == "advance_clock" for e in self.events):
+            clock = VirtualClock()
+        self.clock = clock
+        self.applied: list[tuple[int, str, float, float]] = []
+        self._healed = False
+
+    @classmethod
+    def random(cls, seed: int, horizon: int = 24, *,
+               p_shrink: float = 0.18, p_grow: float = 0.10,
+               p_preempt: float = 0.15, p_stall: float = 0.10,
+               p_clock: float = 0.35, max_blocks: int = 4,
+               clock: VirtualClock | None = None) -> "FaultPlan":
+        """Seeded-random schedule over ``horizon`` steps; identical seed =
+        identical chaos, which is what makes a chaos failure debuggable."""
+        rng = np.random.default_rng(seed)
+        events: list[FaultEvent] = []
+        for step in range(horizon):
+            if rng.random() < p_shrink:
+                events.append(FaultEvent(step, "shrink_pool",
+                                         int(rng.integers(1, max_blocks + 1))))
+            if rng.random() < p_grow:
+                events.append(FaultEvent(step, "grow_pool",
+                                         int(rng.integers(1, max_blocks + 1))))
+            if rng.random() < p_preempt:
+                events.append(FaultEvent(step, "force_preempt",
+                                         int(rng.integers(1, 3))))
+            if rng.random() < p_stall:
+                events.append(FaultEvent(step, "stall_admission",
+                                         int(rng.integers(1, 4))))
+            if rng.random() < p_clock:
+                events.append(FaultEvent(step, "advance_clock",
+                                         float(rng.uniform(0.05, 0.6))))
+        return cls(events, heal_step=horizon, clock=clock)
+
+    def events_at(self, step: int) -> list[FaultEvent]:
+        return [e for e in self.events if e.step == step]
+
+    def apply(self, server, step: int) -> None:
+        """Apply this plan's events for ``step`` to ``server`` (called at the
+        top of ``BatchedServer.step``). Idempotent healing at ``heal_step``."""
+        from repro.serve import scheduler as sched
+
+        for ev in self.events_at(step):
+            effect = 0.0
+            if ev.kind == "shrink_pool":
+                if server._paged is not None:
+                    effect = server._paged.shrink(int(ev.arg))
+            elif ev.kind == "grow_pool":
+                if server._paged is not None:
+                    effect = server._paged.grow(int(ev.arg))
+            elif ev.kind == "force_preempt":
+                for _ in range(int(ev.arg)):
+                    victim = sched.pick_victim(server.active, below=None)
+                    if victim is None:
+                        break
+                    server._preempt(victim)
+                    effect += 1
+            elif ev.kind == "stall_admission":
+                server._admit_stall = max(server._admit_stall, int(ev.arg))
+                effect = server._admit_stall
+            elif ev.kind == "advance_clock":
+                if self.clock is not None:
+                    self.clock.advance(ev.arg)
+                    effect = ev.arg
+            self.applied.append((step, ev.kind, float(ev.arg), float(effect)))
+        if step >= self.heal_step and not self._healed:
+            self._healed = True
+            if server._paged is not None:
+                healed = server._paged.grow(None)
+                self.applied.append((step, "heal", 0.0, float(healed)))
+            server._admit_stall = 0

@@ -75,6 +75,9 @@ class KVBlockPool:
         # the parity tests lean on to prove stale contents are harmless
         self._free: list[int] = list(range(num_blocks - 1, -1, -1))
         self._reserved = np.zeros(slots, np.int64)
+        # fault-injection quarantine (serve/faults.py): blocks pulled out of
+        # the free list by `shrink`, invisible to allocation until `grow`
+        self._quarantined: list[int] = []
 
     # -- accounting ----------------------------------------------------------
     @property
@@ -83,12 +86,41 @@ class KVBlockPool:
 
     @property
     def blocks_in_use(self) -> int:
-        return self.num_blocks - len(self._free)
+        """Blocks mapped into slot tables (quarantined blocks are withheld
+        by a fault plan, not in use — they must not inflate the peak-usage
+        metric or read as a leak after a drain)."""
+        return self.num_blocks - len(self._free) - len(self._quarantined)
 
     @property
     def reserved_blocks(self) -> int:
         """Outstanding worst-case demand of admitted slots not yet mapped."""
         return int(self._reserved.sum())
+
+    @property
+    def quarantined_blocks(self) -> int:
+        """Blocks a fault plan has shrunk out of the pool (0 normally)."""
+        return len(self._quarantined)
+
+    # -- fault injection -----------------------------------------------------
+    def shrink(self, n: int) -> int:
+        """Quarantine up to ``n`` free blocks (fault injection: capacity
+        vanishes out from under outstanding reservations, so a later
+        ``ensure`` may raise ``PoolExhausted`` mid-run — the *server's*
+        preemption path, not this class, restores the admission invariant).
+        Returns how many blocks were actually quarantined."""
+        take = min(int(n), len(self._free))
+        for _ in range(take):
+            self._quarantined.append(self._free.pop())
+        return take
+
+    def grow(self, n: int | None = None) -> int:
+        """Return up to ``n`` quarantined blocks (all when None) to the free
+        list; returns how many came back."""
+        back = len(self._quarantined) if n is None else min(int(n),
+                                                            len(self._quarantined))
+        for _ in range(back):
+            self._free.append(self._quarantined.pop())
+        return back
 
     # -- admission -----------------------------------------------------------
     def can_admit(self, n_blocks: int) -> bool:
@@ -158,25 +190,32 @@ class KVBlockPool:
         return np.maximum(self.table, 0).astype(np.int32)
 
     def check(self) -> None:
-        """Assert the allocator invariants (test hook):
-        free + in_use == total, no block id appears twice (across tables and
-        the free list), mapped entries form a contiguous prefix of each
-        table row, and reservations never exceed the free list."""
+        """Assert the allocator invariants (test hook / ``debug_checks``):
+        free + in_use + quarantined == total, no block id appears twice
+        (across tables, the free list, and the quarantine), mapped entries
+        form a contiguous prefix of each table row, and reservations never
+        exceed free + quarantined capacity. The reservation bound counts
+        quarantined blocks on purpose: a fault-plan ``shrink`` may push
+        ``reserved`` above ``free`` transiently (that is the injected
+        pressure the server must preempt its way out of), but admission
+        itself never promises more than the pool ever held."""
         mapped = [int(b) for row in self.table for b in row if b >= 0]
-        assert len(mapped) + len(self._free) == self.num_blocks, (
+        q = len(self._quarantined)
+        assert len(mapped) + len(self._free) + q == self.num_blocks, (
             f"conservation broken: {len(mapped)} mapped + "
-            f"{len(self._free)} free != {self.num_blocks}"
+            f"{len(self._free)} free + {q} quarantined != {self.num_blocks}"
         )
-        seen = mapped + [int(b) for b in self._free]
+        seen = mapped + [int(b) for b in self._free] + \
+            [int(b) for b in self._quarantined]
         assert len(set(seen)) == len(seen), "block id allocated twice"
         for s in range(self.slots):
             n = int(self.n_mapped[s])
             assert (self.table[s, :n] >= 0).all() and (
                 self.table[s, n:] == -1
             ).all(), f"slot {s} table not a contiguous mapped prefix"
-        assert self.reserved_blocks <= self.free_blocks, (
+        assert self.reserved_blocks <= self.free_blocks + q, (
             f"reservations {self.reserved_blocks} exceed free "
-            f"{self.free_blocks}: admission overcommitted"
+            f"{self.free_blocks} + quarantined {q}: admission overcommitted"
         )
 
 
@@ -281,6 +320,22 @@ class PagedKV:
         if self.ring is not None:
             changed |= self.ring.ensure(slot, min(last, self.ring_width - 1))
         return changed
+
+    def shrink(self, n: int) -> int:
+        """Fault injection: quarantine up to ``n`` blocks from the full-width
+        pool (the memory lever; the SWA ring is window-bounded and stays
+        fully provisioned — shrinking it would break ring semantics, not
+        model memory pressure)."""
+        return self.pool.shrink(n)
+
+    def grow(self, n: int | None = None) -> int:
+        return self.pool.grow(n)
+
+    def check(self) -> None:
+        """Assert both pools' allocator invariants (``debug_checks`` hook)."""
+        self.pool.check()
+        if self.ring is not None:
+            self.ring.check()
 
     def tables(self) -> tuple[np.ndarray, np.ndarray | None]:
         return (self.pool.table_array(),

@@ -28,6 +28,20 @@ derives the numbers the benchmarks and tests gate on:
     counts (``prefill_tokens`` / ``decode_tokens`` in the JSON rollup).
   * ``kv_blocks_total`` / ``kv_blocks_peak`` — paged-KV pool pressure
     (``kv_blocks_peak_pct`` is the blocks-in-use high-water mark).
+  * ``preemptions`` / ``recompute_tokens`` — robustness accounting for the
+    scheduler (serve/scheduler.py): how many times a victim was evicted to
+    make room, and how many already-computed positions its resumes had to
+    re-prefill (the recompute-on-resume tax — preemption trades this
+    compute for reclaimed blocks/slots).
+  * ``deadline_misses`` / ``rejected`` — load shed: requests cancelled for
+    blowing a TTFT or end-to-end deadline (their blocks freed immediately)
+    and requests refused at submit as impossible for the pool.
+  * ``per_priority`` — per-priority-class rollup: ``admitted`` /
+    ``finished`` / ``preemptions`` / ``deadline_misses`` counters plus raw
+    ``ttft_steps`` (steps since last admission) and ``ttft_e2e_steps``
+    (steps since *submission*, queue wait included — the number the
+    ``serve_preempt`` bench ratio gates on, since it is what preemptive
+    scheduling buys the interactive class).
 
 Zero-request edge cases are defined, not exceptions: with nothing finished,
 ``tok_per_s``/``occupancy_pct`` report 0.0 and the TTFT means report None.
@@ -57,8 +71,28 @@ class ServeMetrics:
     wall_s: float = 0.0
     kv_blocks_total: int = 0
     kv_blocks_peak: int = 0
+    preemptions: int = 0
+    recompute_tokens: int = 0
+    deadline_misses: int = 0
+    rejected: int = 0
     ttft_s: list[float] = dataclasses.field(default_factory=list)
     ttft_steps: list[int] = dataclasses.field(default_factory=list)
+    # priority class -> counters dict (see `prio`); int-keyed here, str-keyed
+    # in the JSON rollup
+    per_priority: dict = dataclasses.field(default_factory=dict)
+
+    def prio(self, priority: int) -> dict:
+        """The rollup dict for one priority class, created on first touch."""
+        return self.per_priority.setdefault(int(priority), {
+            "admitted": 0, "finished": 0, "preemptions": 0,
+            "deadline_misses": 0, "ttft_steps": [], "ttft_e2e_steps": [],
+        })
+
+    def mean_prio_ttft_e2e_steps(self, priority: int) -> float | None:
+        """Mean submission-to-first-token steps for one class (None before
+        any token) — queue wait included, the preemption win metric."""
+        xs = self.per_priority.get(int(priority), {}).get("ttft_e2e_steps", [])
+        return sum(xs) / len(xs) if xs else None
 
     @property
     def slot_steps(self) -> int:
@@ -128,8 +162,15 @@ class ServeMetrics:
             "kv_blocks_total": self.kv_blocks_total,
             "kv_blocks_peak": self.kv_blocks_peak,
             "kv_blocks_peak_pct": self.kv_blocks_peak_pct,
+            "preemptions": self.preemptions,
+            "recompute_tokens": self.recompute_tokens,
+            "deadline_misses": self.deadline_misses,
+            "rejected": self.rejected,
             "ttft_s": list(self.ttft_s),
             "ttft_steps": list(self.ttft_steps),
+            # JSON object keys are strings; from_dict restores the int keys
+            "per_priority": {str(k): dict(v)
+                             for k, v in self.per_priority.items()},
         }
 
     @classmethod
@@ -140,4 +181,6 @@ class ServeMetrics:
         kw = {k: v for k, v in d.items() if k in fields}
         kw["ttft_s"] = list(d.get("ttft_s", ()))
         kw["ttft_steps"] = list(d.get("ttft_steps", ()))
+        kw["per_priority"] = {int(k): dict(v)
+                              for k, v in d.get("per_priority", {}).items()}
         return cls(**kw)

@@ -1,0 +1,145 @@
+"""Admission scheduling for the serving engine: priorities, deadlines, victims.
+
+DAnA's striders and execution engine share the database's buffer pool across
+concurrent queries (PAPER.md); sharing only works in production when
+contention degrades *gracefully* — a blocked head-of-line request must not
+stall forever behind long-running tenants, and memory pressure must shed or
+reshuffle load instead of crashing. This module is the host-side policy layer
+``serve.serving.BatchedServer`` delegates those decisions to:
+
+  * ``AdmissionScheduler`` — the admission queue. ``"priority"`` policy
+    orders by ``(priority, submission order)``: **lower ``priority`` value =
+    more important** (0 is the interactive class), FIFO within a class.
+    ``"fifo"`` is the pre-scheduler ablation: pure submission order, no
+    preemption — what ``benchmarks/bench_serve.py``'s ``serve_preempt`` rung
+    measures against. A preempted request re-enters with its *original*
+    submission sequence, so it resumes at the front of its class instead of
+    behind every later arrival.
+  * request lifecycle statuses — ``QUEUED -> RUNNING -> FINISHED`` is the
+    happy path; ``PREEMPTED`` (evicted, requeued, will resume), terminal
+    ``CANCELLED_DEADLINE`` (deadline missed: load shed, blocks freed
+    immediately) and ``REJECTED`` (impossible at submit: fails loudly AND
+    carries the status). ``TERMINAL`` is the set every request must reach —
+    the chaos suite's core assertion.
+  * deadlines — per-request wall-clock budgets measured on the server's
+    clock from ``submit_s``: ``deadline_ttft_s`` (to first token; moot once
+    one is emitted) and ``deadline_s`` (end to end). ``deadline_missed``
+    is the single definition both the queued-side sweep (``expired``) and
+    the running-side sweep in the server use.
+  * ``pick_victim`` — the preemption policy: lowest priority class first
+    (highest numeric value), most recently admitted within it, so the
+    longest-running work of the least important tenant is disturbed last
+    and the freshly admitted is recomputed cheapest.
+
+Pure host-side policy over ``Request`` objects — no device state, no jax.
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+# -- request lifecycle statuses ------------------------------------------------
+QUEUED = "QUEUED"
+RUNNING = "RUNNING"
+PREEMPTED = "PREEMPTED"  # evicted mid-flight, requeued; resumes via prefill
+FINISHED = "FINISHED"
+CANCELLED_DEADLINE = "CANCELLED_DEADLINE"
+REJECTED = "REJECTED"
+
+#: statuses a request can end in; everything else must eventually leave
+TERMINAL = frozenset({FINISHED, CANCELLED_DEADLINE, REJECTED})
+
+POLICIES = ("priority", "fifo")
+
+
+def deadline_missed(req, now: float) -> bool:
+    """True when ``req`` has blown a deadline at wall-clock ``now``.
+
+    The end-to-end budget applies until the request is terminal; the TTFT
+    budget only until the first token lands (``ttft_s`` set)."""
+    if req.submit_s is None:
+        return False
+    waited = now - req.submit_s
+    if req.deadline_s is not None and waited > req.deadline_s:
+        return True
+    return (req.deadline_ttft_s is not None and req.ttft_s is None
+            and waited > req.deadline_ttft_s)
+
+
+def pick_victim(active: Sequence, below: int | None = None) -> int | None:
+    """Preemption victim among ``active`` slot occupants (None = empty slot):
+    the slot holding the lowest-priority (largest ``priority`` value), most
+    recently admitted request. ``below`` restricts candidates to classes
+    strictly less important than it (``priority > below``) — admission-driven
+    preemption must never evict a peer or better; fault-forced preemption
+    passes ``below=None`` and may evict anyone. Returns the slot index."""
+    best: int | None = None
+    best_key = None
+    for slot, req in enumerate(active):
+        if req is None or (below is not None and req.priority <= below):
+            continue
+        key = (req.priority, req.admit_seq)
+        if best_key is None or key > best_key:
+            best, best_key = slot, key
+    return best
+
+
+class AdmissionScheduler:
+    """Admission queue with a pluggable ordering policy (see module doc).
+
+    Keeps insertion cheap and ordering lazy: queues are tiny (bounded by the
+    request stream, not tokens), so an O(n) min-scan per admission beats
+    maintaining a heap with arbitrary removal (deadline expiry pulls from
+    the middle). Iteration order is submission order — stable for tests and
+    ``BatchedServer.queue`` truthiness."""
+
+    def __init__(self, policy: str = "priority"):
+        if policy not in POLICIES:
+            raise ValueError(f"policy must be one of {POLICIES}, got {policy!r}")
+        self.policy = policy
+        self._q: list = []
+        self._next_seq = 0
+
+    # -- queue protocol ------------------------------------------------------
+    def __len__(self) -> int:
+        return len(self._q)
+
+    def __bool__(self) -> bool:
+        return bool(self._q)
+
+    def __iter__(self):
+        return iter(self._q)
+
+    def _key(self, req):
+        # fifo ignores class: pure submission order. A preempted request
+        # keeps its original seq in both policies, so it resumes ahead of
+        # later arrivals (of its class, under priority ordering).
+        if self.policy == "fifo":
+            return (req.seq,)
+        return (req.priority, req.seq)
+
+    def push(self, req) -> None:
+        """Enqueue ``req``; first-time pushes get the next submission
+        sequence number, re-pushes (preempted requests) keep theirs."""
+        if req.seq < 0:
+            req.seq = self._next_seq
+            self._next_seq += 1
+        self._q.append(req)
+
+    def peek(self):
+        """The request the policy admits next, or None."""
+        return min(self._q, key=self._key) if self._q else None
+
+    def pop(self):
+        """Remove and return what ``peek`` showed."""
+        req = self.peek()
+        if req is not None:
+            self._q.remove(req)
+        return req
+
+    def expired(self, now: float) -> list:
+        """Remove and return every queued request whose deadline has passed
+        (the queued-side sweep; the server cancels what this returns)."""
+        out = [r for r in self._q if deadline_missed(r, now)]
+        for r in out:
+            self._q.remove(r)
+        return out

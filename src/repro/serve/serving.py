@@ -57,15 +57,45 @@ deployment needs, vLLM-style but reduced to its core:
     paged pool) and ``model`` axis (heads / features) via
     ``dist.meshes.SERVE_CACHE_RULES``, with the same divisibility-fallback
     bookkeeping ``Engine.sharded_path`` uses;
+  * **preemptive scheduling** (serve/scheduler.py): admission is a priority
+    queue (lower ``Request.priority`` = more important, FIFO within a
+    class) with per-request deadlines (TTFT and end-to-end, measured on the
+    server clock from submission). When a higher-priority request is
+    blocked — no free slot, or the paged pool cannot cover its reservation
+    — the scheduler evicts a victim (lowest priority class, most recently
+    admitted): the victim's blocks are ``release()``d and it is requeued
+    **carrying its generated tokens**, resuming later by chunked prefill
+    over ``prompt + generated``. Under greedy decoding the resume is
+    token-exact vs an uncontended run: the re-prefill recomputes exactly
+    the KV prefix the evicted cache held, and emission restarts at the end
+    of the carried tokens (``tests/test_serve_scheduler.py`` pins this
+    across GQA/MLA x dense/paged x chunked/tokens). Deadline misses are
+    *cancelled* — blocks freed immediately, status
+    ``CANCELLED_DEADLINE`` — so overload sheds load instead of occupying
+    slots; every request ends in a terminal status (``FINISHED`` /
+    ``CANCELLED_DEADLINE`` / ``REJECTED``);
+  * **decode-time pool pressure never raises out of ``run()``**: mid-run
+    ``ensure_step`` failures (possible when a fault plan shrinks the pool
+    out from under admission's reservations) are routed through the same
+    preemption machinery — victims are evicted until the write fits, the
+    failing slot itself evicted last;
+  * **fault injection** (serve/faults.py): a seeded ``FaultPlan`` applies
+    scripted pool shrinkage, forced preemptions, admission stalls, and
+    virtual-clock deadline pressure at chosen steps, driving the chaos
+    suite (``tests/test_serve_chaos.py``); ``debug_checks=`` (default: on
+    under pytest, off in benches) asserts the block-pool invariants after
+    every step so corruption fails at the step that caused it;
   * a ``serve.metrics.ServeMetrics`` rollup (occupancy %, admitted/finished/
-    deferrals, tok/s, TTFT, prefill vs decode tokens, blocks-in-use %), so
-    benchmarks and tests assert saturation.
+    deferrals, tok/s, TTFT, prefill vs decode tokens, blocks-in-use %,
+    preemptions/recompute/deadline-miss counters and per-priority rollups),
+    so benchmarks and tests assert saturation and robustness.
 """
 from __future__ import annotations
 
 import contextlib
 import dataclasses
 import functools
+import os
 import time
 
 import jax
@@ -76,7 +106,8 @@ from repro.dist import meshes
 from repro.models import model_zoo
 from repro.models.config import ModelConfig
 from repro.models.transformer import segments_for
-from repro.serve.kv_pool import PagedKV
+from repro.serve import scheduler as sched
+from repro.serve.kv_pool import PagedKV, PoolExhausted
 from repro.serve.metrics import ServeMetrics
 
 # cache leaves that stay per-slot (B at axis 1 of the layer-stacked leaf)
@@ -91,14 +122,29 @@ class Request:
     max_new_tokens: int
     out: list[int] = dataclasses.field(default_factory=list)
     done: bool = False
-    # fused steps consumed so far; one step advances a slot by up to
-    # ``prefill_chunk`` tokens, so TTFT in steps is ceil(prompt_len / chunk)
+    # fused steps consumed since the LAST admission; one step advances a slot
+    # by up to ``prefill_chunk`` tokens, so TTFT in steps is
+    # ceil(prompt_len / chunk) for a never-preempted request
     steps: int = 0
-    submit_s: float | None = None  # wall clock at submission (queue entry)
-    admit_s: float | None = None  # wall clock at admission into a slot
+    submit_s: float | None = None  # server clock at submission (queue entry)
+    admit_s: float | None = None  # server clock at FIRST admission into a slot
     # wall seconds from submission to first generated token — includes queue
     # wait, which is exactly what drain-then-refill's waves inflate
     ttft_s: float | None = None
+    # scheduling: lower priority value = more important (0 = interactive
+    # class); deadlines are wall budgets from submission on the server clock
+    # (deadline_ttft_s until the first token, deadline_s end to end) — a miss
+    # cancels the request and frees its blocks immediately
+    priority: int = 1
+    deadline_ttft_s: float | None = None
+    deadline_s: float | None = None
+    # lifecycle: QUEUED -> RUNNING -> FINISHED, with PREEMPTED (requeued,
+    # will resume), CANCELLED_DEADLINE, REJECTED (see serve/scheduler.py)
+    status: str = sched.QUEUED
+    preemptions: int = 0  # times evicted; resume re-prefills prompt+out
+    seq: int = -1  # submission order (scheduler-assigned; kept across resumes)
+    admit_seq: int = -1  # admission order — drives victim selection
+    submit_step: int | None = None  # server step counter at submission
 
 
 def _leaf_key(path) -> str | None:
@@ -148,6 +194,22 @@ class BatchedServer:
     (default, bit-exact reference) or ``"pallas"`` (block-table kernel;
     requires ``kv="paged"``, otherwise falls back to gather with a recorded
     fallback). The effective backend is ``server.attn_impl``.
+
+    ``scheduler`` picks the admission policy: ``"priority"`` (default —
+    priority classes, deadlines, and preemption; with uniform priorities and
+    no deadlines it behaves exactly like FIFO) or ``"fifo"`` (the
+    pre-scheduler ablation: submission order, no preemption). ``preemption``
+    overrides the policy default (priority: on, fifo: off).
+
+    ``debug_checks`` asserts the paged-pool allocator invariants after every
+    step (``KVBlockPool.check``); default None resolves to the
+    ``REPRO_SERVE_DEBUG_CHECKS`` env var ("0"/"1") or, absent that, to
+    "running under pytest" — on in tests/CI, off in benches.
+
+    ``fault_plan`` installs a ``serve.faults.FaultPlan`` applied at the top
+    of each step; a plan carrying a ``VirtualClock`` also becomes the server
+    ``clock`` (the callable behind every timestamp and deadline — defaults
+    to ``time.perf_counter``).
     """
 
     def __init__(self, cfg: ModelConfig, params, batch_slots: int, max_seq: int,
@@ -155,7 +217,10 @@ class BatchedServer:
                  param_specs=None, admission: str = "continuous",
                  kv: str = "dense", block_size: int = 16,
                  kv_blocks: int | None = None, prefill_chunk: int = 1,
-                 step_mode: str = "chunked", attn_impl: str = "gather"):
+                 step_mode: str = "chunked", attn_impl: str = "gather",
+                 scheduler: str = "priority", preemption: bool | None = None,
+                 debug_checks: bool | None = None, fault_plan=None,
+                 clock=None):
         if cfg.family == "encdec":
             raise ValueError(
                 "BatchedServer serves decoder-only families; enc-dec decode "
@@ -169,6 +234,10 @@ class BatchedServer:
             raise ValueError(f"step_mode must be chunked|tokens, got {step_mode!r}")
         if attn_impl not in ("gather", "pallas"):
             raise ValueError(f"attn_impl must be gather|pallas, got {attn_impl!r}")
+        if scheduler not in sched.POLICIES:
+            raise ValueError(
+                f"scheduler must be one of {sched.POLICIES}, got {scheduler!r}"
+            )
         # explicit >= 1 check, not truthiness: a falsy 0 must fail loudly
         # here instead of slipping through downstream `or` defaults
         if max_seq < 1:
@@ -220,11 +289,36 @@ class BatchedServer:
         self.step_mode = step_mode
         self.key = jax.random.PRNGKey(seed)
         self.active: list[Request | None] = [None] * batch_slots
-        self.queue: list[Request] = []
+        # the admission queue IS the scheduler (len/bool/iter work like the
+        # old list); `finished` holds every TERMINAL request — FINISHED and
+        # CANCELLED_DEADLINE both land here so run() drains
+        self.scheduler = scheduler
+        self.preemption = (scheduler == "priority") if preemption is None \
+            else bool(preemption)
+        self.queue = sched.AdmissionScheduler(scheduler)
         self.finished: list[Request] = []
         # head-of-line request currently blocked by the pool: one deferral
         # *episode* per request, however many steps it stays blocked
         self._deferring_rid: int | None = None
+        # fault injection + timekeeping: the clock is THE time source for
+        # submit/TTFT/deadline/wall accounting, so a fault plan's
+        # VirtualClock makes deadline pressure deterministic
+        self._faults = fault_plan
+        self._admit_stall = 0  # steps admission stays stalled (fault)
+        self._step_no = 0  # monotonic fused-step counter (fault schedule key)
+        self._admit_seq = 0  # admission counter behind Request.admit_seq
+        if clock is None and fault_plan is not None \
+                and getattr(fault_plan, "clock", None) is not None:
+            clock = fault_plan.clock
+        self._clock = clock if clock is not None else time.perf_counter
+        if debug_checks is None:
+            env = os.environ.get("REPRO_SERVE_DEBUG_CHECKS")
+            if env in ("0", "1"):
+                debug_checks = env == "1"
+            else:
+                # on under pytest (CI test jobs inherit it), off in benches
+                debug_checks = "PYTEST_CURRENT_TEST" in os.environ
+        self.debug_checks = bool(debug_checks)
         # wall seconds the latest step spent inside _admit (the admission
         # portion of that step's wall_s)
         self.last_admit_s = 0.0
@@ -351,78 +445,205 @@ class BatchedServer:
 
     # -- admission -----------------------------------------------------------
     def submit(self, req: Request):
-        if not req.prompt:
-            raise ValueError(f"request {req.rid}: empty prompt")
-        if req.max_new_tokens < 1:
-            raise ValueError(
-                f"request {req.rid}: max_new_tokens must be >= 1, "
-                f"got {req.max_new_tokens}"
-            )
-        if len(req.prompt) >= self.max_seq:
-            raise ValueError(
-                f"request {req.rid}: prompt len {len(req.prompt)} >= "
-                f"max_seq {self.max_seq}"
-            )
-        if self._paged is not None:
-            full, _ = self._paged.required(
-                len(req.prompt), req.max_new_tokens, self.prefill_chunk,
-                token_step=self.step_mode == "tokens",
-            )
-            if full > self._paged.pool.num_blocks:
-                # deferral only makes sense when finish-time releases can
-                # ever satisfy it; an impossible request must fail loudly
+        try:
+            if not req.prompt:
+                raise ValueError(f"request {req.rid}: empty prompt")
+            if req.max_new_tokens < 1:
                 raise ValueError(
-                    f"request {req.rid}: needs {full} KV blocks but the pool "
-                    f"only has {self._paged.pool.num_blocks}"
+                    f"request {req.rid}: max_new_tokens must be >= 1, "
+                    f"got {req.max_new_tokens}"
                 )
-        req.submit_s = time.perf_counter()
-        self.queue.append(req)
+            if len(req.prompt) >= self.max_seq:
+                raise ValueError(
+                    f"request {req.rid}: prompt len {len(req.prompt)} >= "
+                    f"max_seq {self.max_seq}"
+                )
+            for name in ("deadline_ttft_s", "deadline_s"):
+                d = getattr(req, name)
+                if d is not None and d <= 0:
+                    raise ValueError(
+                        f"request {req.rid}: {name} must be > 0, got {d}"
+                    )
+            if self._paged is not None:
+                full, _ = self._paged.required(
+                    len(req.prompt), req.max_new_tokens, self.prefill_chunk,
+                    token_step=self.step_mode == "tokens",
+                )
+                if full > self._paged.pool.num_blocks:
+                    # deferral only makes sense when finish-time releases can
+                    # ever satisfy it; an impossible request must fail loudly
+                    raise ValueError(
+                        f"request {req.rid}: needs {full} KV blocks but the "
+                        f"pool only has {self._paged.pool.num_blocks}"
+                    )
+        except ValueError:
+            # fail loudly AND leave the corpse inspectable: callers that
+            # catch the raise still see a terminal status on the request
+            req.status = sched.REJECTED
+            self.metrics.rejected += 1
+            raise
+        req.submit_s = self._clock()
+        req.submit_step = self._step_no
+        req.status = sched.QUEUED
+        self.queue.push(req)
+
+    def _free_slot(self) -> int | None:
+        for i, r in enumerate(self.active):
+            if r is None:
+                return i
+        return None
+
+    def _head_admissible(self, head: Request) -> bool:
+        """Can the paged pool cover ``head``'s worst-case reservation right
+        now? Resumes reserve for ``prompt + carried output`` — the same
+        positions the original reservation covered."""
+        if self._paged is None:
+            return True
+        return self._paged.can_admit(
+            len(head.prompt) + len(head.out),
+            head.max_new_tokens - len(head.out), self.prefill_chunk,
+            token_step=self.step_mode == "tokens",
+        )
+
+    def _admit_into(self, slot: int, req: Request, now: float):
+        """Bind ``req`` to ``slot``. A resumed (preempted) request feeds
+        ``prompt + out`` as its prompt: the chunked re-prefill recomputes
+        exactly the KV prefix its evicted cache held, and the engine's
+        emit boundary (``positions + 1 >= prompt_len``) restarts emission
+        right after the carried tokens — token-exact under greedy."""
+        feed = req.prompt + req.out
+        plen = len(feed)
+        if self._paged is not None:
+            self._paged.admit(slot, plen, req.max_new_tokens - len(req.out),
+                              self.prefill_chunk,
+                              token_step=self.step_mode == "tokens")
+        self.active[slot] = req
+        req.steps = 0
+        req.status = sched.RUNNING
+        req.admit_seq = self._admit_seq
+        self._admit_seq += 1
+        if req.admit_s is None:
+            # first admission only: resumes must not inflate throughput
+            # accounting (admitted counts requests, not slot bindings)
+            req.admit_s = now
+            self.metrics.admitted += 1
+            self.metrics.prio(req.priority)["admitted"] += 1
+        self._positions[slot] = 0
+        self._prompt_buf[slot] = 0
+        self._prompt_buf[slot, :plen] = feed
+        self._prompt_len[slot] = plen
+        self._last_tok[slot] = 0
+        self._active_mask[slot] = True
+
+    def _preempt(self, slot: int):
+        """Evict the request in ``slot``: release its blocks and requeue it
+        carrying its generated tokens (it resumes via ``_admit_into``'s
+        re-prefill). The recompute-on-resume tax — every cached position is
+        recomputed — is recorded in ``metrics.recompute_tokens``."""
+        req = self.active[slot]
+        if self._paged is not None:
+            self._paged.release(slot)
+            self._tables_fresh = False
+        self.active[slot] = None
+        self._active_mask[slot] = False
+        req.status = sched.PREEMPTED
+        req.preemptions += 1
+        self.metrics.preemptions += 1
+        self.metrics.prio(req.priority)["preemptions"] += 1
+        self.metrics.recompute_tokens += int(self._positions[slot])
+        self.queue.push(req)  # keeps its original seq: front of its class
+
+    def _cancel(self, req: Request, slot: int | None):
+        """Deadline miss: cancel ``req`` (terminal), freeing its slot and
+        blocks immediately — overload sheds load instead of occupying."""
+        if slot is not None:
+            if self._paged is not None:
+                self._paged.release(slot)
+                self._tables_fresh = False
+            self.active[slot] = None
+            self._active_mask[slot] = False
+        req.status = sched.CANCELLED_DEADLINE
+        self.finished.append(req)
+        self.metrics.deadline_misses += 1
+        self.metrics.prio(req.priority)["deadline_misses"] += 1
+        if self._deferring_rid == req.rid:
+            self._deferring_rid = None
+
+    def _sweep_deadlines(self, now: float):
+        """Cancel every queued or running request past a deadline (one
+        definition of "missed" for both sides: scheduler.deadline_missed)."""
+        for req in self.queue.expired(now):
+            self._cancel(req, slot=None)
+        for i, req in enumerate(self.active):
+            if req is not None and sched.deadline_missed(req, now):
+                self._cancel(req, slot=i)
+
+    def _record_first_token(self, req: Request, now: float):
+        req.ttft_s = now - req.submit_s
+        self.metrics.ttft_s.append(req.ttft_s)
+        self.metrics.ttft_steps.append(req.steps)
+        rollup = self.metrics.prio(req.priority)
+        rollup["ttft_steps"].append(req.steps)
+        # e2e steps: fused steps since SUBMISSION, queue wait included — the
+        # number preemptive scheduling improves for the interactive class
+        rollup["ttft_e2e_steps"].append(
+            self._step_no - req.submit_step + 1
+            if req.submit_step is not None else req.steps
+        )
+
+    def _finish(self, req: Request, slot: int):
+        req.done = True
+        req.status = sched.FINISHED
+        self.finished.append(req)
+        self.active[slot] = None
+        self._active_mask[slot] = False
+        self.metrics.finished += 1
+        self.metrics.prio(req.priority)["finished"] += 1
+        if self._paged is not None:
+            self._paged.release(slot)  # free-on-finish
+            self._tables_fresh = False
 
     def _admit(self):
+        now = self._clock()
+        self._sweep_deadlines(now)
         if not self.queue:
             return
         if self.admission == "drain" and any(r is not None for r in self.active):
             return  # static batching: refill only once the batch has drained
         newly = []
-        now = time.perf_counter()
-        token_step = self.step_mode == "tokens"
-        for slot in range(self.slots):
-            if self.active[slot] is None and self.queue:
-                head = self.queue[0]
-                if self._paged is not None and not self._paged.can_admit(
-                    len(head.prompt), head.max_new_tokens, self.prefill_chunk,
-                    token_step=token_step,
-                ):
-                    # the pool cannot guarantee this request's worst-case
-                    # block demand: defer (FIFO head-of-line — skipping ahead
-                    # would starve long prompts) until finish-time releases
-                    # free capacity. Never admit into a future OOM. One
-                    # deferral *episode* per request (a request blocked for
-                    # ten steps is one deferred request, not ten);
-                    # deferral_steps counts every blocked step.
+        while self.queue:
+            head = self.queue.peek()
+            free = self._free_slot()
+            ok = self._head_admissible(head)
+            if free is None or not ok:
+                # head is blocked (no slot / pool can't cover it). Preemption
+                # may clear the blockage by evicting a STRICTLY lower-priority
+                # victim — the strict inequality is the termination argument:
+                # heads pop in non-decreasing priority, so nothing admitted in
+                # this loop can become a later head's victim.
+                victim = (sched.pick_victim(self.active, below=head.priority)
+                          if self.preemption and self.admission == "continuous"
+                          else None)
+                if victim is not None:
+                    self._preempt(victim)
+                    continue  # retry the head against the freed capacity
+                if not ok:
+                    # pool-blocked with nobody to evict: defer (head-of-line —
+                    # skipping ahead would starve long prompts) until
+                    # finish-time releases free capacity. Never admit into a
+                    # future OOM. One deferral *episode* per request (a
+                    # request blocked for ten steps is one deferred request,
+                    # not ten); deferral_steps counts every blocked step.
                     if self._deferring_rid != head.rid:
                         self._deferring_rid = head.rid
                         self.metrics.deferrals += 1
                     self.metrics.deferral_steps += 1
-                    break
-                req = self.queue.pop(0)
-                if req.rid == self._deferring_rid:
-                    self._deferring_rid = None  # episode over: admitted
-                if self._paged is not None:
-                    self._paged.admit(slot, len(req.prompt),
-                                      req.max_new_tokens, self.prefill_chunk,
-                                      token_step=token_step)
-                self.active[slot] = req
-                req.steps = 0
-                req.admit_s = now
-                self._positions[slot] = 0
-                self._prompt_buf[slot] = 0
-                self._prompt_buf[slot, : len(req.prompt)] = req.prompt
-                self._prompt_len[slot] = len(req.prompt)
-                self._last_tok[slot] = 0
-                self._active_mask[slot] = True
-                self.metrics.admitted += 1
-                newly.append(slot)
+                break
+            req = self.queue.pop()
+            if req.rid == self._deferring_rid:
+                self._deferring_rid = None  # episode over: admitted
+            self._admit_into(free, req, now)
+            newly.append(free)
         if newly:
             # reset the freed slots' per-slot cache rows: recurrent state
             # (wkv/ssm/conv/shift) must start from zeros; dense KV rows get
@@ -580,17 +801,51 @@ class BatchedServer:
 
     # -- stepping ---------------------------------------------------------------
     def step(self):
-        """Admit into free slots, then one fused decode step. Wall time
-        (``metrics.wall_s``) covers the whole step, admission included;
-        ``last_admit_s`` records the admission portion so the split stays
-        assertable."""
-        t0 = time.perf_counter()
-        self._admit()
-        self.last_admit_s = time.perf_counter() - t0
+        """Apply scheduled faults, admit into free slots (unless stalled),
+        then one fused decode step. Wall time (``metrics.wall_s``) covers
+        the whole step, admission included; ``last_admit_s`` records the
+        admission portion so the split stays assertable."""
+        t0 = self._clock()
+        if self._faults is not None:
+            self._faults.apply(self, self._step_no)
+        if self._admit_stall > 0:
+            # admission stalled by a fault: deadlines still sweep (a stalled
+            # server must still shed load) but nothing enters a slot
+            self._admit_stall -= 1
+            self._sweep_deadlines(self._clock())
+        else:
+            self._admit()
+        self.last_admit_s = self._clock() - t0
         if self.step_mode == "tokens":
             self._step_tokens(t0)
         else:
             self._step_chunked(t0)
+        self._step_no += 1
+        if self.debug_checks and self._paged is not None:
+            # allocator invariants checked at the step that broke them, not
+            # steps later when a recycled block shows up in two tables
+            self._paged.check()
+
+    def _ensure_or_preempt(self, slot: int, pos: int, n: int) -> bool:
+        """``ensure_step`` that never lets ``PoolExhausted`` escape: mid-run
+        pressure (a fault plan shrinking the pool out from under admission's
+        reservations) evicts victims until the write fits, the failing slot
+        itself last. Returns True when any table changed (mapping OR
+        eviction)."""
+        changed = False
+        while True:
+            try:
+                return self._paged.ensure_step(slot, pos, n) or changed
+            except PoolExhausted:
+                # a partial mapping may have landed before the raise
+                changed = True
+                victim = sched.pick_victim(self.active, below=None)
+                if victim is None or victim == slot:
+                    # nobody else to evict: the failing slot yields and
+                    # resumes once the pool heals/frees
+                    self._preempt(slot)
+                    return changed
+                self._preempt(victim)
 
     def _step_chunked(self, t0: float):
         """C uniform masked sub-steps across all slots (the reference)."""
@@ -599,15 +854,17 @@ class BatchedServer:
         # time, or the CI-gated paged-vs-dense tok/s ratio flatters paged
         if self._paged is not None:
             # alloc-on-write: map blocks for the rows each slot writes this
-            # step (guaranteed to succeed — admission reserved the worst case)
+            # step (guaranteed to succeed when the pool is unfaulted —
+            # admission reserved the worst case; under injected shrinkage
+            # _ensure_or_preempt evicts to fit)
             changed = False
-            for i, req in enumerate(self.active):
-                if req is None:
+            for i in range(self.slots):
+                if self.active[i] is None:
                     continue
                 pos = int(self._positions[i])
                 n = min(self.prefill_chunk, self.max_seq - pos)
                 if n > 0:
-                    changed |= self._paged.ensure_step(i, pos, n)
+                    changed |= self._ensure_or_preempt(i, pos, n)
             if changed or not self._tables_fresh:
                 tf, tr = self._paged.tables()
                 self._table_dev = jnp.asarray(tf)
@@ -635,7 +892,7 @@ class BatchedServer:
         # _admit writes these in place on admission
         self._positions = np.array(positions)
         self._last_tok = np.array(last_tok)
-        now = time.perf_counter()
+        now = self._clock()
 
         n_active = 0
         generated = 0
@@ -658,19 +915,10 @@ class BatchedServer:
                 req.out.append(int(toks[j, i]))
                 generated += 1
                 if req.ttft_s is None:
-                    req.ttft_s = now - req.submit_s
-                    self.metrics.ttft_s.append(req.ttft_s)
-                    self.metrics.ttft_steps.append(req.steps)
+                    self._record_first_token(req, now)
             if (len(req.out) >= req.max_new_tokens
                     or int(self._positions[i]) >= self.max_seq):
-                req.done = True
-                self.finished.append(req)
-                self.active[i] = None
-                self._active_mask[i] = False
-                self.metrics.finished += 1
-                if self._paged is not None:
-                    self._paged.release(i)  # free-on-finish
-                    self._tables_fresh = False
+                self._finish(req, i)
         self.metrics.steps += 1
         self.metrics.active_slot_steps += n_active
         self.metrics.tokens_generated += generated
@@ -688,7 +936,7 @@ class BatchedServer:
         with two differences that cannot change tokens: prompt-overshoot
         rows are never scheduled, and idle slots contribute no rows."""
         chunk = self.prefill_chunk
-        sched: list[tuple[int, int, int]] = []  # (slot, start_pos, n_rows)
+        work: list[tuple[int, int, int]] = []  # (slot, start_pos, n_rows)
         for i, req in enumerate(self.active):
             if req is None:
                 continue
@@ -696,12 +944,21 @@ class BatchedServer:
             plen = int(self._prompt_len[i])
             n = min(chunk, plen - p) if p < plen else 1
             n = min(n, self.max_seq - p)
-            sched.append((i, p, n))
-        t_live = sum(n for _, _, n in sched)
+            work.append((i, p, n))
+        if self._paged is not None:
+            # map blocks BEFORE building the flat batch: under injected pool
+            # shrinkage _ensure_or_preempt may evict slots, and an evicted
+            # slot must not schedule rows this step
+            for i, p, n in work:
+                if self.active[i] is not None:
+                    self._ensure_or_preempt(i, p, n)
+            work = [(i, p, n) for i, p, n in work
+                    if self.active[i] is not None]
+        t_live = sum(n for _, _, n in work)
         if t_live == 0:
             # nothing runnable this step (empty batch); still a step
             self.metrics.steps += 1
-            self.metrics.wall_s += time.perf_counter() - t0
+            self.metrics.wall_s += self._clock() - t0
             return
         # pad the batch to an 8-token bucket: bounds the set of distinct
         # shapes the jitted step compiles for; padding rows are dead (live
@@ -713,7 +970,7 @@ class BatchedServer:
         live = np.zeros(t_pad, bool)
         last_row: dict[int, int] = {}
         k = 0
-        for i, p, n in sched:
+        for i, p, n in work:
             plen = int(self._prompt_len[i])
             if p < plen:
                 tokens[k:k + n] = self._prompt_buf[i, p:p + n]
@@ -725,8 +982,6 @@ class BatchedServer:
             last_row[i] = k + n - 1
             k += n
         if self._paged is not None:
-            for i, p, n in sched:
-                self._paged.ensure_step(i, p, n)
             tf, tr = self._paged.token_tables(slot_ids)
             table_dev = jnp.asarray(tf)
             ring_dev = (jnp.asarray(tr) if tr is not None
@@ -745,11 +1000,11 @@ class BatchedServer:
                 self.key, table_dev, ring_dev,
             )
         nxt = np.asarray(nxt)  # sync point: one per step
-        now = time.perf_counter()
+        now = self._clock()
 
         n_active = 0
         generated = 0
-        for i, p, n in sched:
+        for i, p, n in work:
             req = self.active[i]
             n_active += 1
             req.steps += 1
@@ -766,19 +1021,10 @@ class BatchedServer:
                     req.out.append(tok)
                     generated += 1
                     if req.ttft_s is None:
-                        req.ttft_s = now - req.submit_s
-                        self.metrics.ttft_s.append(req.ttft_s)
-                        self.metrics.ttft_steps.append(req.steps)
+                        self._record_first_token(req, now)
             if (len(req.out) >= req.max_new_tokens
                     or new_p >= self.max_seq):
-                req.done = True
-                self.finished.append(req)
-                self.active[i] = None
-                self._active_mask[i] = False
-                self.metrics.finished += 1
-                if self._paged is not None:
-                    self._paged.release(i)  # free-on-finish
-                    self._tables_fresh = False
+                self._finish(req, i)
         self.metrics.steps += 1
         self.metrics.active_slot_steps += n_active
         self.metrics.tokens_generated += generated
@@ -791,7 +1037,8 @@ class BatchedServer:
 
     def run(self, max_steps: int | None = None) -> list[Request]:
         """Step until queue and slots drain (or ``max_steps``); returns ALL
-        finished requests so far, in deterministic ``rid`` order."""
+        terminal requests so far (``FINISHED`` and ``CANCELLED_DEADLINE``
+        both land in ``finished``), in deterministic ``rid`` order."""
         steps = 0
         while (self.queue or any(r is not None for r in self.active)) and (
             max_steps is None or steps < max_steps

@@ -1,0 +1,194 @@
+"""Seeded fault-injection chaos suite (serve/faults.py x BatchedServer).
+
+Each case replays a deterministic ``FaultPlan`` — seeded-random pool
+shrinkage, forced preemptions, admission stalls, virtual-clock deadline
+pressure — against a fixed request mix and requires the robustness
+contracts to hold under fire:
+
+  * zero uncaught exceptions: mid-run ``PoolExhausted`` is absorbed by the
+    preempt-on-pressure path, never raised out of ``run()``;
+  * every submitted request reaches a terminal status (FINISHED or
+    CANCELLED_DEADLINE) within a bounded ``run(max_steps=)`` — the plan's
+    heal step guarantees drainage;
+  * the block-pool allocator invariants hold after EVERY step
+    (``debug_checks=True`` calls ``KVBlockPool.check``) and the pool is
+    empty once drained — no leaked or double-mapped blocks, whatever the
+    eviction order;
+  * token integrity: any request that FINISHED — preempted or not, however
+    many times — byte-matches its uncontended greedy oracle;
+  * replay determinism: the same seed produces the same outputs, statuses,
+    preemption count, and applied-event log.
+
+14 seeds x both step modes = 28 randomized replays, plus scripted plans
+pinning the individual fault paths (mid-run shrink, admission stall,
+deadline storm, dense-mode faults).
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_reduced_config
+from repro.models import model_zoo
+from repro.serve import scheduler as sched
+from repro.serve.faults import FaultEvent, FaultPlan, VirtualClock
+from repro.serve.serving import BatchedServer, Request
+
+ARCH = "internlm2-20b"
+SEEDS = list(range(14))
+
+# fixed request mix (prompt len, max_new, priority); rids 2 and 5 carry
+# deadlines so the random plans' clock advances exercise cancellation
+_MIX = [(4, 6, 0), (6, 8, 1), (5, 5, 2), (7, 7, 2), (4, 6, 1), (6, 5, 0)]
+
+_state = {}
+
+
+def _setup():
+    if not _state:
+        cfg = get_reduced_config(ARCH)
+        params, _ = model_zoo.init_params(cfg, jax.random.PRNGKey(2))
+        rng = np.random.default_rng(7)
+        prompts = [list(map(int, rng.integers(1, cfg.vocab_size, s)))
+                   for s, _, _ in _MIX]
+        _state.update(cfg=cfg, params=params, prompts=prompts, oracle={})
+    return _state
+
+
+def _oracle(rid):
+    """Uncontended greedy output for request ``rid`` (token-exact across
+    dense/paged and chunked/tokens, so one oracle serves every mode)."""
+    st = _setup()
+    if rid not in st["oracle"]:
+        srv = BatchedServer(st["cfg"], st["params"], batch_slots=1,
+                            max_seq=48, prefill_chunk=4)
+        srv.submit(Request(rid=0, prompt=list(st["prompts"][rid]),
+                           max_new_tokens=_MIX[rid][1]))
+        st["oracle"][rid] = srv.run()[0].out
+    return st["oracle"][rid]
+
+
+def _requests(deadlines=True):
+    st = _setup()
+    reqs = []
+    for rid, (_, max_new, prio) in enumerate(_MIX):
+        kw = {}
+        if deadlines and rid == 2:
+            kw["deadline_ttft_s"] = 1.0
+        if deadlines and rid == 5:
+            kw["deadline_s"] = 2.5
+        reqs.append(Request(rid=rid, prompt=list(st["prompts"][rid]),
+                            max_new_tokens=max_new, priority=prio, **kw))
+    return reqs
+
+
+def _chaos_run(plan, step_mode="chunked", kv="paged", deadlines=True,
+               max_steps=300):
+    st = _setup()
+    kw = dict(prefill_chunk=4, step_mode=step_mode, fault_plan=plan,
+              debug_checks=True)
+    if kv == "paged":
+        kw.update(kv="paged", block_size=8)
+    srv = BatchedServer(st["cfg"], st["params"], batch_slots=2, max_seq=48,
+                        **kw)
+    reqs = _requests(deadlines=deadlines)
+    for r in reqs:
+        srv.submit(r)
+    done = srv.run(max_steps=max_steps)
+    return srv, reqs, done
+
+
+def _assert_contracts(srv, reqs, done):
+    # drained: nothing queued, nothing resident, everything terminal
+    assert not srv.queue and all(r is None for r in srv.active)
+    assert len(done) == len(reqs)
+    assert all(r.status in sched.TERMINAL for r in reqs)
+    assert (srv.metrics.finished + srv.metrics.deadline_misses) == len(reqs)
+    if srv._paged is not None:
+        srv._paged.check()  # invariants also held per-step via debug_checks
+        pool = srv._paged.pool
+        assert pool.blocks_in_use == 0 and pool.reserved_blocks == 0
+        assert pool.free_blocks + pool.quarantined_blocks == pool.num_blocks
+    # token integrity: whatever chaos did, FINISHED output is the greedy
+    # oracle's — preemption costs recompute, never tokens
+    for r in reqs:
+        if r.status == sched.FINISHED:
+            assert r.out == _oracle(r.rid), (r.rid, r.preemptions)
+
+
+@pytest.mark.parametrize("step_mode", ["chunked", "tokens"])
+@pytest.mark.parametrize("seed", SEEDS)
+def test_random_chaos(seed, step_mode):
+    plan = FaultPlan.random(seed, horizon=16, max_blocks=3)
+    srv, reqs, done = _chaos_run(plan, step_mode=step_mode)
+    _assert_contracts(srv, reqs, done)
+
+
+@pytest.mark.parametrize("seed", [0, 5])
+def test_chaos_replay_determinism(seed):
+    def once():
+        plan = FaultPlan.random(seed, horizon=16, max_blocks=3)
+        srv, reqs, _ = _chaos_run(plan, step_mode="chunked")
+        return ([(r.rid, r.status, tuple(r.out), r.preemptions)
+                 for r in reqs], srv.metrics.preemptions, plan.applied)
+
+    assert once() == once()
+
+
+def test_scripted_midrun_shrink_preempts_not_raises():
+    """Quarantine most of the pool out from under two mid-flight slots: the
+    next ensure must hit PoolExhausted internally and resolve it by
+    eviction — never by raising out of run()."""
+    plan = FaultPlan([FaultEvent(2, "shrink_pool", 12)], heal_step=8)
+    srv, reqs, done = _chaos_run(plan, deadlines=False)
+    _assert_contracts(srv, reqs, done)
+    assert srv.metrics.preemptions > 0
+    assert srv.metrics.recompute_tokens > 0
+    assert all(r.status == sched.FINISHED for r in reqs)
+
+
+def test_scripted_admission_stall():
+    """A stalled admission path delays everything but corrupts nothing."""
+    plan = FaultPlan([FaultEvent(0, "stall_admission", 5)], heal_step=6)
+    srv, reqs, done = _chaos_run(plan, deadlines=False)
+    _assert_contracts(srv, reqs, done)
+    assert all(r.status == sched.FINISHED for r in reqs)
+    # nothing could be admitted during the stall
+    assert srv.metrics.mean_ttft_steps is not None
+
+
+def test_scripted_deadline_storm():
+    """Clock advances past every budget while admission stalls: the
+    deadline'd requests cancel (queued-side sweep still runs during the
+    stall), the rest complete intact."""
+    plan = FaultPlan(
+        [FaultEvent(0, "stall_admission", 4),
+         FaultEvent(1, "advance_clock", 3.0)], heal_step=5,
+    )
+    assert isinstance(plan.clock, VirtualClock)  # auto-created
+    srv, reqs, done = _chaos_run(plan)
+    _assert_contracts(srv, reqs, done)
+    assert srv.metrics.deadline_misses == 2
+    by_rid = {r.rid: r.status for r in reqs}
+    assert by_rid[2] == sched.CANCELLED_DEADLINE
+    assert by_rid[5] == sched.CANCELLED_DEADLINE
+
+
+@pytest.mark.parametrize("seed", [1, 3, 8])
+def test_dense_mode_chaos(seed):
+    """Dense servers have no pool to shrink (those events no-op) but forced
+    preemption, stalls, and clock pressure still apply — and dense resume
+    re-prefills into reset slot rows, token-exact."""
+    plan = FaultPlan.random(seed, horizon=16, max_blocks=3)
+    srv, reqs, done = _chaos_run(plan, kv="dense")
+    _assert_contracts(srv, reqs, done)
+
+
+def test_fault_plan_validation():
+    with pytest.raises(ValueError, match="kind"):
+        FaultEvent(0, "melt_pool", 1)
+    with pytest.raises(ValueError, match="heal_step"):
+        FaultPlan([FaultEvent(5, "shrink_pool", 1)], heal_step=3)
+    # identical seeds script identical chaos
+    a = FaultPlan.random(11, horizon=12).events
+    b = FaultPlan.random(11, horizon=12).events
+    assert a == b and len(a) > 0

@@ -1,0 +1,317 @@
+"""Preemptive scheduling (serve/scheduler.py + BatchedServer integration):
+
+* admission ordering — ``"priority"`` pops by (class, submission order),
+  ``"fifo"`` by submission order alone; a preempted request keeps its
+  original sequence, so it resumes ahead of later arrivals of its class;
+* victim policy — ``pick_victim`` evicts the lowest class (largest value),
+  most recently admitted; ``below=`` never yields a peer-or-better victim;
+* deadlines — one ``deadline_missed`` definition for the queued sweep and
+  the running sweep: TTFT budgets stop applying once a token lands, e2e
+  budgets apply until terminal; cancellation is terminal, frees the slot
+  (and blocks) immediately, and lands in ``finished``;
+* lifecycle — every request ends FINISHED / CANCELLED_DEADLINE / REJECTED;
+  ``submit`` failures carry REJECTED on the corpse AND still raise;
+* **preempt -> resume token-exactness** — the tentpole guarantee: a request
+  evicted mid-decode (or mid-prefill) and resumed by re-prefilling
+  ``prompt + generated`` byte-matches its uncontended greedy output, pinned
+  across GQA + MLA x dense/paged x chunked/token stepping, including a
+  victim evicted twice and a victim evicted before its first token;
+* admission-driven preemption — a priority-0 arrival evicts a running
+  priority-2 victim (strictly-lower-priority only: fifo and peer-priority
+  loads never preempt), and the interactive class's submission-to-first-token
+  step count beats the same load served FIFO;
+* ``debug_checks`` default resolution (env var beats the pytest default).
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_reduced_config
+from repro.models import model_zoo
+from repro.serve import scheduler as sched
+from repro.serve.serving import BatchedServer, Request
+
+FAMILIES = ["internlm2-20b", "minicpm3-4b"]  # GQA + MLA (token-mode capable)
+
+
+def _params(arch, seed=2):
+    cfg = get_reduced_config(arch)
+    params, _ = model_zoo.init_params(cfg, jax.random.PRNGKey(seed))
+    return cfg, params
+
+
+def _prompts(cfg, sizes, seed=0):
+    rng = np.random.default_rng(seed)
+    return [list(map(int, rng.integers(1, cfg.vocab_size, s))) for s in sizes]
+
+
+def _solo(cfg, params, prompt, max_new, max_seq=64, **kw):
+    srv = BatchedServer(cfg, params, batch_slots=1, max_seq=max_seq, **kw)
+    srv.submit(Request(rid=0, prompt=list(prompt), max_new_tokens=max_new))
+    return srv.run()[0].out
+
+
+# ------------------------- pure policy units ----------------------------------
+def _req(rid, priority=1, **kw):
+    return Request(rid=rid, prompt=[1], max_new_tokens=1, priority=priority,
+                   **kw)
+
+
+def test_priority_queue_ordering():
+    q = sched.AdmissionScheduler("priority")
+    for rid, prio in [(0, 2), (1, 0), (2, 1), (3, 0)]:
+        q.push(_req(rid, prio))
+    assert [q.pop().rid for _ in range(4)] == [1, 3, 2, 0]
+    assert not q and len(q) == 0
+
+
+def test_fifo_queue_ignores_priority():
+    q = sched.AdmissionScheduler("fifo")
+    for rid, prio in [(0, 2), (1, 0), (2, 1)]:
+        q.push(_req(rid, prio))
+    assert [q.pop().rid for _ in range(3)] == [0, 1, 2]
+
+
+def test_preempted_request_resumes_at_front_of_class():
+    q = sched.AdmissionScheduler("priority")
+    early = _req(0, priority=1)
+    q.push(early)
+    assert q.pop() is early  # got seq 0
+    for rid in (1, 2):
+        q.push(_req(rid, priority=1))
+    q.push(early)  # re-push after "preemption": keeps seq 0
+    assert q.pop() is early
+
+
+def test_pick_victim_lowest_class_most_recent():
+    a = _req(0, priority=0)
+    b = _req(1, priority=2)
+    c = _req(2, priority=2)
+    a.admit_seq, b.admit_seq, c.admit_seq = 0, 1, 2
+    active = [a, None, b, c]
+    assert sched.pick_victim(active) == 3  # class 2, newest admit
+    assert sched.pick_victim(active, below=2) is None  # no class worse than 2
+    assert sched.pick_victim(active, below=1) == 3
+    assert sched.pick_victim([None, None]) is None
+
+
+def test_deadline_missed_budgets():
+    r = _req(0, deadline_ttft_s=1.0, deadline_s=5.0)
+    assert not sched.deadline_missed(r, 10.0)  # never submitted
+    r.submit_s = 0.0
+    assert not sched.deadline_missed(r, 0.5)
+    assert sched.deadline_missed(r, 2.0)  # TTFT blown
+    r.ttft_s = 0.5  # first token landed: TTFT budget moot
+    assert not sched.deadline_missed(r, 2.0)
+    assert sched.deadline_missed(r, 6.0)  # e2e budget still applies
+
+
+def test_expired_pulls_from_queue_middle():
+    q = sched.AdmissionScheduler("priority")
+    keep, drop = _req(0), _req(1, deadline_s=1.0)
+    keep.submit_s = drop.submit_s = 0.0
+    q.push(keep)
+    q.push(drop)
+    assert q.expired(2.0) == [drop]
+    assert list(q) == [keep]
+
+
+def test_scheduler_policy_validation():
+    with pytest.raises(ValueError, match="policy"):
+        sched.AdmissionScheduler("lifo")
+
+
+# ------------------------- server integration ---------------------------------
+def test_submit_rejection_carries_status():
+    cfg, params = _params("internlm2-20b")
+    srv = BatchedServer(cfg, params, batch_slots=1, max_seq=16)
+    bad = Request(rid=0, prompt=[1], max_new_tokens=0)
+    with pytest.raises(ValueError, match="max_new_tokens"):
+        srv.submit(bad)
+    assert bad.status == sched.REJECTED and srv.metrics.rejected == 1
+    worse = Request(rid=1, prompt=[1], max_new_tokens=1, deadline_s=-1.0)
+    with pytest.raises(ValueError, match="deadline_s"):
+        srv.submit(worse)
+    assert worse.status == sched.REJECTED and srv.metrics.rejected == 2
+    assert not srv.queue  # rejected requests never enqueue
+
+
+def test_bad_scheduler_arg_rejected():
+    cfg, params = _params("internlm2-20b")
+    with pytest.raises(ValueError, match="scheduler"):
+        BatchedServer(cfg, params, batch_slots=1, max_seq=16, scheduler="lifo")
+
+
+def test_debug_checks_env_override(monkeypatch):
+    cfg, params = _params("internlm2-20b")
+    # running under pytest: default resolves on
+    assert BatchedServer(cfg, params, batch_slots=1, max_seq=16).debug_checks
+    monkeypatch.setenv("REPRO_SERVE_DEBUG_CHECKS", "0")
+    assert not BatchedServer(cfg, params, batch_slots=1, max_seq=16).debug_checks
+    monkeypatch.setenv("REPRO_SERVE_DEBUG_CHECKS", "1")
+    assert BatchedServer(cfg, params, batch_slots=1, max_seq=16,
+                         debug_checks=None).debug_checks
+    # the explicit argument beats the env var
+    assert not BatchedServer(cfg, params, batch_slots=1, max_seq=16,
+                             debug_checks=False).debug_checks
+
+
+@pytest.mark.parametrize("arch", FAMILIES)
+@pytest.mark.parametrize("kv", ["dense", "paged"])
+@pytest.mark.parametrize("step_mode", ["chunked", "tokens"])
+def test_preempt_resume_token_exact(arch, kv, step_mode):
+    """The tentpole guarantee, full matrix: evict a mid-decode victim, let it
+    resume via re-prefill of prompt + carried tokens, and require its final
+    output to byte-match the uncontended greedy run."""
+    cfg, params = _params(arch)
+    prompts = _prompts(cfg, [7, 5])
+    kw = dict(prefill_chunk=4, step_mode=step_mode)
+    if kv == "paged":
+        kw.update(kv="paged", block_size=8)
+    srv = BatchedServer(cfg, params, batch_slots=2, max_seq=64, **kw)
+    for i, p in enumerate(prompts):
+        srv.submit(Request(rid=i, prompt=p, max_new_tokens=8, priority=2))
+    for _ in range(3):
+        srv.step()  # both mid-decode by now (chunk 4 over 7-token prompts)
+    victim = next(i for i, r in enumerate(srv.active) if r is not None)
+    assert len(srv.active[victim].out) > 0, "victim should be mid-decode"
+    srv._preempt(victim)
+    done = {r.rid: r for r in srv.run()}
+    assert srv.metrics.preemptions == 1
+    assert srv.metrics.recompute_tokens > 0
+    for i, p in enumerate(prompts):
+        assert done[i].status == sched.FINISHED
+        assert done[i].out == _solo(cfg, params, p, 8, **kw), f"rid {i}"
+    resumed = [r for r in done.values() if r.preemptions > 0]
+    assert len(resumed) == 1
+
+
+def test_preempt_mid_prefill_token_exact():
+    """A victim evicted BEFORE its first token (still prefilling) resumes
+    with an empty carry — plain re-prefill — and its TTFT records once."""
+    cfg, params = _params("internlm2-20b")
+    (prompt,) = _prompts(cfg, [11])
+    srv = BatchedServer(cfg, params, batch_slots=1, max_seq=64,
+                        prefill_chunk=4, kv="paged", block_size=8)
+    srv.submit(Request(rid=0, prompt=prompt, max_new_tokens=6))
+    srv.step()  # position 4 of 11: mid-prefill, nothing emitted
+    assert len(srv.active[0].out) == 0
+    srv._preempt(0)
+    (req,) = srv.run()
+    assert req.out == _solo(cfg, params, prompt, 6, prefill_chunk=4,
+                            kv="paged", block_size=8)
+    assert req.preemptions == 1
+    assert len(srv.metrics.ttft_s) == 1  # first token recorded exactly once
+
+
+def test_preempted_twice_still_token_exact():
+    """slots=1 forces the background request to round-trip through the queue
+    every time an interactive request lands — twice here."""
+    cfg, params = _params("internlm2-20b")
+    bg_p, hi1_p, hi2_p = _prompts(cfg, [6, 4, 5])
+    srv = BatchedServer(cfg, params, batch_slots=1, max_seq=64,
+                        prefill_chunk=4, kv="paged", block_size=8)
+    bg = Request(rid=0, prompt=bg_p, max_new_tokens=16, priority=2)
+    srv.submit(bg)
+    for _ in range(3):
+        srv.step()
+    srv.submit(Request(rid=1, prompt=hi1_p, max_new_tokens=3, priority=0))
+    carried = len(bg.out)
+    for _ in range(50):  # hi1 finishes, bg resumes and generates again
+        srv.step()
+        if bg.status == sched.RUNNING and len(bg.out) > carried:
+            break
+    else:
+        pytest.fail("background request never resumed")
+    srv.submit(Request(rid=2, prompt=hi2_p, max_new_tokens=3, priority=0))
+    done = {r.rid: r for r in srv.run()}
+    assert bg.preemptions == 2
+    assert all(r.status == sched.FINISHED for r in done.values())
+    assert done[0].out == _solo(cfg, params, bg_p, 16, prefill_chunk=4,
+                                kv="paged", block_size=8)
+    assert done[1].out == _solo(cfg, params, hi1_p, 3, prefill_chunk=4,
+                                kv="paged", block_size=8)
+    assert done[2].out == _solo(cfg, params, hi2_p, 3, prefill_chunk=4,
+                                kv="paged", block_size=8)
+
+
+def test_admission_preemption_needs_strictly_lower_victim():
+    """Peer-priority arrivals wait; only a strictly more important head
+    evicts. FIFO policy never preempts at all."""
+    cfg, params = _params("internlm2-20b")
+    prompts = _prompts(cfg, [5, 5, 5])
+    for policy, peer_prio, expect in [("priority", 1, 0), ("priority", 0, 1),
+                                      ("fifo", 0, 0)]:
+        srv = BatchedServer(cfg, params, batch_slots=1, max_seq=64,
+                            prefill_chunk=4, scheduler=policy)
+        srv.submit(Request(rid=0, prompt=prompts[0], max_new_tokens=12,
+                           priority=1))
+        srv.step()
+        srv.submit(Request(rid=1, prompt=prompts[1], max_new_tokens=2,
+                           priority=peer_prio))
+        srv.step()
+        assert srv.metrics.preemptions == expect, (policy, peer_prio)
+        srv.run()
+
+
+def test_deadline_cancels_running_and_queued():
+    """Virtual clock: a queued request blows TTFT while waiting, a running
+    one blows its e2e budget mid-decode; both land terminal in finished
+    with blocks freed (the pool fully drains)."""
+    from repro.serve.faults import VirtualClock
+
+    cfg, params = _params("internlm2-20b")
+    prompts = _prompts(cfg, [5, 5, 5])
+    clk = VirtualClock()
+    srv = BatchedServer(cfg, params, batch_slots=1, max_seq=64,
+                        prefill_chunk=4, kv="paged", block_size=8, clock=clk)
+    running = Request(rid=0, prompt=prompts[0], max_new_tokens=40,
+                      deadline_s=1.0)
+    queued = Request(rid=1, prompt=prompts[1], max_new_tokens=4,
+                     deadline_ttft_s=0.5)
+    ok = Request(rid=2, prompt=prompts[2], max_new_tokens=4)
+    for r in (running, queued, ok):
+        srv.submit(r)
+    srv.step()
+    clk.advance(2.0)  # blows both budgets
+    done = {r.rid: r.status for r in srv.run()}
+    assert done == {0: sched.CANCELLED_DEADLINE, 1: sched.CANCELLED_DEADLINE,
+                    2: sched.FINISHED}
+    assert srv.metrics.deadline_misses == 2
+    assert srv._paged.pool.blocks_in_use == 0  # cancellation freed blocks
+    assert all(r.status in sched.TERMINAL for r in (running, queued, ok))
+
+
+def test_priority_class_ttft_beats_fifo():
+    """The serve_preempt bench contract in miniature: under a saturating
+    priority-2 load, priority-0 arrivals reach their first token in fewer
+    submission-to-token steps with preemption than served FIFO."""
+    cfg, params = _params("internlm2-20b")
+    bg_prompts = _prompts(cfg, [6, 6, 6, 6], seed=1)
+    hi_prompts = _prompts(cfg, [4, 4], seed=2)
+
+    def drive(policy):
+        srv = BatchedServer(cfg, params, batch_slots=2, max_seq=64,
+                            prefill_chunk=4, kv="paged", block_size=8,
+                            scheduler=policy)
+        bg = [Request(rid=i, prompt=p, max_new_tokens=24, priority=2)
+              for i, p in enumerate(bg_prompts)]
+        for r in bg:
+            srv.submit(r)
+        for _ in range(3):
+            srv.step()
+        for i, p in enumerate(hi_prompts):
+            srv.submit(Request(rid=100 + i, prompt=p, max_new_tokens=2,
+                               priority=0))
+        srv.run()
+        return srv, bg
+
+    pre, pre_bg = drive("priority")
+    fifo, fifo_bg = drive("fifo")
+    assert pre.metrics.preemptions > 0 and fifo.metrics.preemptions == 0
+    hi_pre = pre.metrics.mean_prio_ttft_e2e_steps(0)
+    hi_fifo = fifo.metrics.mean_prio_ttft_e2e_steps(0)
+    assert hi_pre < hi_fifo, (hi_pre, hi_fifo)
+    # preemption's cost is recompute, never wrong tokens
+    for a, b in zip(pre_bg, fifo_bg):
+        assert a.out == b.out
