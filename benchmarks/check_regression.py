@@ -33,6 +33,12 @@ Default checks per baseline workload:
     class, machine-independent) may not drop below the baseline's
     ``serving.preempt_ttft_ratio_floor`` — preemptive scheduling must keep
     buying the interactive class its latency win.
+  * scoring format (``bench_score``): ``scoring.decode_bytes_ratio`` (static
+    strider bookkeeping — full-decode bytes over projected bytes, fully
+    machine-independent) may not drop below the baseline's
+    ``scoring.decode_bytes_ratio_floor`` — projection pushdown must keep
+    decoding fewer bytes — and the scan must keep syncing the device exactly
+    once (``scoring.device_syncs == 1``).
   * with ``--abs-time``, ``pipelined.total_s`` (lower is better) /
     ``serving.tok_s`` (higher is better) are also gated — opt-in because
     absolute wall numbers only compare on identical hardware.
@@ -132,6 +138,23 @@ def check(current: dict, baseline: dict, tol: float, abs_time: bool) -> list[str
                 _ratio_check(
                     name, "serving.tok_s", float(cur_serv.get("tok_s", 0.0)),
                     float(base_serv.get("tok_s", 0.0)), tol, True, failures,
+                )
+        base_sc = base.get("scoring") or {}
+        if base_sc:
+            cur_sc = cur.get("scoring") or {}
+            ratio_floor = base_sc.get("decode_bytes_ratio_floor")
+            if ratio_floor is not None:
+                ratio = float(cur_sc.get("decode_bytes_ratio", 0.0))
+                if ratio < float(ratio_floor):
+                    failures.append(
+                        f"{name}: pushdown decode-byte ratio {ratio:.2f}x "
+                        f"below the {float(ratio_floor):.2f}x floor"
+                    )
+            syncs = cur_sc.get("device_syncs")
+            if syncs != 1:
+                failures.append(
+                    f"{name}: scoring scan synced the device {syncs}x "
+                    f"(one-sync-per-scan invariant broken)"
                 )
         if abs_time:
             _ratio_check(

@@ -27,6 +27,7 @@ SUITES = [
     ("shard", "benchmarks.bench_shard"),
     ("kernels", "benchmarks.bench_kernels"),
     ("roofline", "benchmarks.bench_roofline"),
+    ("score", "benchmarks.bench_score"),
 ]
 
 

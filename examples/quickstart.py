@@ -1,4 +1,4 @@
-"""Quickstart: the paper's §4.3 flow, end to end.
+"""Quickstart: the paper's §4.3 flow, end to end — train, then score.
 
 1. Define linear regression in DAnA's Python-embedded DSL (update rule,
    merge function, convergence).
@@ -6,6 +6,9 @@
 3. Register the compiled accelerator artifact (hDFG + Strider program +
    design point) in the catalog.
 4. Train it with the SQL query `SELECT * FROM dana.linearR('table')`.
+5. Score a *wider* table with `SELECT ... FROM dana.predict('linearR', 't')
+   WHERE ...` — the projection/filter push down into the strider program, so
+   the columns the query doesn't need are never decoded off the page.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
@@ -18,9 +21,10 @@ import numpy as np
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 from repro.algorithms import linear_regression
+from repro.db.bufferpool import BufferPool
 from repro.db.catalog import Catalog
 from repro.db.heap import write_table
-from repro.db.query import register_udf_from_trace, run_query
+from repro.db.query import execute, parse, register_udf_from_trace
 
 
 def main():
@@ -51,18 +55,47 @@ def main():
     print(f"strider program: {len(artifact['strider_program'])} instructions "
           f"(22-bit ISA)")
 
-    # --- the query -----------------------------------------------------------
-    res = run_query("SELECT * FROM dana.linearR('training_data_table');",
-                    catalog, mode="dana")
-    err = float(np.max(np.abs(res.models[0] - w_true)))
-    print(f"converged={res.converged} after {res.epochs_run} epochs; "
+    # --- TRAIN: one SQL query; the trained model lands in the catalog -------
+    pool = BufferPool(page_bytes=heap.layout.page_bytes)
+    res = execute(parse("SELECT * FROM dana.linearR('training_data_table');"),
+                  catalog, pool=pool, mode="dana")
+    tr = res.train
+    w = res.coefficients[0]
+    err = float(np.max(np.abs(w - w_true)))
+    print(f"converged={tr.converged} after {tr.epochs_run} epochs; "
           f"max |w - w*| = {err:.4f}")
-    print(f"timings: io={res.io_s:.3f}s "
+    print(f"timings: io={tr.io_s:.3f}s "
           f"(exposed={res.exposed_io_s:.3f}s overlapped={res.overlapped_io_s:.3f}s) "
           f"compute={res.compute_s:.3f}s total={res.total_s:.3f}s "
           f"[pipelined: decode fused into compute, "
           f"{res.device_syncs} device syncs]")
     assert err < 0.05
+
+    # --- PREDICT: score a wider table through the same strider path ---------
+    # the scoring table carries 20 extra columns the model never reads; the
+    # projection pushdown means they are never decoded off the page either
+    Xs = rng.normal(0, 1, (5_000, 30)).astype(np.float32)
+    write_table(os.path.join(tmp, "scoring.heap"), Xs,
+                np.zeros(5_000, np.float32))
+    catalog.register_table("scoring_table", os.path.join(tmp, "scoring.heap"),
+                           {"n_features": 30})
+    res = execute(
+        parse("SELECT c0 FROM dana.predict('linearR', 'scoring_table') "
+              "WHERE c1 > 0;"),
+        catalog, pool=pool,
+    )
+    pd = res.pushdown
+    print(f"scored {res.n_rows}/{res.rows_scanned} rows "
+          f"({res.rows_filtered} filtered), schema {res.schema}")
+    print(f"pushdown: decoded {len(pd.columns_decoded)}/{pd.n_columns_total} "
+          f"columns — {pd.bytes_decoded}/{pd.bytes_full_decode} bytes "
+          f"({pd.decode_bytes_ratio:.2f}x fewer), "
+          f"{res.device_syncs} device sync")
+
+    kept = Xs[:, 1] > 0
+    np.testing.assert_allclose(
+        res.predictions, Xs[kept, :10] @ w, atol=1e-4)
+    assert pd.decode_bytes_ratio > 2.0
     print("OK")
 
 

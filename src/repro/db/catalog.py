@@ -12,6 +12,32 @@ import os
 import pickle
 
 
+def validate_udf_artifact(name: str, artifact) -> None:
+    """Schema check for catalog UDF artifacts (register and load time).
+
+    Compiled DSL UDFs must carry ``hdfg`` + ``partition``; language-model
+    UDFs (``kind == "lm"``) must carry ``cfg`` + ``params``. Anything else
+    would surface as a KeyError deep inside the query executor, so reject it
+    at the catalog boundary with a pointer to the right registration helper.
+    """
+    if not isinstance(artifact, dict):
+        raise ValueError(
+            f"catalog: UDF {name!r} artifact must be a dict, "
+            f"got {type(artifact).__name__}"
+        )
+    required = (
+        {"cfg", "params"} if artifact.get("kind") == "lm"
+        else {"hdfg", "partition"}
+    )
+    missing = required - artifact.keys()
+    if missing:
+        raise ValueError(
+            f"catalog: UDF {name!r} artifact missing {sorted(missing)}; "
+            f"register via register_udf_from_trace (DSL) or "
+            f"register_lm_udf (language model)"
+        )
+
+
 class Catalog:
     def __init__(self, root: str):
         self.root = root
@@ -41,6 +67,7 @@ class Catalog:
 
     # -- UDF accelerator artifacts ---------------------------------------------
     def register_udf(self, name: str, artifact: dict) -> None:
+        validate_udf_artifact(name, artifact)
         path = os.path.join(self.root, f"udf_{name}.pkl")
         with open(path + ".tmp", "wb") as f:
             pickle.dump(artifact, f)
@@ -54,7 +81,11 @@ class Catalog:
         except KeyError:
             raise KeyError(f"catalog: unknown UDF {name!r}") from None
         with open(entry["artifact"], "rb") as f:
-            return pickle.load(f)
+            artifact = pickle.load(f)
+        # artifacts written before the schema check existed get validated on
+        # the way out, so the executor never sees a malformed one
+        validate_udf_artifact(name, artifact)
+        return artifact
 
     def udfs(self) -> list[str]:
         return sorted(self._index["udfs"])

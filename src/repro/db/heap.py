@@ -80,3 +80,32 @@ def write_table(
             f,
         )
     return HeapFile(path)
+
+
+def write_token_table(
+    path: str,
+    seqs: list,
+    page_bytes: int = 32 * 1024,
+    width: int | None = None,
+) -> HeapFile:
+    """Materialize token sequences as a heap table the strider can decode.
+
+    Each tuple's feature payload is its int32 token ids stored as raw words
+    (float32 view — the strider streams bits, not values), right-padded with
+    zeros to ``width``; the label column records the true sequence length.
+    This is the table format LM PREDICT queries score from.
+    """
+    if not seqs:
+        raise ValueError("token table needs at least one sequence")
+    width = width or max(len(s) for s in seqs)
+    if width <= 0:
+        raise ValueError("token table width must be positive")
+    feats = np.zeros((len(seqs), width), dtype=np.int32)
+    for i, s in enumerate(seqs):
+        if len(s) > width:
+            raise ValueError(f"sequence {i} longer than table width {width}")
+        feats[i, : len(s)] = np.asarray(s, dtype=np.int32)
+    labels = np.array([len(s) for s in seqs], dtype=np.float32)
+    return write_table(
+        path, feats.view(np.float32), labels, page_bytes=page_bytes
+    )

@@ -1,24 +1,259 @@
-"""Query layer: invoke accelerated UDFs from SQL (paper §4.3).
+"""Query layer: the SQL surface over accelerated UDFs (paper §4.3).
 
-    SELECT * FROM dana.linearR('training_data_table');
+Two verbs close the in-RDBMS loop:
 
-The RDBMS treats the UDF as a black box: we parse the call, pull the compiled
-accelerator artifact (hDFG + partition + design point + strider program) from
-the catalog, and hand execution to the solver.
+    TRAIN    SELECT * FROM dana.linearR('training_data_table');
+    PREDICT  SELECT c0, c3 FROM dana.predict('linearR', 'scoring_table')
+             WHERE c2 > 0.5;
+
+``parse`` turns SQL into a typed :class:`Statement` (verb, UDF, table,
+projection, filter); ``execute`` resolves the catalog artifacts and hands
+TRAIN to the solver and PREDICT to the scoring executor (``db/scoring.py``),
+returning a typed :class:`QueryResult`. The projection and WHERE clause of a
+PREDICT are *pushed down* into the compiled strider program: dropped columns
+are never decoded off the page and filtered tuples never reach the engine —
+``QueryResult.pushdown`` carries the byte/cycle bookkeeping that proves it.
+
+``run_query`` survives as a deprecated shim over parse/execute so existing
+callers keep working.
+
+Column naming: feature columns are positional — ``c0 .. c<D-1>`` — plus the
+``label`` column; a PREDICT's result schema is its projected columns with a
+``prediction`` column appended.
 """
 from __future__ import annotations
 
+import dataclasses
 import re
+import warnings
+
+import numpy as np
 
 from repro.core import solver
 from repro.db.bufferpool import BufferPool
 from repro.db.catalog import Catalog
 from repro.db.heap import HeapFile
 
-_QUERY_RE = re.compile(
+# normalized comparison operators a WHERE clause may use
+_OPS = ("<=", ">=", "==", "!=", "<", ">")
+_OP_ALIASES = {"=": "==", "<>": "!="}
+
+_COLUMN_RE = re.compile(r"^(c\d+|label)$")
+
+_TRAIN_RE = re.compile(
     r"^\s*SELECT\s+\*\s+FROM\s+dana\.(\w+)\s*\(\s*'([^']+)'\s*\)\s*;?\s*$",
     re.IGNORECASE,
 )
+_PREDICT_RE = re.compile(
+    r"^\s*SELECT\s+(?P<proj>\*|[\w\s,]+?)\s+FROM\s+dana\.predict\s*\(\s*"
+    r"'(?P<udf>[^']+)'\s*,\s*'(?P<table>[^']+)'\s*\)\s*"
+    r"(?:WHERE\s+(?P<col>\w+)\s*(?P<op><=|>=|==|!=|<>|=|<|>)\s*"
+    r"(?P<val>[-+]?\d+(?:\.\d+)?(?:[eE][-+]?\d+)?)\s*)?;?\s*$",
+    re.IGNORECASE,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class Predicate:
+    """One pushed-down WHERE comparison: ``column <op> value``."""
+
+    column: str  # "c<i>" (feature, by table position) or "label"
+    op: str  # normalized: < <= > >= == !=
+    value: float
+
+    def __post_init__(self):
+        if self.op not in _OPS:
+            raise ValueError(f"unsupported WHERE operator {self.op!r}")
+        if not _COLUMN_RE.match(self.column):
+            raise ValueError(
+                f"unsupported WHERE column {self.column!r} (use c<i> or label)"
+            )
+
+    def mask(self, vals):
+        """Elementwise keep-mask over a column of values (np or jnp)."""
+        if self.op == "<":
+            return vals < self.value
+        if self.op == "<=":
+            return vals <= self.value
+        if self.op == ">":
+            return vals > self.value
+        if self.op == ">=":
+            return vals >= self.value
+        if self.op == "==":
+            return vals == self.value
+        return vals != self.value
+
+
+@dataclasses.dataclass(frozen=True)
+class Statement:
+    """A parsed query: what to run, on what, returning which columns."""
+
+    verb: str  # "TRAIN" | "PREDICT"
+    udf: str
+    table: str
+    columns: tuple[str, ...] | None  # None = SELECT * (all columns)
+    where: Predicate | None
+    sql: str
+
+
+@dataclasses.dataclass
+class QueryResult:
+    """Typed result of ``execute``.
+
+    TRAIN fills ``coefficients`` (the trained model arrays, also written back
+    to the catalog artifact) and ``train`` (the full TrainResult). PREDICT
+    fills ``predictions`` — a float32 vector for GLM families, a list of
+    generated token lists for LM UDFs — plus ``result_pages``/``result_layout``
+    (the projected schema with the prediction column appended, packed as heap
+    pages) and ``pushdown`` (byte/cycle bookkeeping of the projection/filter
+    pushdown). I/O accounting follows the pipelined executor's contract:
+    ``exposed_io_s`` is what the loop blocked on, ``overlapped_io_s`` hid
+    under device compute.
+    """
+
+    verb: str
+    udf: str
+    table: str
+    schema: tuple[str, ...]
+    n_rows: int
+    predictions: object | None = None
+    coefficients: list | None = None
+    rows_scanned: int = 0
+    rows_filtered: int = 0
+    total_s: float = 0.0
+    exposed_io_s: float = 0.0
+    overlapped_io_s: float = 0.0
+    compute_s: float = 0.0
+    device_syncs: int = 0
+    pushdown: object | None = None  # scoring.PushdownStats
+    result_pages: np.ndarray | None = None
+    result_layout: object | None = None  # page.PageLayout
+    train: solver.TrainResult | None = None
+    serve_metrics: object | None = None  # serve.metrics.ServeMetrics (LM)
+
+
+def parse(sql: str) -> Statement:
+    """SQL -> :class:`Statement`; raises ValueError on anything else."""
+    m = _PREDICT_RE.match(sql)
+    if m:
+        proj = m.group("proj").strip()
+        if proj == "*":
+            columns = None
+        else:
+            columns = tuple(c.strip() for c in proj.split(","))
+            for c in columns:
+                if not _COLUMN_RE.match(c):
+                    raise ValueError(
+                        f"unknown column {c!r} in projection (use c<i>, "
+                        f"label, or *): {sql!r}"
+                    )
+            if not columns:
+                raise ValueError(f"empty projection: {sql!r}")
+        where = None
+        if m.group("col") is not None:
+            op = m.group("op")
+            where = Predicate(
+                column=m.group("col").lower(),
+                op=_OP_ALIASES.get(op, op),
+                value=float(m.group("val")),
+            )
+        return Statement(
+            verb="PREDICT",
+            udf=m.group("udf"),
+            table=m.group("table"),
+            columns=columns,
+            where=where,
+            sql=sql,
+        )
+    m = _TRAIN_RE.match(sql)
+    if m:
+        if m.group(1).lower() == "predict":
+            raise ValueError(
+                f"dana.predict takes ('udf', 'table') — two arguments: {sql!r}"
+            )
+        return Statement(
+            verb="TRAIN",
+            udf=m.group(1),
+            table=m.group(2),
+            columns=None,
+            where=None,
+            sql=sql,
+        )
+    raise ValueError(
+        "unsupported query (expected SELECT * FROM dana.udf('t') or "
+        f"SELECT ... FROM dana.predict('udf', 't') [WHERE ...]): {sql!r}"
+    )
+
+
+def execute(
+    stmt: Statement | str,
+    catalog: Catalog,
+    pool: BufferPool | None = None,
+    mode: str = "dana",
+    *,
+    max_epochs: int | None = None,
+    seed: int = 0,
+    pipelined: bool = True,
+    use_kernel: bool | None = None,
+    chunk_pages: int | None = None,
+    max_new_tokens: int = 32,
+    batch_slots: int | None = None,
+    into: str | None = None,
+) -> QueryResult:
+    """Run a parsed statement against the catalog.
+
+    TRAIN resolves the UDF's compiled artifact, trains through the solver's
+    pipelined executor, and writes the trained model back into the catalog
+    artifact (so a later PREDICT on the same UDF scores with it). PREDICT
+    streams the table's heap pages through the projected strider decode
+    straight into batched model evaluation (see ``db/scoring.py``). A shared
+    ``pool`` gives mixed train+score workloads one BufferPool.
+    """
+    if isinstance(stmt, str):
+        stmt = parse(stmt)
+    if stmt.verb == "TRAIN":
+        artifact = catalog.udf(stmt.udf)
+        heap = HeapFile(catalog.table(stmt.table)["heap"])
+        res = solver.train(
+            artifact["hdfg"],
+            artifact["partition"],
+            heap,
+            pool=pool,
+            mode=mode,
+            max_epochs=max_epochs,
+            seed=seed,
+            pipelined=pipelined,
+        )
+        artifact["model"] = res.models
+        catalog.register_udf(stmt.udf, artifact)
+        return QueryResult(
+            verb="TRAIN",
+            udf=stmt.udf,
+            table=stmt.table,
+            schema=("model",),
+            n_rows=heap.n_tuples,
+            rows_scanned=heap.n_tuples,
+            coefficients=res.models,
+            total_s=res.total_s,
+            exposed_io_s=res.exposed_io_s,
+            overlapped_io_s=res.overlapped_io_s,
+            compute_s=res.compute_s,
+            device_syncs=res.device_syncs,
+            train=res,
+        )
+    # PREDICT — lazy import: scoring pulls in kernels/serving only when used
+    from repro.db import scoring
+
+    return scoring.execute_predict(
+        stmt,
+        catalog,
+        pool=pool,
+        use_kernel=use_kernel,
+        chunk_pages=chunk_pages,
+        max_new_tokens=max_new_tokens,
+        batch_slots=batch_slots,
+        into=into,
+    )
 
 
 def run_query(
@@ -28,23 +263,37 @@ def run_query(
     mode: str = "dana",
     **train_kwargs,
 ):
-    m = _QUERY_RE.match(sql)
-    if not m:
-        raise ValueError(f"unsupported query (expected SELECT * FROM dana.udf('t')): {sql!r}")
-    udf_name, table_name = m.group(1), m.group(2)
+    """Deprecated shim over :func:`parse` / :func:`execute`.
 
-    artifact = catalog.udf(udf_name)
-    table = catalog.table(table_name)
-    heap = HeapFile(table["heap"])
-
-    g, part = artifact["hdfg"], artifact["partition"]
-    return solver.train(g, part, heap, pool=pool, mode=mode, **train_kwargs)
+    TRAIN queries return the raw ``TrainResult`` (the old contract, kwargs
+    passed through to the solver); PREDICT queries return a ``QueryResult``.
+    """
+    warnings.warn(
+        "run_query is deprecated; use parse(sql) + execute(stmt, catalog)",
+        DeprecationWarning,
+        stacklevel=2,
+    )
+    stmt = parse(sql)
+    if stmt.verb == "TRAIN":
+        artifact = catalog.udf(stmt.udf)
+        heap = HeapFile(catalog.table(stmt.table)["heap"])
+        return solver.train(
+            artifact["hdfg"], artifact["partition"], heap, pool=pool, mode=mode,
+            **train_kwargs,
+        )
+    return execute(stmt, catalog, pool=pool, mode=mode)
 
 
 def register_udf_from_trace(catalog: Catalog, name: str, fn, layout=None) -> dict:
     """Compile a DSL UDF end to end and store the artifact in the catalog:
-    hDFG, partition, strider program, design point, and schedules — what the
-    paper keeps in the RDBMS catalog for the query executor."""
+    hDFG, partition, strider program, design point, and the page layout it
+    was compiled for — what the paper keeps in the RDBMS catalog for the
+    query executor.
+
+    ``layout=None`` registers a train-only artifact (no strider program /
+    design point); a later PREDICT on it fails with a clear "registered
+    without a page layout" error instead of a KeyError deep in the executor.
+    """
     from repro.core import hwgen
     from repro.core.striders import compile_strider_program
     from repro.core.translator import trace
@@ -52,9 +301,26 @@ def register_udf_from_trace(catalog: Catalog, name: str, fn, layout=None) -> dic
     g, part = trace(fn)
     artifact = {"hdfg": g, "partition": part}
     if layout is not None:
+        artifact["layout"] = layout
         artifact["strider_program"] = compile_strider_program(layout)
         artifact["design_point"] = hwgen.explore(
             g, part, layout, n_tuples=layout.tuples_per_page
         )
+    catalog.register_udf(name, artifact)
+    return artifact
+
+
+def register_lm_udf(catalog: Catalog, name: str, cfg, params) -> dict:
+    """Register a language model as a scoring UDF: PREDICT on a token table
+    decodes prompts through the strider path and generates via a short-lived
+    BatchedServer session. Params are materialized to host arrays so the
+    artifact pickles independently of live device buffers."""
+    import jax
+
+    artifact = {
+        "kind": "lm",
+        "cfg": cfg,
+        "params": jax.tree.map(np.asarray, params),
+    }
     catalog.register_udf(name, artifact)
     return artifact

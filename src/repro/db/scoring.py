@@ -1,0 +1,461 @@
+"""PREDICT executor: SQL-driven batch scoring through the strider path.
+
+This is the paper's strider→engine handoff closed end to end for inference:
+a scoring query streams the table's heap pages through the *projected* fused
+strider-decode program (`kernels/strider/ops.decode_pages_projected_traced`)
+directly into batched model evaluation — per chunk, ONE device program runs
+page decode + WHERE filter + model scoring, so decoded tuples never bounce
+through the host between the access engine and the execution engine.
+
+Pushdown is compiled, not simulated: the query's projection and filter
+columns (plus the model's input columns) define a ProjectionPlan, and both
+the Strider ISA program and the Pallas/jnp decode kernels restrict themselves
+to those payload words — dropped columns are never read off the page, and
+:class:`PushdownStats` carries the static byte/cycle accounting that proves
+it (cross-checked against the ISA interpreter's FIFO in tests). Filtered
+tuples are masked out of the engine (GLM: the keep-mask rides the same lane
+mask the training kernel uses) or never submitted at all (LM: filtered rows
+never reach the BatchedServer).
+
+Model families:
+  GLM (linear / logistic / svm)  structural template match on the UDF's hDFG
+      (core.engine.match_glm_template); scores via the engine's row-parallel
+      predict kernel. The model reads the FIRST d feature columns of the
+      scoring table (schema-prefix convention) — wider tables are exactly
+      where projection pushdown pays.
+  LRMF  single 2-D model (n_items, rank); the prediction is the per-row
+      reconstruction error ||x - (xM)Mᵀ|| of the rating row.
+  LM    artifacts registered via register_lm_udf; prompts decode from token
+      tables (heap.write_token_table) through the same strider path, then a
+      short-lived BatchedServer session generates (continuous batching).
+
+Results flow back as result pages — the projected schema with a `prediction`
+column appended, packed by the same page builder the heap uses — so a scoring
+query's output composes with the rest of the db/ layer (``into=`` registers
+it as a catalog table). Mixed train+score workloads share one BufferPool;
+I/O accounting follows the pipelined executor's exposed-vs-overlapped
+contract (what the loop blocked on vs what hid under device compute).
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import re
+import time
+
+import numpy as np
+
+from repro.core import striders
+from repro.db.bufferpool import BufferPool
+from repro.db.heap import HeapFile, write_table, write_token_table
+from repro.db.page import PageLayout
+
+CHUNK_PAGES = 512  # pages decoded per device chunk (matches solver's)
+
+
+@dataclasses.dataclass(frozen=True)
+class PushdownStats:
+    """Static pushdown bookkeeping for one PREDICT query.
+
+    ``bytes_decoded`` is what the projected strider streams off the pages
+    (``n_tuples * plan.bytes_per_tuple``); ``bytes_full_decode`` is what a
+    full decode of the same rows would have streamed. ``strider_cycles`` is
+    the access-engine cycle model (hwgen's) summed over the scan, assuming
+    full pages. Tests cross-check both against the ISA interpreter's actual
+    FIFO length / cycle count on real pages.
+    """
+
+    columns_decoded: tuple[int, ...]
+    n_columns_total: int
+    include_label: bool
+    bytes_per_tuple: int
+    bytes_per_tuple_full: int
+    bytes_decoded: int
+    bytes_full_decode: int
+    strider_cycles: int
+    strider_cycles_full: int
+
+    @property
+    def decode_bytes_ratio(self) -> float:
+        """full-decode bytes / projected bytes (>= 1; the pushdown win)."""
+        return self.bytes_full_decode / max(self.bytes_decoded, 1)
+
+
+def _pushdown_stats(heap: HeapFile, plan: striders.ProjectionPlan) -> PushdownStats:
+    layout = heap.layout
+    n = heap.n_tuples
+    return PushdownStats(
+        columns_decoded=plan.columns,
+        n_columns_total=layout.n_features,
+        include_label=plan.include_label,
+        bytes_per_tuple=plan.bytes_per_tuple,
+        bytes_per_tuple_full=plan.bytes_per_tuple_full,
+        bytes_decoded=n * plan.bytes_per_tuple,
+        bytes_full_decode=n * plan.bytes_per_tuple_full,
+        strider_cycles=heap.n_pages * striders.strider_cycles_per_page(layout, plan),
+        strider_cycles_full=heap.n_pages * striders.strider_cycles_per_page(layout),
+    )
+
+
+def _column_index(name: str, layout: PageLayout) -> int | None:
+    """'c<i>' -> feature index (validated), 'label' -> None."""
+    if name == "label":
+        return None
+    m = re.match(r"^c(\d+)$", name)
+    if not m:
+        raise ValueError(f"unknown column {name!r}")
+    idx = int(m.group(1))
+    if idx >= layout.n_features:
+        raise ValueError(
+            f"column {name!r} out of range: table has {layout.n_features} "
+            f"feature columns (c0..c{layout.n_features - 1})"
+        )
+    return idx
+
+
+def _glm_family(artifact: dict, udf: str) -> str:
+    """Map a UDF artifact to a scorable family: linear/logistic/svm/lrmf."""
+    from repro.core.engine import match_glm_template
+
+    g, part = artifact["hdfg"], artifact["partition"]
+    act = match_glm_template(g, part)
+    if act is not None:
+        return act
+    if len(g.model_ids) == 1 and len(g.node(g.model_ids[0]).shape) == 2:
+        return "lrmf"  # single 2-D factor model: reconstruction-error scoring
+    raise ValueError(
+        f"UDF {udf!r} does not match a scorable template "
+        f"(GLM gradient or 2-D factor model)"
+    )
+
+
+def _scoring_model(artifact: dict, udf: str) -> np.ndarray:
+    if "model" not in artifact:
+        raise ValueError(
+            f"UDF {udf!r} has no trained model; run the TRAIN query "
+            f"(SELECT * FROM dana.{udf}('<table>')) first"
+        )
+    if "strider_program" not in artifact or "design_point" not in artifact:
+        raise ValueError(
+            f"UDF {udf!r} was registered without a page layout — no strider "
+            f"program / design point was compiled; re-register with "
+            f"register_udf_from_trace(..., layout=heap.layout)"
+        )
+    return np.asarray(artifact["model"][0])
+
+
+def _build_glm_chunk_fn(layout, plan, family, model, where, where_idx,
+                        use_kernel):
+    """One fused device program per chunk: projected strider decode + WHERE
+    keep-mask + model scoring. Returns (preds, keep, feats, labels) device
+    arrays flattened over tuples; nothing syncs until the caller joins."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.kernels.engine import ops as engine_ops
+    from repro.kernels.strider import ops as strider_ops
+
+    dm = model.shape[0]
+    model_pos = jnp.asarray(
+        [plan.columns.index(c) for c in range(dm)], dtype=jnp.int32
+    )
+    w = jnp.asarray(model, dtype=jnp.float32)
+    where_pos = (
+        None if where_idx is None else plan.columns.index(where_idx)
+    )
+
+    @jax.jit
+    def run(pages):
+        feats, labels, mask = strider_ops.decode_pages_projected_traced(
+            pages, layout, plan, use_kernel
+        )
+        p, t, c = feats.shape
+        f2 = feats.reshape(p * t, c)
+        lab = labels.reshape(p * t)
+        keep = mask.reshape(p * t) > 0
+        if where is not None:
+            vals = lab if where.column == "label" else f2[:, where_pos]
+            keep = keep & where.mask(vals)
+        x = jnp.take(f2, model_pos, axis=1)
+        if family == "lrmf":
+            # prediction = per-row reconstruction error ||x - (xM)Mᵀ||
+            recon = (x @ w) @ w.T
+            d = jnp.where(keep[:, None], x - recon, 0.0)
+            preds = jnp.sqrt(jnp.sum(d * d, axis=1))
+        else:
+            preds = engine_ops.glm_predict_traced(
+                x, w, keep.astype(jnp.float32), act=family,
+                use_kernel=use_kernel,
+            )
+        return preds, keep, f2, lab
+
+    return run
+
+
+def _scan_chunks(heap, pool, chunk_pages, run_chunk):
+    """Double-buffered page scan: fetch chunk k+1 on the pool's background
+    thread while the device runs chunk k; ONE host↔device join at the end.
+    Returns (chunk outputs, exposed_io_s, overlapped_io_s, compute_s)."""
+    import jax
+
+    page_chunks = [
+        np.arange(s, min(s + chunk_pages, heap.n_pages))
+        for s in range(0, heap.n_pages, chunk_pages)
+    ]
+    outs = []
+    exposed = overlapped = 0.0
+    t0 = time.perf_counter()
+    if page_chunks:
+        handle = pool.prefetch_batch(heap, page_chunks[0])
+        try:
+            for k in range(len(page_chunks)):
+                t_wait = time.perf_counter()
+                pages_np = handle.result()
+                waited = time.perf_counter() - t_wait
+                exposed += waited
+                overlapped += max(handle.fetch_s - waited, 0.0)
+                if k + 1 < len(page_chunks):
+                    handle = pool.prefetch_batch(heap, page_chunks[k + 1])
+                outs.append(run_chunk(pages_np))
+        except BaseException:
+            # leave the pool quiescent even when a chunk blows up mid-scan
+            if not handle.cancel():
+                try:
+                    handle.result()
+                except Exception:
+                    pass
+            raise
+        jax.block_until_ready(outs)
+    compute = time.perf_counter() - t0 - exposed
+    return outs, exposed, overlapped, compute
+
+
+def execute_predict(
+    stmt,
+    catalog,
+    pool: BufferPool | None = None,
+    *,
+    use_kernel: bool | None = None,
+    chunk_pages: int | None = None,
+    max_new_tokens: int = 32,
+    batch_slots: int | None = None,
+    into: str | None = None,
+):
+    """Run a parsed PREDICT statement; returns a query.QueryResult.
+
+    ``into=`` additionally materializes the result pages as a heap table
+    registered in the catalog under that name (token table for LM UDFs), so
+    a scoring query's output is itself queryable.
+    """
+    from repro.db import query as q
+
+    t_start = time.perf_counter()
+    artifact = catalog.udf(stmt.udf)
+    heap = HeapFile(catalog.table(stmt.table)["heap"])
+    layout = heap.layout
+    chunk = chunk_pages or CHUNK_PAGES
+    pool = pool or BufferPool(
+        pool_bytes=chunk * layout.page_bytes, page_bytes=layout.page_bytes
+    )
+
+    if artifact.get("kind") == "lm":
+        return _predict_lm(
+            stmt, catalog, artifact, heap, pool, chunk, t_start,
+            use_kernel=use_kernel, max_new_tokens=max_new_tokens,
+            batch_slots=batch_slots, into=into,
+        )
+
+    family = _glm_family(artifact, stmt.udf)
+    model = _scoring_model(artifact, stmt.udf)
+    dm = model.shape[0]
+    if dm > layout.n_features:
+        raise ValueError(
+            f"UDF {stmt.udf!r} reads {dm} feature columns but table "
+            f"{stmt.table!r} has only {layout.n_features}"
+        )
+
+    # ---- pushdown plan: model cols ∪ projection cols ∪ filter col ----------
+    if stmt.columns is None:
+        proj_names = [f"c{i}" for i in range(layout.n_features)] + ["label"]
+    else:
+        proj_names = list(stmt.columns)
+    proj_idx = [_column_index(n, layout) for n in proj_names]
+    include_label = None in proj_idx
+    where_idx = None
+    if stmt.where is not None:
+        where_idx = _column_index(stmt.where.column, layout)
+        include_label = include_label or where_idx is None
+    decode_cols = set(range(dm)) | {i for i in proj_idx if i is not None}
+    if where_idx is not None:
+        decode_cols.add(where_idx)
+    plan = striders.projection_plan(
+        layout, decode_cols, include_label=bool(include_label)
+    )
+    pushdown = _pushdown_stats(heap, plan)
+
+    # ---- fused scan: decode + filter + score, double-buffered --------------
+    run_chunk = _build_glm_chunk_fn(
+        layout, plan, family, model, stmt.where, where_idx, use_kernel
+    )
+    outs, exposed, overlapped, compute = _scan_chunks(
+        heap, pool, chunk, run_chunk
+    )
+
+    # ---- host-side result assembly (dynamic row count) ---------------------
+    if outs:
+        preds = np.concatenate([np.asarray(o[0]) for o in outs])
+        keep = np.concatenate([np.asarray(o[1]) for o in outs])
+        f2 = np.concatenate([np.asarray(o[2]) for o in outs])
+        lab = np.concatenate([np.asarray(o[3]) for o in outs])
+    else:
+        preds = np.zeros(0, np.float32)
+        keep = np.zeros(0, bool)
+        f2 = np.zeros((0, plan.n_columns), np.float32)
+        lab = np.zeros(0, np.float32)
+    preds, f2, lab = preds[keep], f2[keep], lab[keep]
+    n_kept = int(keep.sum())
+
+    cols = []
+    for idx in proj_idx:
+        cols.append(lab if idx is None else f2[:, plan.columns.index(idx)])
+    result_feats = (
+        np.stack(cols, axis=1).astype(np.float32)
+        if cols else np.zeros((n_kept, 0), np.float32)
+    )
+    schema = tuple(proj_names) + ("prediction",)
+    result_layout = PageLayout(
+        n_features=len(proj_names), page_bytes=layout.page_bytes,
+        quantized=False,
+    )
+    if n_kept:
+        from repro.db.page import build_pages
+
+        result_pages = build_pages(result_feats, preds, result_layout)
+    else:
+        result_pages = np.zeros((0, result_layout.page_words), np.uint32)
+
+    if into is not None:
+        path = os.path.join(catalog.root, f"{into}.heap")
+        if n_kept:
+            write_table(path, result_feats, preds, page_bytes=layout.page_bytes)
+        else:
+            _write_empty_table(path, result_layout)
+        catalog.register_table(
+            into, path, {"n_features": len(proj_names), "columns": list(schema)}
+        )
+
+    return q.QueryResult(
+        verb="PREDICT",
+        udf=stmt.udf,
+        table=stmt.table,
+        schema=schema,
+        n_rows=n_kept,
+        predictions=preds,
+        rows_scanned=heap.n_tuples,
+        rows_filtered=heap.n_tuples - n_kept,
+        total_s=time.perf_counter() - t_start,
+        exposed_io_s=exposed,
+        overlapped_io_s=overlapped,
+        compute_s=compute,
+        device_syncs=1,
+        pushdown=pushdown,
+        result_pages=result_pages,
+        result_layout=result_layout,
+    )
+
+
+def _write_empty_table(path: str, layout: PageLayout) -> None:
+    """Materialize a zero-row table (a filter can legitimately drop all)."""
+    write_table(
+        path,
+        np.zeros((0, layout.n_features), np.float32),
+        np.zeros(0, np.float32),
+        page_bytes=layout.page_bytes,
+    )
+
+
+def _predict_lm(stmt, catalog, artifact, heap, pool, chunk, t_start, *,
+                use_kernel, max_new_tokens, batch_slots, into):
+    """LM PREDICT: decode prompts from a token table via the strider path,
+    filter, generate on a short-lived continuous-batching session.
+
+    Filtered rows genuinely never reach the server — the predicate runs on
+    the decoded tuple stream before any request is submitted. Token columns
+    compare as int token ids (the strider streams raw words; the query layer
+    reinterprets), ``label`` compares as the stored prompt length.
+    """
+    import jax
+
+    from repro.db import query as q
+    from repro.kernels.strider import ops as strider_ops
+    from repro.serve.serving import score_tokens
+
+    layout = heap.layout
+    if stmt.columns is not None:
+        raise ValueError("LM PREDICT supports SELECT * only (token tables)")
+
+    plan = striders.full_plan(layout)  # generation reads every token column
+    pushdown = _pushdown_stats(heap, plan)
+
+    @jax.jit
+    def run(pages):
+        return strider_ops.decode_pages_projected_traced(
+            pages, layout, plan, use_kernel
+        )
+
+    outs, exposed, overlapped, compute = _scan_chunks(heap, pool, chunk, run)
+    if outs:
+        feats = np.concatenate([np.asarray(o[0]) for o in outs])
+        labels = np.concatenate([np.asarray(o[1]) for o in outs])
+        mask = np.concatenate([np.asarray(o[2]) for o in outs])
+    else:
+        feats = np.zeros((0, 0, layout.n_features), np.float32)
+        labels = np.zeros((0, 0), np.float32)
+        mask = np.zeros((0, 0), np.float32)
+    tokens = (
+        np.ascontiguousarray(feats).view(np.int32).reshape(-1, layout.n_features)
+    )
+    lengths = labels.reshape(-1).astype(np.int32)
+    live = mask.reshape(-1) > 0
+
+    keep = live.copy()
+    if stmt.where is not None:
+        idx = _column_index(stmt.where.column, layout)
+        vals = lengths if idx is None else tokens[:, idx]
+        keep &= np.asarray(stmt.where.mask(vals))
+
+    prompts = [
+        tokens[i, : lengths[i]].tolist() for i in np.flatnonzero(keep)
+    ]
+    gen, metrics = score_tokens(
+        artifact["cfg"], artifact["params"], prompts,
+        max_new_tokens=max_new_tokens, batch_slots=batch_slots,
+    )
+
+    if into is not None:
+        path = os.path.join(catalog.root, f"{into}.heap")
+        if gen:
+            write_token_table(path, gen, page_bytes=layout.page_bytes)
+            catalog.register_table(
+                into, path,
+                {"n_features": max(len(g) for g in gen), "kind": "tokens"},
+            )
+        # zero-row LM results have no width to materialize; skip registration
+
+    return q.QueryResult(
+        verb="PREDICT",
+        udf=stmt.udf,
+        table=stmt.table,
+        schema=("prediction",),
+        n_rows=len(gen),
+        predictions=gen,
+        rows_scanned=heap.n_tuples,
+        rows_filtered=int(live.sum()) - len(gen),
+        total_s=time.perf_counter() - t_start,
+        exposed_io_s=exposed,
+        overlapped_io_s=overlapped,
+        compute_s=compute,
+        device_syncs=1,
+        pushdown=pushdown,
+        serve_metrics=metrics,
+    )

@@ -20,7 +20,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.kernels.engine.ref import glm_error
+from repro.kernels.engine.ref import glm_act, glm_error
 
 
 def _glm_kernel(x_ref, y_ref, w_ref, mask_ref, out_ref, *, act: str):
@@ -67,4 +67,44 @@ def glm_grad_pallas(
         out_shape=jax.ShapeDtypeStruct((1, d), jnp.float32),
         interpret=interpret,
     )(x, y[None, :], w[None, :], mask[None, :])
+    return out[0]
+
+
+def _glm_predict_kernel(x_ref, w_ref, mask_ref, out_ref, *, act: str):
+    x = x_ref[...]  # (TB, D) f32
+    w = w_ref[...]  # (1, D)  f32
+    z = jax.lax.dot_general(
+        x, w[0, :], (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )  # (TB,)
+    out_ref[...] = jnp.where(mask_ref[0, :] > 0.0, glm_act(z, act), 0.0)[None, :]
+
+
+def glm_predict_pallas(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    mask: jnp.ndarray,
+    act: str,
+    block_rows: int = 128,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Scoring datapath: x (N, D), w (D,), mask (N,) — all padded; returns
+    (N,) per-row predictions act(X·w). Same row tiling as the gradient kernel
+    but no accumulator — each grid step writes its own output tile, so the
+    batch scoring query is one embarrassingly row-parallel pass."""
+    n, d = x.shape
+    assert n % block_rows == 0, "pad rows to the block size first"
+    grid = (n // block_rows,)
+    kernel = functools.partial(_glm_predict_kernel, act=act)
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_rows, d), lambda i: (i, 0)),
+            pl.BlockSpec((1, d), lambda i: (0, 0)),
+            pl.BlockSpec((1, block_rows), lambda i: (0, i)),
+        ],
+        out_specs=pl.BlockSpec((1, block_rows), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((1, n), jnp.float32),
+        interpret=interpret,
+    )(x, w[None, :], mask[None, :])
     return out[0]

@@ -8,7 +8,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.engine import ref
-from repro.kernels.engine.engine import glm_grad_pallas
+from repro.kernels.engine.engine import glm_grad_pallas, glm_predict_pallas
 
 LANES = 128
 
@@ -51,6 +51,47 @@ def glm_grad(x, y, w, mask=None, act: str = "linear", use_kernel: bool | None = 
     if use_kernel is None:
         use_kernel = jax.default_backend() == "tpu"
     return _glm_grad(x, y, w, mask, act, bool(use_kernel), int(block_rows))
+
+
+def glm_predict_traced(x, w, mask=None, act: str = "linear",
+                       use_kernel: bool | None = None, block_rows: int = 128):
+    """Trace-time per-row GLM scoring body: predictions act(X·w), dead rows 0.
+
+    Safe inside an enclosing ``jax.jit`` — the scoring executor fuses this
+    with the projected strider decode into one device program. Path policy
+    matches glm_grad: Pallas on TPU, jnp oracle elsewhere.
+    """
+    if mask is None:
+        mask = jnp.ones(x.shape[0], dtype=jnp.float32)
+    if use_kernel is None:
+        use_kernel = jax.default_backend() == "tpu"
+    if not use_kernel:
+        return ref.glm_predict_ref(x, w, mask, act)
+    n, d = x.shape
+    dp = -(-d // LANES) * LANES
+    rows = max(int(block_rows), LANES)
+    np_ = -(-n // rows) * rows
+    xp = _pad_to(_pad_to(x.astype(jnp.float32), np_, 0), dp, 1)
+    mp = _pad_to(mask.astype(jnp.float32), np_, 0)
+    wp = _pad_to(w.astype(jnp.float32), dp, 0)
+    interpret = jax.default_backend() == "cpu"
+    p = glm_predict_pallas(xp, wp, mp, act, block_rows=rows, interpret=interpret)
+    return p[:n]
+
+
+@partial(jax.jit, static_argnames=("act", "use_kernel", "block_rows"))
+def _glm_predict(x, w, mask, act, use_kernel, block_rows):
+    return glm_predict_traced(x, w, mask, act, use_kernel, block_rows)
+
+
+def glm_predict(x, w, mask=None, act: str = "linear",
+                use_kernel: bool | None = None, block_rows: int = 128):
+    """Batch GLM scoring (standalone jitted dispatch): (N,) predictions."""
+    if mask is None:
+        mask = jnp.ones(x.shape[0], dtype=jnp.float32)
+    if use_kernel is None:
+        use_kernel = jax.default_backend() == "tpu"
+    return _glm_predict(x, w, mask, act, bool(use_kernel), int(block_rows))
 
 
 def glm_grad_sharded(x, y, w, mask=None, act: str = "linear", *,

@@ -24,3 +24,22 @@ def glm_grad_ref(
     z = x.astype(jnp.float32) @ w.astype(jnp.float32)
     e = glm_error(z, y.astype(jnp.float32), act) * mask.astype(jnp.float32)
     return e @ x.astype(jnp.float32)
+
+
+def glm_act(z: jnp.ndarray, act: str) -> jnp.ndarray:
+    """Forward activation for scoring: the model's prediction from z = X·w."""
+    if act == "linear":
+        return z
+    if act == "logistic":
+        return jax.nn.sigmoid(z)
+    if act == "svm":
+        return jnp.where(z >= 0.0, 1.0, -1.0)
+    raise ValueError(f"unknown GLM activation {act!r}")
+
+
+def glm_predict_ref(
+    x: jnp.ndarray, w: jnp.ndarray, mask: jnp.ndarray, act: str
+) -> jnp.ndarray:
+    """Per-row predictions act(X·w); dead rows (mask 0) come back as 0."""
+    z = x.astype(jnp.float32) @ w.astype(jnp.float32)
+    return jnp.where(mask.astype(jnp.float32) > 0.0, glm_act(z, act), 0.0)

@@ -12,6 +12,7 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
+from repro.core.striders import ProjectionPlan
 from repro.db.page import PageLayout
 from repro.dist import meshes as dist_meshes
 from repro.kernels.strider import ref
@@ -90,9 +91,65 @@ def decode_pages_traced(
     return feats, labels, mask
 
 
+def decode_pages_projected_traced(
+    pages, layout: PageLayout, plan: ProjectionPlan,
+    use_kernel: bool | None = None, rules: dict | None = None,
+):
+    """Trace-time pushdown decode body (safe inside an enclosing ``jax.jit``).
+
+    Same fusion contract as :func:`decode_pages_traced`, but the decode is
+    restricted to ``plan``'s payload words — the scoring executor composes
+    this with filter evaluation and model scoring into one device program, so
+    dropped columns never leave the page buffer and filtered tuples never
+    reach the engine. ``plan`` is static (frozen dataclass of tuples): it is
+    part of the jit cache key, exactly like the layout.
+    """
+    check_vmem(layout)
+    if use_kernel is None:
+        use_kernel = default_use_kernel()
+    pages = jnp.asarray(pages).astype(jnp.uint32)
+    pages = dist_meshes.shard_act(pages, PAGE_AXES, "strider_pages", rules=rules)
+    if use_kernel:
+        interpret = jax.default_backend() == "cpu"
+        feats, labels, mask = strider_decode(
+            pages, layout, interpret=interpret, plan=plan
+        )
+    else:
+        feats, labels, mask = ref.decode_pages_projected_ref(pages, layout, plan)
+    feats = dist_meshes.shard_act(
+        feats, DECODED_AXES["feats"], "strider_feats", rules=rules
+    )
+    labels = dist_meshes.shard_act(
+        labels, DECODED_AXES["labels"], "strider_labels", rules=rules
+    )
+    mask = dist_meshes.shard_act(
+        mask, DECODED_AXES["mask"], "strider_mask", rules=rules
+    )
+    return feats, labels, mask
+
+
 @partial(jax.jit, static_argnums=(1, 2))
 def _decode_jit(pages, layout: PageLayout, use_kernel: bool):
     return decode_pages_traced(pages, layout, use_kernel)
+
+
+@partial(jax.jit, static_argnums=(1, 2, 3))
+def _decode_projected_jit(
+    pages, layout: PageLayout, plan: ProjectionPlan, use_kernel: bool
+):
+    return decode_pages_projected_traced(pages, layout, plan, use_kernel)
+
+
+def decode_pages_projected(
+    pages: jnp.ndarray, layout: PageLayout, plan: ProjectionPlan,
+    use_kernel: bool | None = None,
+):
+    """Standalone jitted pushdown decode (see decode_pages for path policy)."""
+    if use_kernel is None:
+        use_kernel = default_use_kernel()
+    return _decode_projected_jit(
+        jnp.asarray(pages, dtype=jnp.uint32), layout, plan, bool(use_kernel)
+    )
 
 
 def decode_pages(pages: jnp.ndarray, layout: PageLayout, use_kernel: bool | None = None):

@@ -11,6 +11,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.core.striders import ProjectionPlan
 from repro.db.page import TUPLE_HEADER_BYTES, PageLayout
 
 
@@ -57,6 +58,56 @@ def decode_pages_ref(
     # select (not multiply): feature words may be arbitrary bit patterns
     # (e.g. int32 tokens viewed as f32 denormals/NaNs) that arithmetic would
     # destroy via FTZ/NaN propagation
+    feats = jnp.where(live[:, :, None], feats, 0.0)
+    labels = jnp.where(live, labels, 0.0)
+    return feats, labels, mask
+
+
+def decode_pages_projected_ref(
+    pages: jnp.ndarray, layout: PageLayout, plan: ProjectionPlan
+) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Pushdown decode: only ``plan``'s payload words leave the page buffer.
+
+    pages (P, page_words) uint32 -> (feats (P,T,n_columns) f32 in
+    ``plan.columns`` order, labels (P,T) f32 — zeros when the plan drops the
+    label — mask (P,T) f32). Same affine slot walk as the full decode; the
+    payload gather is static (plan geometry), mirroring the projected Strider
+    program's per-run ``writeB`` stream.
+    """
+    pages = jnp.asarray(pages, dtype=jnp.uint32)
+    p = pages.shape[0]
+    t = layout.tuples_per_page
+    stride_w = layout.stride // 4
+    hdr_w = TUPLE_HEADER_BYTES // 4
+    payload_w = layout.payload_bytes // 4
+    region_start_w = (layout.data_end - t * layout.stride) // 4
+
+    n_tuples = pages[:, 4]
+    region = pages[:, region_start_w : region_start_w + t * stride_w]
+    tup = region.reshape(p, t, stride_w)[:, ::-1, :]
+
+    word_idx = jnp.array([hdr_w + w for w in plan.words], dtype=jnp.int32)
+    sel = jnp.take(tup, word_idx, axis=2)  # (P, T, n_words) selected words
+    if layout.quantized:
+        raw = _split_bytes(sel)  # (P, T, 4*n_words)
+        byte_idx = jnp.array(plan.column_byte_positions(), dtype=jnp.int32)
+        raw = jnp.take(raw, byte_idx, axis=2)
+        scale = jax.lax.bitcast_convert_type(
+            pages[:, layout.data_end // 4], jnp.float32
+        )
+        feats = (raw - 128).astype(jnp.float32) * scale[:, None, None]
+    else:
+        feats = jax.lax.bitcast_convert_type(sel, jnp.float32)
+
+    if plan.include_label:
+        labels = jax.lax.bitcast_convert_type(
+            tup[:, :, hdr_w + payload_w], jnp.float32
+        )
+    else:
+        labels = jnp.zeros((p, t), dtype=jnp.float32)
+
+    live = jnp.arange(t, dtype=jnp.uint32)[None, :] < n_tuples[:, None]
+    mask = live.astype(jnp.float32)
     feats = jnp.where(live[:, :, None], feats, 0.0)
     labels = jnp.where(live, labels, 0.0)
     return feats, labels, mask

@@ -24,7 +24,21 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.core.striders import ProjectionPlan
 from repro.db.page import TUPLE_HEADER_BYTES, PageLayout
+
+
+def _word_runs(words: tuple[int, ...]) -> list[tuple[int, int]]:
+    """Merge sorted word indices into contiguous [start, stop) runs — each
+    becomes one static VMEM slice, the kernel analogue of the projected
+    Strider program's per-run ``writeB``."""
+    runs: list[tuple[int, int]] = []
+    for w in words:
+        if runs and runs[-1][1] == w:
+            runs[-1] = (runs[-1][0], w + 1)
+        else:
+            runs.append((w, w + 1))
+    return runs
 
 
 def _strider_kernel(
@@ -67,16 +81,71 @@ def _strider_kernel(
     mask_ref[0, :] = live.astype(jnp.float32)
 
 
+def _strider_kernel_projected(
+    page_ref, feat_ref, label_ref, mask_ref, *,
+    layout: PageLayout, plan: ProjectionPlan,
+):
+    """Pushdown variant: only the plan's payload word runs leave the page
+    buffer — dropped columns are never read, exactly like the projected
+    Strider program's restricted ``writeB`` stream."""
+    t = layout.tuples_per_page
+    stride_w = layout.stride // 4
+    hdr_w = TUPLE_HEADER_BYTES // 4
+    payload_w = layout.payload_bytes // 4
+    region_start_w = (layout.data_end - t * layout.stride) // 4
+
+    words = page_ref[0, :]
+    n_tuples = words[4]
+    region = jax.lax.slice(words, (region_start_w,), (region_start_w + t * stride_w,))
+    tup = region.reshape(t, stride_w)[::-1, :]
+
+    # static gather: one contiguous slice per selected-word run, concatenated
+    sel = jnp.concatenate(
+        [tup[:, hdr_w + w0 : hdr_w + w1] for w0, w1 in _word_runs(plan.words)],
+        axis=1,
+    )
+    if layout.quantized:
+        shifts = jax.lax.broadcasted_iota(jnp.uint32, (1, 1, 4), 2) * jnp.uint32(8)
+        raw = (sel[:, :, None] >> shifts) & jnp.uint32(0xFF)
+        raw = raw.reshape(t, len(plan.words) * 4)
+        raw = jnp.concatenate(
+            [raw[:, b : b + 1] for b in plan.column_byte_positions()], axis=1
+        ).astype(jnp.int32)
+        scale = jax.lax.bitcast_convert_type(words[layout.data_end // 4], jnp.float32)
+        feats = (raw - 128).astype(jnp.float32) * scale
+    else:
+        feats = jax.lax.bitcast_convert_type(sel, jnp.float32)
+
+    live = jnp.arange(t, dtype=jnp.uint32) < n_tuples
+    if plan.include_label:
+        labels = jax.lax.bitcast_convert_type(tup[:, hdr_w + payload_w], jnp.float32)
+        labels = jnp.where(live, labels, 0.0)
+    else:
+        labels = jnp.zeros((t,), dtype=jnp.float32)
+    feat_ref[0, :, :] = jnp.where(live[:, None], feats, 0.0)
+    label_ref[0, :] = labels
+    mask_ref[0, :] = live.astype(jnp.float32)
+
+
 def strider_decode(
-    pages: jnp.ndarray, layout: PageLayout, interpret: bool = False
+    pages: jnp.ndarray, layout: PageLayout, interpret: bool = False,
+    plan: ProjectionPlan | None = None,
 ) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
-    """pages (P, page_words) uint32 -> (feats (P,T,D), labels (P,T), mask (P,T))."""
+    """pages (P, page_words) uint32 -> (feats (P,T,D), labels (P,T), mask (P,T)).
+
+    With a ``plan``, D is ``plan.n_columns`` and the kernel only touches the
+    projected payload words (pushdown)."""
     p = pages.shape[0]
     t = layout.tuples_per_page
-    d = layout.n_features
+    d = layout.n_features if plan is None else plan.n_columns
     pw = layout.page_words
 
-    kernel = functools.partial(_strider_kernel, layout=layout)
+    if plan is None:
+        kernel = functools.partial(_strider_kernel, layout=layout)
+    else:
+        kernel = functools.partial(
+            _strider_kernel_projected, layout=layout, plan=plan
+        )
     return pl.pallas_call(
         kernel,
         grid=(p,),

@@ -1060,3 +1060,31 @@ def generate_greedy(cfg: ModelConfig, params, prompts: list[list[int]],
     for i, p in enumerate(prompts):
         server.submit(Request(rid=i, prompt=list(p), max_new_tokens=max_new_tokens))
     return [r.out for r in server.run()]
+
+
+def score_tokens(cfg: ModelConfig, params, prompts: list[list[int]],
+                 max_new_tokens: int, batch_slots: int | None = None,
+                 max_seq: int | None = None, **server_kwargs):
+    """Batch-scoring session for the db/ PREDICT path: run all prompts to
+    completion on a short-lived server and return ``(outputs, metrics)``.
+
+    Outputs are token lists in prompt order; ``metrics`` is the session's
+    ``ServeMetrics`` (None when there were no prompts — e.g. a WHERE clause
+    filtered every row, so nothing ever reaches the server). Unlike
+    ``generate_greedy`` the slot count is capped, so a million-row scoring
+    query doesn't try to allocate a million slots: continuous batching
+    refills slots as prompts finish.
+    """
+    if not prompts:
+        return [], None
+    if max_seq is None:
+        max_seq = max(len(p) for p in prompts) + max_new_tokens + 1
+    if batch_slots is None:
+        batch_slots = min(len(prompts), 8)
+    server = BatchedServer(
+        cfg, params, batch_slots=batch_slots, max_seq=max_seq, **server_kwargs
+    )
+    for i, p in enumerate(prompts):
+        server.submit(Request(rid=i, prompt=list(p), max_new_tokens=max_new_tokens))
+    outs = [r.out for r in server.run()]
+    return outs, server.metrics

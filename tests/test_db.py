@@ -74,7 +74,8 @@ def test_catalog_roundtrip(tmp_path, heap):
     h, _, _ = heap
     cat = Catalog(str(tmp_path / "cat"))
     cat.register_table("t", h.path, {"n_features": 12})
-    cat.register_udf("lin", {"x": np.arange(3)})
+    # artifacts must pass the catalog schema check (hdfg + partition)
+    cat.register_udf("lin", {"hdfg": "g", "partition": "p", "x": np.arange(3)})
     cat2 = Catalog(str(tmp_path / "cat"))
     assert cat2.table("t")["heap"] == h.path
     np.testing.assert_array_equal(cat2.udf("lin")["x"], np.arange(3))

@@ -1,0 +1,249 @@
+"""The db/ layer as a unit: statement parsing, catalog schema checks, heap
+partial reads, token tables, and query-layer rejection paths."""
+import pickle
+
+import numpy as np
+import pytest
+
+from repro.db.catalog import Catalog, validate_udf_artifact
+from repro.db.heap import write_table, write_token_table
+from repro.db.page import parse_page
+from repro.db.query import (
+    Predicate,
+    execute,
+    parse,
+    register_udf_from_trace,
+    run_query,
+)
+
+
+# ---------------------------------------------------------------------------
+# parse
+# ---------------------------------------------------------------------------
+def test_parse_train():
+    stmt = parse("SELECT * FROM dana.linearR('training_data_table');")
+    assert stmt.verb == "TRAIN"
+    assert stmt.udf == "linearR" and stmt.table == "training_data_table"
+    assert stmt.columns is None and stmt.where is None
+
+
+def test_parse_predict_projection_and_where():
+    stmt = parse(
+        "SELECT c0, c3, label FROM dana.predict('m', 't') WHERE c2 >= -1.5;"
+    )
+    assert stmt.verb == "PREDICT"
+    assert stmt.udf == "m" and stmt.table == "t"
+    assert stmt.columns == ("c0", "c3", "label")
+    assert stmt.where == Predicate(column="c2", op=">=", value=-1.5)
+
+
+def test_parse_predict_star_no_where():
+    stmt = parse("SELECT * FROM dana.predict('m', 't')")
+    assert stmt.columns is None and stmt.where is None
+
+
+@pytest.mark.parametrize(
+    "op,norm", [("=", "=="), ("<>", "!="), ("==", "=="), ("!=", "!=")]
+)
+def test_parse_operator_normalization(op, norm):
+    stmt = parse(f"SELECT * FROM dana.predict('m', 't') WHERE label {op} 3;")
+    assert stmt.where.op == norm and stmt.where.value == 3.0
+
+
+@pytest.mark.parametrize(
+    "sql",
+    [
+        "DROP TABLE x;",
+        "SELECT * FROM plain_table;",
+        "SELECT FROM dana.predict('m', 't');",
+        "SELECT bogus FROM dana.predict('m', 't');",  # bad column name
+        "SELECT * FROM dana.predict('m');",  # missing table arg
+        "SELECT * FROM dana.predict('m', 't') WHERE c1 ~ 3;",  # bad op
+        "SELECT * FROM dana.predict('m', 't') WHERE c1 > abc;",  # bad literal
+    ],
+)
+def test_parse_rejects(sql):
+    with pytest.raises(ValueError):
+        parse(sql)
+
+
+def test_predicate_validation_and_mask():
+    with pytest.raises(ValueError):
+        Predicate(column="c1", op="~", value=0.0)
+    with pytest.raises(ValueError):
+        Predicate(column="weird", op="<", value=0.0)
+    vals = np.array([-1.0, 0.0, 2.0])
+    assert Predicate("c0", ">", 0.0).mask(vals).tolist() == [False, False, True]
+    assert Predicate("c0", "==", 0.0).mask(vals).tolist() == [False, True, False]
+    assert Predicate("c0", "!=", 0.0).mask(vals).tolist() == [True, False, True]
+    assert Predicate("c0", "<=", 0.0).mask(vals).tolist() == [True, True, False]
+
+
+# ---------------------------------------------------------------------------
+# catalog
+# ---------------------------------------------------------------------------
+def test_catalog_artifact_schema_check(tmp_path):
+    cat = Catalog(str(tmp_path / "cat"))
+    with pytest.raises(ValueError, match="missing"):
+        cat.register_udf("bad", {"x": np.arange(3)})
+    with pytest.raises(ValueError, match="must be a dict"):
+        cat.register_udf("bad", [1, 2, 3])
+    with pytest.raises(ValueError, match="missing"):
+        cat.register_udf("lm_bad", {"kind": "lm", "cfg": object()})
+    # well-formed artifacts of both kinds pass
+    cat.register_udf("ok", {"hdfg": "g", "partition": "p"})
+    cat.register_udf("lm_ok", {"kind": "lm", "cfg": "c", "params": {}})
+    assert cat.udf("ok")["hdfg"] == "g"
+    validate_udf_artifact("ok", cat.udf("lm_ok"))
+
+
+def test_catalog_validates_legacy_artifacts_on_load(tmp_path):
+    """Artifacts pickled before the schema check existed are rejected at
+    udf() time, not deep inside the executor."""
+    cat = Catalog(str(tmp_path / "cat"))
+    cat.register_udf("ok", {"hdfg": "g", "partition": "p"})
+    path = cat._index["udfs"]["ok"]["artifact"]
+    with open(path, "wb") as f:
+        pickle.dump({"legacy": True}, f)
+    with pytest.raises(ValueError, match="missing"):
+        cat.udf("ok")
+
+
+def test_catalog_unknown_names(tmp_path):
+    cat = Catalog(str(tmp_path / "cat"))
+    with pytest.raises(KeyError, match="unknown table"):
+        cat.table("nope")
+    with pytest.raises(KeyError, match="unknown UDF"):
+        cat.udf("nope")
+
+
+# ---------------------------------------------------------------------------
+# heap
+# ---------------------------------------------------------------------------
+def test_heap_partial_page_reads(tmp_path):
+    rng = np.random.default_rng(5)
+    feats = rng.normal(0, 1, (300, 6)).astype(np.float32)
+    labels = rng.normal(0, 1, 300).astype(np.float32)
+    h = write_table(str(tmp_path / "t.heap"), feats, labels, page_bytes=4096)
+    assert h.n_pages > 3
+    sub = h.read_pages(np.array([2, 0, h.n_pages - 1]))
+    full = h.read_all()
+    np.testing.assert_array_equal(sub[0], full[2])
+    np.testing.assert_array_equal(sub[1], full[0])
+    np.testing.assert_array_equal(sub[2], full[-1])
+    # the last page is partial: parse honors its true tuple count
+    f, _, _ = parse_page(sub[2], h.layout)
+    assert 0 < f.shape[0] <= h.layout.tuples_per_page
+    assert f.shape[0] == h.n_tuples - (h.n_pages - 1) * h.layout.tuples_per_page
+
+
+def test_write_token_table_roundtrip(tmp_path):
+    seqs = [[5, 7, 9], [1], [2, 3, 4, 8, 6]]
+    h = write_token_table(str(tmp_path / "tok.heap"), seqs, page_bytes=4096)
+    assert h.layout.n_features == 5  # padded to the longest sequence
+    f, lens, _ = parse_page(h.read_page(0), h.layout)
+    toks = f.view(np.int32)
+    for i, s in enumerate(seqs):
+        assert lens[i] == len(s)
+        assert toks[i, : len(s)].tolist() == s
+        assert not toks[i, len(s):].any()  # zero padding
+
+
+def test_write_token_table_rejects(tmp_path):
+    with pytest.raises(ValueError, match="at least one"):
+        write_token_table(str(tmp_path / "t.heap"), [])
+    with pytest.raises(ValueError, match="longer than"):
+        write_token_table(str(tmp_path / "t.heap"), [[1, 2, 3]], width=2)
+
+
+# ---------------------------------------------------------------------------
+# execute / run_query error paths
+# ---------------------------------------------------------------------------
+@pytest.fixture
+def trained_catalog(tmp_path):
+    from repro.algorithms import linear_regression
+
+    rng = np.random.default_rng(0)
+    X = rng.normal(0, 1, (200, 4)).astype(np.float32)
+    y = (X @ rng.normal(0, 1, 4)).astype(np.float32)
+    heap = write_table(str(tmp_path / "t.heap"), X, y, page_bytes=4096)
+    cat = Catalog(str(tmp_path / "cat"))
+    cat.register_table("t", heap.path, {"n_features": 4})
+    register_udf_from_trace(
+        cat, "lin", lambda: linear_regression(4, lr=0.1, merge_coef=16, epochs=3),
+        layout=heap.layout,
+    )
+    return cat
+
+
+def test_execute_unknown_udf_and_table(trained_catalog):
+    with pytest.raises(KeyError, match="unknown UDF"):
+        execute(parse("SELECT * FROM dana.nope('t');"), trained_catalog)
+    with pytest.raises(KeyError, match="unknown table"):
+        execute(parse("SELECT * FROM dana.lin('nope');"), trained_catalog)
+
+
+def test_predict_requires_trained_model(trained_catalog):
+    with pytest.raises(ValueError, match="no trained model"):
+        execute(parse("SELECT * FROM dana.predict('lin', 't');"), trained_catalog)
+
+
+def test_predict_requires_layout(tmp_path, trained_catalog):
+    """A UDF registered without a page layout fails PREDICT with a clear
+    error instead of a KeyError deep in the executor (the old failure)."""
+    from repro.algorithms import linear_regression
+
+    art = register_udf_from_trace(
+        trained_catalog, "nolayout",
+        lambda: linear_regression(4, lr=0.1, merge_coef=16, epochs=3),
+    )
+    assert "strider_program" not in art
+    art["model"] = [np.zeros(4, np.float32)]  # trained, but still no layout
+    trained_catalog.register_udf("nolayout", art)
+    with pytest.raises(ValueError, match="registered without a page layout"):
+        execute(
+            parse("SELECT * FROM dana.predict('nolayout', 't');"),
+            trained_catalog,
+        )
+
+
+def test_train_writes_model_back(trained_catalog):
+    res = execute(parse("SELECT * FROM dana.lin('t');"), trained_catalog)
+    assert res.verb == "TRAIN" and res.train is not None
+    stored = trained_catalog.udf("lin")
+    np.testing.assert_array_equal(stored["model"][0], res.coefficients[0])
+    assert "layout" in stored and "strider_program" in stored
+
+
+def test_run_query_shim_deprecated_but_working(trained_catalog):
+    with pytest.deprecated_call():
+        res = run_query("SELECT * FROM dana.lin('t');", trained_catalog,
+                        max_epochs=2)
+    assert hasattr(res, "models") and res.epochs_run == 2  # old TrainResult
+    with pytest.raises(ValueError):
+        with pytest.deprecated_call():
+            run_query("DROP TABLE x;", trained_catalog)
+
+
+def test_predict_model_wider_than_table(tmp_path, trained_catalog):
+    from repro.algorithms import linear_regression
+
+    rng = np.random.default_rng(1)
+    X = rng.normal(0, 1, (50, 2)).astype(np.float32)
+    heap = write_table(str(tmp_path / "narrow.heap"), X,
+                       np.zeros(50, np.float32), page_bytes=4096)
+    trained_catalog.register_table("narrow", heap.path, {"n_features": 2})
+    execute(parse("SELECT * FROM dana.lin('t');"), trained_catalog)  # train
+    with pytest.raises(ValueError, match="has only 2"):
+        execute(
+            parse("SELECT * FROM dana.predict('lin', 'narrow');"),
+            trained_catalog,
+        )
+
+
+def test_predict_projection_out_of_range(trained_catalog):
+    execute(parse("SELECT * FROM dana.lin('t');"), trained_catalog)
+    with pytest.raises(ValueError, match="out of range"):
+        execute(
+            parse("SELECT c9 FROM dana.predict('lin', 't');"), trained_catalog
+        )
