@@ -1,0 +1,211 @@
+"""Mixed-workload SQL trace: concurrent executor vs serial execution.
+
+One trace, two schedules. The trace is a background TRAIN (priority 2,
+retraining ``udf_bg``) submitted *first*, then two interactive PREDICTs
+(priority 0) against an already-trained ``udf``: a projected/filtered row
+scan and an on-device aggregate over the same table.
+
+  interleaved   QueryExecutor(max_running=2, policy="priority") — TRAIN
+                epochs and PREDICT chunks share the device round-robin, so
+                the interactive queries finish while the retrain is still
+                running
+  serial        QueryExecutor(max_running=1, policy="fifo") — the ablation:
+                submission order, one query at a time, so both PREDICTs
+                wait behind every TRAIN epoch
+
+The gated statistic is ``interleave_ratio``: mean interactive-PREDICT
+finish step under serial over interleaved. Steps are the executor's
+deterministic clock (one ``step()`` = one chunk dispatched per running
+query), so the ratio is machine-independent. Also gated: every PREDICT
+scan syncs the device exactly once, and serial/interleaved results are
+byte-identical (predictions, aggregates, and the retrained coefficients).
+
+Standalone:
+    PYTHONPATH=src python -m benchmarks.bench_query_mix [--quick] \
+        [--out BENCH_querymix.json]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import tempfile
+
+import numpy as np
+
+from repro.algorithms import ALGORITHMS
+from repro.db.bufferpool import BufferPool
+from repro.db.catalog import Catalog
+from repro.db.executor import QueryExecutor
+from repro.db.heap import HeapFile, write_table
+from repro.db.query import execute, parse, register_udf_from_trace
+
+# (name, algo, rows, model cols, extra scoring cols, bg epochs, chunk pages)
+BENCH = (("query_mix_linear", "linear", 6000, 16, 16, 12, 2),
+         ("query_mix_logistic", "logistic", 6000, 16, 16, 12, 2))
+QUICK = (("query_mix_linear", "linear", 2000, 8, 8, 8, 2),)
+
+PAGE_BYTES = 32 * 1024
+
+PREDICT_SQL = ("SELECT c0 FROM dana.predict('udf', 'score_t') "
+               "WHERE c1 > 0.0 AND (c2 <= 0.5 OR NOT c3 < 0.0);")
+AGG_SQL = ("SELECT COUNT(*), AVG(prediction), SUM(c1) "
+           "FROM dana.predict('udf', 'score_t') WHERE c1 > 0.0;")
+TRAIN_BG_SQL = "SELECT * FROM dana.udf_bg('train_t');"
+
+
+def _setup(algo: str, rows: int, d_model: int, d_extra: int, root: str,
+           seed: int = 0):
+    """One train table feeding two UDFs — ``udf`` (pre-trained; what the
+    PREDICTs score) and ``udf_bg`` (what the background TRAIN retrains, so
+    its write-back can never perturb the predict results) — plus a wider
+    scoring table."""
+    rng = np.random.default_rng(seed)
+    Xtr = rng.normal(0, 1, (rows, d_model)).astype(np.float32)
+    w_true = rng.normal(0, 1, d_model).astype(np.float32)
+    if algo == "linear":
+        ytr = Xtr @ w_true
+    else:
+        ytr = np.where(Xtr @ w_true > 0, 1.0, -1.0).astype(np.float32)
+        if algo == "logistic":
+            ytr = (ytr + 1) / 2
+    write_table(os.path.join(root, "train.heap"), Xtr, ytr,
+                page_bytes=PAGE_BYTES)
+
+    wide = d_model + d_extra
+    Xs = rng.normal(0, 1, (rows, wide)).astype(np.float32)
+    write_table(os.path.join(root, "score.heap"), Xs,
+                np.zeros(rows, np.float32), page_bytes=PAGE_BYTES)
+
+    catalog = Catalog(os.path.join(root, "catalog"))
+    catalog.register_table("train_t", os.path.join(root, "train.heap"),
+                           {"n_features": d_model})
+    catalog.register_table("score_t", os.path.join(root, "score.heap"),
+                           {"n_features": wide})
+    layout = HeapFile(os.path.join(root, "train.heap")).layout
+    algo_fn = ALGORITHMS[algo]
+    for udf in ("udf", "udf_bg"):
+        register_udf_from_trace(
+            catalog, udf,
+            lambda: algo_fn(d_model, lr=0.05, merge_coef=32, epochs=5),
+            layout=layout,
+        )
+    # pre-train the scoring UDF so the interactive PREDICTs have a model
+    execute(parse("SELECT * FROM dana.udf('train_t');"), catalog,
+            pool=BufferPool(page_bytes=PAGE_BYTES), max_epochs=5, seed=seed)
+    return catalog
+
+
+def _run_trace(catalog, *, max_running: int, policy: str, epochs: int,
+               chunk_pages: int):
+    """Submit the trace (TRAIN first, then the two PREDICTs) and drain."""
+    pool = BufferPool(page_bytes=PAGE_BYTES)
+    ex = QueryExecutor(catalog, pool, max_running=max_running,
+                       policy=policy, chunk_pages=chunk_pages)
+    train = ex.submit(TRAIN_BG_SQL, priority=2, max_epochs=epochs, seed=0)
+    pred = ex.submit(PREDICT_SQL, priority=0)
+    agg = ex.submit(AGG_SQL, priority=0)
+    ex.drain()
+    for req in (train, pred, agg):
+        assert req.status == "FINISHED", (req.qid, req.status, req.error)
+    return ex, train, pred, agg
+
+
+def bench_one(name: str, algo: str, rows: int, d_model: int, d_extra: int,
+              epochs: int, chunk_pages: int) -> dict:
+    with tempfile.TemporaryDirectory(prefix="bench_querymix_") as root:
+        catalog = _setup(algo, rows, d_model, d_extra, root)
+        ex_i, tr_i, p_i, a_i = _run_trace(
+            catalog, max_running=2, policy="priority",
+            epochs=epochs, chunk_pages=chunk_pages)
+        ex_s, tr_s, p_s, a_s = _run_trace(
+            catalog, max_running=1, policy="fifo",
+            epochs=epochs, chunk_pages=chunk_pages)
+
+    results_match = bool(
+        np.array_equal(p_i.result.predictions, p_s.result.predictions)
+        and a_i.result.aggregates == a_s.result.aggregates
+        and np.array_equal(tr_i.result.coefficients,
+                           tr_s.result.coefficients)
+    )
+    mean_i = (p_i.finish_step + a_i.finish_step) / 2
+    mean_s = (p_s.finish_step + a_s.finish_step) / 2
+    ratio = mean_s / mean_i if mean_i > 0 else 0.0
+    predict_reqs = (p_i, a_i, p_s, a_s)
+    return {
+        "workload": name,
+        "algo": algo,
+        "rows": rows,
+        "epochs": epochs,
+        "chunk_pages": chunk_pages,
+        "speedup_x": ratio,
+        "interleaved": {
+            "steps": ex_i.metrics.steps,
+            "occupancy_pct": ex_i.metrics.occupancy_pct,
+            "predict_finish_steps": [p_i.finish_step, a_i.finish_step],
+            "train_finish_step": tr_i.finish_step,
+        },
+        "serial": {
+            "steps": ex_s.metrics.steps,
+            "occupancy_pct": ex_s.metrics.occupancy_pct,
+            "predict_finish_steps": [p_s.finish_step, a_s.finish_step],
+            "train_finish_step": tr_s.finish_step,
+        },
+        "querymix": {
+            "interleave_ratio": ratio,
+            "mean_predict_finish_step_interleaved": mean_i,
+            "mean_predict_finish_step_serial": mean_s,
+            "predict_scans": len(predict_reqs),
+            "predict_scan_syncs": sum(r.result.device_syncs
+                                      for r in predict_reqs),
+            "results_match": results_match,
+        },
+    }
+
+
+def run(csv_rows: list[str], cases=BENCH) -> list[str]:
+    for name, algo, rows, d_model, d_extra, epochs, chunk in cases:
+        r = bench_one(name, algo, rows, d_model, d_extra, epochs, chunk)
+        qm = r["querymix"]
+        csv_rows.append(
+            f"query_mix/{r['workload']},0,"
+            f"interleave_ratio={qm['interleave_ratio']:.2f}"
+            f";predict_steps={qm['mean_predict_finish_step_interleaved']:.1f}"
+            f"vs{qm['mean_predict_finish_step_serial']:.1f}"
+            f";match={qm['results_match']}"
+            f";syncs={qm['predict_scan_syncs']}/{qm['predict_scans']}"
+        )
+    return csv_rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="one small workload; CI smoke + regression artifact")
+    ap.add_argument("--out", default=None, help="write JSON artifact here")
+    args = ap.parse_args()
+
+    cases = QUICK if args.quick else BENCH
+    results = [bench_one(*case) for case in cases]
+
+    for r in results:
+        qm = r["querymix"]
+        assert qm["results_match"], (
+            "serial and interleaved schedules must produce identical "
+            "results", r)
+        assert qm["predict_scan_syncs"] == qm["predict_scans"], (
+            "every PREDICT scan must sync the device exactly once", r)
+        print(f"{r['workload']}: interactive PREDICTs finish at step "
+              f"{qm['mean_predict_finish_step_interleaved']:.1f} interleaved "
+              f"vs {qm['mean_predict_finish_step_serial']:.1f} serial "
+              f"({qm['interleave_ratio']:.2f}x earlier), occupancy "
+              f"{r['interleaved']['occupancy_pct']:.0f}%, results identical")
+
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump({"quick": args.quick, "results": results}, f, indent=2)
+        print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -39,6 +39,14 @@ Default checks per baseline workload:
     ``scoring.decode_bytes_ratio_floor`` — projection pushdown must keep
     decoding fewer bytes — and the scan must keep syncing the device exactly
     once (``scoring.device_syncs == 1``).
+  * querymix format (``bench_query_mix``): ``querymix.interleave_ratio``
+    (mean interactive-PREDICT finish step under the serial schedule over
+    the interleaved one, in deterministic executor steps — machine-
+    independent) may not drop below the baseline's
+    ``querymix.interleave_ratio_floor``; every PREDICT scan must sync the
+    device exactly once (``predict_scan_syncs == predict_scans``); and
+    ``results_match`` must hold — chunk interleaving must never change
+    query output.
   * with ``--abs-time``, ``pipelined.total_s`` (lower is better) /
     ``serving.tok_s`` (higher is better) are also gated — opt-in because
     absolute wall numbers only compare on identical hardware.
@@ -155,6 +163,32 @@ def check(current: dict, baseline: dict, tol: float, abs_time: bool) -> list[str
                 failures.append(
                     f"{name}: scoring scan synced the device {syncs}x "
                     f"(one-sync-per-scan invariant broken)"
+                )
+        base_qm = base.get("querymix") or {}
+        if base_qm:
+            cur_qm = cur.get("querymix") or {}
+            ratio_floor = base_qm.get("interleave_ratio_floor")
+            if ratio_floor is not None:
+                ratio = float(cur_qm.get("interleave_ratio", 0.0))
+                if ratio < float(ratio_floor):
+                    failures.append(
+                        f"{name}: interleave ratio {ratio:.2f}x below the "
+                        f"{float(ratio_floor):.2f}x floor (concurrent "
+                        f"executor no longer finishes interactive PREDICTs "
+                        f"ahead of the serial schedule)"
+                    )
+            scans = cur_qm.get("predict_scans")
+            syncs = cur_qm.get("predict_scan_syncs")
+            if syncs != scans:
+                failures.append(
+                    f"{name}: {scans} PREDICT scans synced the device "
+                    f"{syncs}x (one-sync-per-scan invariant broken)"
+                )
+            if not cur_qm.get("results_match", False):
+                failures.append(
+                    f"{name}: serial and interleaved schedules returned "
+                    f"different results (chunk interleaving must not change "
+                    f"query output)"
                 )
         if abs_time:
             _ratio_check(

@@ -28,6 +28,7 @@ SUITES = [
     ("kernels", "benchmarks.bench_kernels"),
     ("roofline", "benchmarks.bench_roofline"),
     ("score", "benchmarks.bench_score"),
+    ("query_mix", "benchmarks.bench_query_mix"),
 ]
 
 

@@ -5,10 +5,13 @@
 2. Load a training table into the RDBMS substrate (slotted pages, heap file).
 3. Register the compiled accelerator artifact (hDFG + Strider program +
    design point) in the catalog.
-4. Train it with the SQL query `SELECT * FROM dana.linearR('table')`.
+4. Connect a ``Session`` and train with the SQL query
+   `SELECT * FROM dana.linearR('table')`.
 5. Score a *wider* table with `SELECT ... FROM dana.predict('linearR', 't')
    WHERE ...` — the projection/filter push down into the strider program, so
    the columns the query doesn't need are never decoded off the page.
+6. Reduce on device with `SELECT COUNT(*), AVG(prediction) ...` and chain
+   the scored rows back into the catalog with `INSERT INTO`.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
@@ -21,10 +24,9 @@ import numpy as np
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 from repro.algorithms import linear_regression
-from repro.db.bufferpool import BufferPool
-from repro.db.catalog import Catalog
+from repro.db import connect
 from repro.db.heap import write_table
-from repro.db.query import execute, parse, register_udf_from_trace
+from repro.db.query import register_udf_from_trace
 
 
 def main():
@@ -38,11 +40,15 @@ def main():
     heap = write_table(os.path.join(tmp, "training_data.heap"), X, y)
     print(f"table: {heap.n_tuples} tuples in {heap.n_pages} x 32KB pages")
 
+    # --- one Session over one catalog + shared buffer pool ------------------
+    sess = connect(os.path.join(tmp, "catalog"),
+                   page_bytes=heap.layout.page_bytes)
+    sess.catalog.register_table("training_data_table", heap.path,
+                                {"n_features": 10})
+
     # --- register the UDF: DSL -> hDFG -> strider program -> design point ---
-    catalog = Catalog(os.path.join(tmp, "catalog"))
-    catalog.register_table("training_data_table", heap.path, {"n_features": 10})
     artifact = register_udf_from_trace(
-        catalog,
+        sess.catalog,
         "linearR",
         lambda: linear_regression(10, lr=0.2, merge_coef=64,
                                   conv_factor=0.01, epochs=200),
@@ -56,9 +62,7 @@ def main():
           f"(22-bit ISA)")
 
     # --- TRAIN: one SQL query; the trained model lands in the catalog -------
-    pool = BufferPool(page_bytes=heap.layout.page_bytes)
-    res = execute(parse("SELECT * FROM dana.linearR('training_data_table');"),
-                  catalog, pool=pool, mode="dana")
+    res = sess.sql("SELECT * FROM dana.linearR('training_data_table');")
     tr = res.train
     w = res.coefficients[0]
     err = float(np.max(np.abs(w - w_true)))
@@ -77,13 +81,11 @@ def main():
     Xs = rng.normal(0, 1, (5_000, 30)).astype(np.float32)
     write_table(os.path.join(tmp, "scoring.heap"), Xs,
                 np.zeros(5_000, np.float32))
-    catalog.register_table("scoring_table", os.path.join(tmp, "scoring.heap"),
-                           {"n_features": 30})
-    res = execute(
-        parse("SELECT c0 FROM dana.predict('linearR', 'scoring_table') "
-              "WHERE c1 > 0;"),
-        catalog, pool=pool,
-    )
+    sess.catalog.register_table("scoring_table",
+                                os.path.join(tmp, "scoring.heap"),
+                                {"n_features": 30})
+    res = sess.sql("SELECT c0 FROM dana.predict('linearR', 'scoring_table') "
+                   "WHERE c1 > 0 AND (c2 <= 1.5 OR NOT c3 < 0);")
     pd = res.pushdown
     print(f"scored {res.n_rows}/{res.rows_scanned} rows "
           f"({res.rows_filtered} filtered), schema {res.schema}")
@@ -92,10 +94,25 @@ def main():
           f"({pd.decode_bytes_ratio:.2f}x fewer), "
           f"{res.device_syncs} device sync")
 
-    kept = Xs[:, 1] > 0
+    kept = (Xs[:, 1] > 0) & ((Xs[:, 2] <= 1.5) | ~(Xs[:, 3] < 0))
     np.testing.assert_allclose(
         res.predictions, Xs[kept, :10] @ w, atol=1e-4)
     assert pd.decode_bytes_ratio > 2.0
+
+    # --- AGGREGATE: reduce on device, no result pages materialized ----------
+    agg = sess.sql("SELECT COUNT(*), AVG(prediction) FROM "
+                   "dana.predict('linearR', 'scoring_table') WHERE c1 > 0;")
+    print(f"aggregates (device-reduced, {agg.device_syncs} sync): "
+          f"{agg.aggregates}")
+    assert agg.aggregates["count(*)"] == int((Xs[:, 1] > 0).sum())
+
+    # --- INSERT ... SELECT: chain scored rows into a new catalog table ------
+    ins = sess.sql("INSERT INTO scored SELECT c0 FROM "
+                   "dana.predict('linearR', 'scoring_table') WHERE c1 > 0;")
+    print(f"chained {ins.n_rows} rows into table 'scored' "
+          f"(schema {list(ins.schema)}); tables: {sess.tables()}")
+
+    sess.close()
     print("OK")
 
 

@@ -106,6 +106,150 @@ def _decode_chunk(pages_np, heap, mode):
     )
 
 
+def train_units(
+    g: HDFG,
+    part: Partition,
+    heap: HeapFile,
+    pool: BufferPool | None = None,
+    mode: str = "dana",
+    engine: Engine | None = None,
+    max_epochs: int | None = None,
+    merge_coef: int | None = None,
+    models=None,
+    seed: int = 0,
+    mesh: jax.sharding.Mesh | None = None,
+    shard_model: bool = False,
+):
+    """Generator form of the pipelined executor: yields once per device chunk
+    *dispatch* — the unit the concurrent query executor (``db/executor.py``)
+    interleaves TRAIN epochs with PREDICT scans at — and returns the
+    TrainResult via ``StopIteration.value``.
+
+    The op sequence — prefetch order, chunk order, ONE device sync per
+    epoch, convergence checks on the cached first-chunk batch — is exactly
+    ``train(pipelined=True)``'s (which drains this generator), so the
+    trained model is byte-identical whether the scan runs alone or
+    interleaved with other queries. Timing fields measure this query's wall
+    clock; under interleaving, co-scheduled work shows up as compute time
+    (results never change, attribution does)."""
+    t_start = time.perf_counter()
+    if engine is not None and shard_model and not engine.shard_model:
+        # silently training replicated when the caller asked for a
+        # partitioned model would be a lie; the flag belongs to make_engine
+        raise ValueError(
+            "shard_model=True but the pre-built engine was made without it; "
+            "pass make_engine(..., shard_model=True)"
+        )
+    engine = engine or make_engine(
+        g, part, merge_coef=merge_coef, mesh=mesh, shard_model=shard_model
+    )
+    pool = pool or BufferPool(
+        pool_bytes=MAX_RESIDENT_PAGES * heap.layout.page_bytes,
+        page_bytes=heap.layout.page_bytes,
+    )
+    models = (
+        models
+        if models is not None
+        else init_models(g, np.random.default_rng(seed), scale=0.01)
+    )
+    models = [jnp.asarray(m) for m in models]
+
+    epochs = max_epochs or g.epochs or 100
+    coef = engine.merge_coef
+    grad_norms: list[float] = []
+    decode_s = compute_s = 0.0
+    exposed_io_s = overlapped_io_s = 0.0
+    device_syncs = 0
+    converged = False
+    epochs_run = 0
+    conv_cache: dict = {}  # decoded first-chunk convergence batch, per call
+
+    page_chunks = [
+        np.arange(s, min(s + MAX_RESIDENT_PAGES, heap.n_pages))
+        for s in range(0, heap.n_pages, MAX_RESIDENT_PAGES)
+    ]
+    if not page_chunks:
+        raise ValueError("train_units needs a non-empty heap (nothing to scan)")
+
+    mesh_ctx = meshes.use_mesh(mesh) if mesh is not None else contextlib.nullcontext()
+    with mesh_ctx:
+        # -- double-buffered executor: fetch k+1 under compute on k ----------
+        handle = pool.prefetch_batch(heap, page_chunks[0])
+        try:
+            for epoch in range(epochs):
+                t_epoch = time.perf_counter()
+                exposed_epoch = decode_epoch = 0.0
+                gnorm_dev = None
+                for k, chunk_ids in enumerate(page_chunks):
+                    t0 = time.perf_counter()
+                    pages_np = handle.result()
+                    waited = time.perf_counter() - t0
+                    exposed_epoch += waited
+                    overlapped_io_s += max(handle.fetch_s - waited, 0.0)
+                    # enqueue the next fetch before dispatching compute;
+                    # the epoch wrap primes chunk 0 for the next epoch —
+                    # unless this is the last one (the convergence check
+                    # reuses its cached batch, so it never needs pages)
+                    if k + 1 < len(page_chunks) or epoch + 1 < epochs:
+                        nxt = page_chunks[(k + 1) % len(page_chunks)]
+                        handle = pool.prefetch_batch(heap, nxt)
+                    if mode == "dana":
+                        # one fused XLA program: strider decode + batch
+                        # reshape + epoch scan; no intermediate sync
+                        models, gnorms = engine.run_chunk(
+                            models, pages_np, heap.layout
+                        )
+                    else:
+                        t1 = time.perf_counter()
+                        feats, labels, mask = _decode_chunk(
+                            pages_np, heap, mode
+                        )
+                        decode_epoch += time.perf_counter() - t1
+                        X, Y, M = _batches(feats, labels, mask, coef)
+                        models, gnorms = engine.run_epoch(models, X, Y, M)
+                    gnorm_dev = gnorms[-1]
+                    yield  # chunk dispatched — the scheduling point
+                models, gnorm_dev = _device_sync((models, gnorm_dev))
+                device_syncs += 1
+                exposed_io_s += exposed_epoch
+                decode_s += decode_epoch
+                compute_s += (
+                    time.perf_counter() - t_epoch - exposed_epoch - decode_epoch
+                )
+                grad_norms.append(float(gnorm_dev))
+                epochs_run = epoch + 1
+                if g.convergence_id is not None:
+                    if _check_convergence(
+                        engine, models, heap, pool, mode, coef, conv_cache
+                    ):
+                        converged = True
+                        break
+        finally:
+            # drain the trailing (speculative) prefetch so the pool is
+            # quiescent on return; its outcome can't affect a result we
+            # already computed, so drain errors are suppressed — and a
+            # generator closed early (cancelled query) cleans up the same way
+            if not handle.cancel():
+                try:
+                    handle.result()
+                except Exception:
+                    pass
+    return TrainResult(
+        models=[np.asarray(m) for m in models],
+        epochs_run=epochs_run,
+        converged=converged,
+        grad_norms=grad_norms,
+        decode_s=decode_s,
+        compute_s=compute_s,
+        io_s=exposed_io_s + overlapped_io_s,
+        total_s=time.perf_counter() - t_start,
+        exposed_io_s=exposed_io_s,
+        overlapped_io_s=overlapped_io_s,
+        device_syncs=device_syncs,
+        pipelined=True,
+    )
+
+
 def train(
     g: HDFG,
     part: Partition,
@@ -129,13 +273,25 @@ def train(
     the model's feature dim (GLM coefficients, LRMF factors) over the mesh's
     model axis, per the logical axes the algorithm declared.
 
-    ``pipelined=True`` (default) runs the double-buffered executor;
-    ``pipelined=False`` keeps the fully synchronous per-chunk loop (the
-    ablation both tests and benchmarks compare against)."""
+    ``pipelined=True`` (default) drains the ``train_units`` generator — the
+    double-buffered executor; ``pipelined=False`` keeps the fully
+    synchronous per-chunk loop (the ablation both tests and benchmarks
+    compare against)."""
+    if pipelined and heap.n_pages > 0:
+        gen = train_units(
+            g, part, heap, pool=pool, mode=mode, engine=engine,
+            max_epochs=max_epochs, merge_coef=merge_coef, models=models,
+            seed=seed, mesh=mesh, shard_model=shard_model,
+        )
+        while True:
+            try:
+                next(gen)
+            except StopIteration as stop:
+                return stop.value
+
+    # -- synchronous executor (phases add; the ablation baseline) ------------
     t_start = time.perf_counter()
     if engine is not None and shard_model and not engine.shard_model:
-        # silently training replicated when the caller asked for a
-        # partitioned model would be a lie; the flag belongs to make_engine
         raise ValueError(
             "shard_model=True but the pre-built engine was made without it; "
             "pass make_engine(..., shard_model=True)"
@@ -169,103 +325,39 @@ def train(
         for s in range(0, heap.n_pages, MAX_RESIDENT_PAGES)
     ]
 
-    pipelined = pipelined and bool(page_chunks)  # empty heap: nothing to overlap
     mesh_ctx = meshes.use_mesh(mesh) if mesh is not None else contextlib.nullcontext()
     with mesh_ctx:
-        if pipelined:
-            # -- double-buffered executor: fetch k+1 under compute on k ------
-            handle = pool.prefetch_batch(heap, page_chunks[0])
-            try:
-                for epoch in range(epochs):
-                    t_epoch = time.perf_counter()
-                    exposed_epoch = decode_epoch = 0.0
-                    gnorm_dev = None
-                    for k, chunk_ids in enumerate(page_chunks):
-                        t0 = time.perf_counter()
-                        pages_np = handle.result()
-                        waited = time.perf_counter() - t0
-                        exposed_epoch += waited
-                        overlapped_io_s += max(handle.fetch_s - waited, 0.0)
-                        # enqueue the next fetch before dispatching compute;
-                        # the epoch wrap primes chunk 0 for the next epoch —
-                        # unless this is the last one (the convergence check
-                        # reuses its cached batch, so it never needs pages)
-                        if k + 1 < len(page_chunks) or epoch + 1 < epochs:
-                            nxt = page_chunks[(k + 1) % len(page_chunks)]
-                            handle = pool.prefetch_batch(heap, nxt)
-                        if mode == "dana":
-                            # one fused XLA program: strider decode + batch
-                            # reshape + epoch scan; no intermediate sync
-                            models, gnorms = engine.run_chunk(
-                                models, pages_np, heap.layout
-                            )
-                        else:
-                            t1 = time.perf_counter()
-                            feats, labels, mask = _decode_chunk(
-                                pages_np, heap, mode
-                            )
-                            decode_epoch += time.perf_counter() - t1
-                            X, Y, M = _batches(feats, labels, mask, coef)
-                            models, gnorms = engine.run_epoch(models, X, Y, M)
-                        gnorm_dev = gnorms[-1]
-                    models, gnorm_dev = _device_sync((models, gnorm_dev))
-                    device_syncs += 1
-                    exposed_io_s += exposed_epoch
-                    decode_s += decode_epoch
-                    compute_s += (
-                        time.perf_counter() - t_epoch - exposed_epoch - decode_epoch
-                    )
-                    grad_norms.append(float(gnorm_dev))
-                    epochs_run = epoch + 1
-                    if g.convergence_id is not None:
-                        if _check_convergence(
-                            engine, models, heap, pool, mode, coef, conv_cache
-                        ):
-                            converged = True
-                            break
-            finally:
-                # drain the trailing (speculative) prefetch so the pool is
-                # quiescent on return; its outcome can't affect a result we
-                # already computed, so drain errors are suppressed
-                if not handle.cancel():
-                    try:
-                        handle.result()
-                    except Exception:
-                        pass
-            io_s = exposed_io_s + overlapped_io_s
-        else:
-            # -- synchronous executor (phases add; the ablation baseline) ----
-            for epoch in range(epochs):
-                last_gnorm = None
-                for chunk_ids in page_chunks:
-                    t0 = time.perf_counter()
-                    pages_np = pool.fetch_batch(heap, chunk_ids)
-                    t1 = time.perf_counter()
-                    feats, labels, mask = _decode_chunk(pages_np, heap, mode)
-                    feats.block_until_ready()
-                    t2 = time.perf_counter()
-                    X, Y, M = _batches(feats, labels, mask, coef)
-                    models, gnorms = engine.run_epoch(models, X, Y, M)
-                    jax.block_until_ready(models)
-                    device_syncs += 2
-                    t3 = time.perf_counter()
-                    io_s += t1 - t0
-                    decode_s += t2 - t1
-                    compute_s += t3 - t2
-                    last_gnorm = float(gnorms[-1])
-                grad_norms.append(
-                    last_gnorm if last_gnorm is not None else float("nan")
-                )
-                epochs_run = epoch + 1
-                if g.convergence_id is not None and last_gnorm is not None:
-                    # convergence is evaluated once per epoch (paper §4.4) on
-                    # the cached first-chunk batch
-                    if _check_convergence(
-                        engine, models, heap, pool, mode, coef, conv_cache
-                    ):
-                        converged = True
-                        break
-            exposed_io_s = io_s
+        for epoch in range(epochs):
+            last_gnorm = None
+            for chunk_ids in page_chunks:
+                t0 = time.perf_counter()
+                pages_np = pool.fetch_batch(heap, chunk_ids)
+                t1 = time.perf_counter()
+                feats, labels, mask = _decode_chunk(pages_np, heap, mode)
+                feats.block_until_ready()
+                t2 = time.perf_counter()
+                X, Y, M = _batches(feats, labels, mask, coef)
+                models, gnorms = engine.run_epoch(models, X, Y, M)
+                jax.block_until_ready(models)
+                device_syncs += 2
+                t3 = time.perf_counter()
+                io_s += t1 - t0
+                decode_s += t2 - t1
+                compute_s += t3 - t2
+                last_gnorm = float(gnorms[-1])
+            grad_norms.append(
+                last_gnorm if last_gnorm is not None else float("nan")
+            )
+            epochs_run = epoch + 1
+            if g.convergence_id is not None and last_gnorm is not None:
+                # convergence is evaluated once per epoch (paper §4.4) on
+                # the cached first-chunk batch
+                if _check_convergence(
+                    engine, models, heap, pool, mode, coef, conv_cache
+                ):
+                    converged = True
+                    break
+        exposed_io_s = io_s
     total_s = time.perf_counter() - t_start
     return TrainResult(
         models=[np.asarray(m) for m in models],

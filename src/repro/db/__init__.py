@@ -1,10 +1,18 @@
-"""Relational substrate: slotted pages, heap files, buffer pool, catalog, query layer."""
+"""Relational substrate: slotted pages, heap files, buffer pool, catalog,
+query layer — fronted by the ``Database``/``Session`` API.
+
+``connect(catalog) -> Session`` is the documented entry point for running
+SQL (``session.sql``, ``session.submit``); ``repro.db.query``'s
+``parse``/``execute`` stay public as the typed lower layer.
+"""
 from repro.db.page import PageLayout, build_pages, parse_page, page_header
 from repro.db.heap import HeapFile, write_table
 from repro.db.bufferpool import BufferPool
 from repro.db.catalog import Catalog
+from repro.db.session import Database, QueryHandle, Session, connect
 
 __all__ = [
     "PageLayout", "build_pages", "parse_page", "page_header",
     "HeapFile", "write_table", "BufferPool", "Catalog",
+    "Database", "Session", "QueryHandle", "connect",
 ]

@@ -55,9 +55,26 @@ class Catalog:
         os.replace(tmp, self._index_path)
 
     # -- tables ---------------------------------------------------------------
-    def register_table(self, name: str, heap_path: str, schema: dict) -> None:
+    def register_table(
+        self, name: str, heap_path: str, schema: dict, *,
+        or_replace: bool = False,
+    ) -> None:
+        """Register (or, with ``or_replace=True``, overwrite) a table entry.
+
+        A name collision is an error by default — silently replacing a table
+        someone else's query reads is exactly the kind of footgun a catalog
+        exists to prevent. SQL reaches this via ``INSERT OR REPLACE INTO``.
+        """
+        if not or_replace and name in self._index["tables"]:
+            raise ValueError(
+                f"catalog: table {name!r} already exists; pass "
+                f"or_replace=True (SQL: INSERT OR REPLACE INTO) to overwrite"
+            )
         self._index["tables"][name] = {"heap": heap_path, "schema": schema}
         self._flush()
+
+    def has_table(self, name: str) -> bool:
+        return name in self._index["tables"]
 
     def table(self, name: str) -> dict:
         try:

@@ -7,15 +7,24 @@ directly into batched model evaluation — per chunk, ONE device program runs
 page decode + WHERE filter + model scoring, so decoded tuples never bounce
 through the host between the access engine and the execution engine.
 
-Pushdown is compiled, not simulated: the query's projection and filter
-columns (plus the model's input columns) define a ProjectionPlan, and both
-the Strider ISA program and the Pallas/jnp decode kernels restrict themselves
-to those payload words — dropped columns are never read off the page, and
-:class:`PushdownStats` carries the static byte/cycle accounting that proves
-it (cross-checked against the ISA interpreter's FIFO in tests). Filtered
-tuples are masked out of the engine (GLM: the keep-mask rides the same lane
-mask the training kernel uses) or never submitted at all (LM: filtered rows
-never reach the BatchedServer).
+Pushdown is compiled, not simulated: the query's projection, filter, and
+aggregate columns (plus the model's input columns) define a ProjectionPlan,
+and both the Strider ISA program and the Pallas/jnp decode kernels restrict
+themselves to those payload words — dropped columns are never read off the
+page, and :class:`PushdownStats` carries the static byte/cycle accounting
+that proves it (cross-checked against the ISA interpreter's FIFO in tests).
+WHERE clauses are arbitrary AND/OR/NOT predicate trees (``db/query.py``);
+the whole tree evaluates inside the same jitted chunk program, composing
+into the one keep-mask — no extra decode passes. Filtered tuples are masked
+out of the engine (GLM: the keep-mask rides the same lane mask the training
+kernel uses) or never submitted at all (LM: filtered rows never reach the
+BatchedServer).
+
+Aggregate queries (COUNT/SUM/AVG over columns, ``label``, or the model's
+``prediction``) reduce per chunk ON DEVICE: the chunk program returns only a
+partial (sums, count) pair, partials carry across chunks, and the host
+combines them in float32 after the scan's single sync — result pages are
+never materialized and per-row predictions never cross the memory boundary.
 
 Model families:
   GLM (linear / logistic / svm)  structural template match on the UDF's hDFG
@@ -29,12 +38,19 @@ Model families:
       tables (heap.write_token_table) through the same strider path, then a
       short-lived BatchedServer session generates (continuous batching).
 
-Results flow back as result pages — the projected schema with a `prediction`
-column appended, packed by the same page builder the heap uses — so a scoring
-query's output composes with the rest of the db/ layer (``into=`` registers
-it as a catalog table). Mixed train+score workloads share one BufferPool;
-I/O accounting follows the pipelined executor's exposed-vs-overlapped
-contract (what the loop blocked on vs what hid under device compute).
+Row-returning results flow back as result pages — the projected schema with
+a `prediction` column appended, packed by the same page builder the heap
+uses — so a scoring query's output composes with the rest of the db/ layer:
+``INSERT INTO t SELECT ...`` (or ``into=``) registers it as a catalog table,
+rejecting a name collision unless ``OR REPLACE`` is given. Mixed train+score
+workloads share one BufferPool; I/O accounting follows the pipelined
+executor's exposed-vs-overlapped contract (what the loop blocked on vs what
+hid under device compute).
+
+:class:`PredictScan` is the prepared form of a GLM/LRMF statement — plan,
+jitted chunk program, page chunk list, finalizer. ``execute_predict`` drives
+it through the double-buffered `_scan_chunks` loop; the concurrent executor
+(``db/executor.py``) steps the same scan one chunk per scheduling unit.
 """
 from __future__ import annotations
 
@@ -144,11 +160,17 @@ def _scoring_model(artifact: dict, udf: str) -> np.ndarray:
     return np.asarray(artifact["model"][0])
 
 
-def _build_glm_chunk_fn(layout, plan, family, model, where, where_idx,
-                        use_kernel):
+def _build_glm_chunk_fn(layout, plan, family, model, where, where_pos,
+                        use_kernel, aggregates=None, agg_pos=None):
     """One fused device program per chunk: projected strider decode + WHERE
-    keep-mask + model scoring. Returns (preds, keep, feats, labels) device
-    arrays flattened over tuples; nothing syncs until the caller joins."""
+    keep-mask (the whole predicate tree evaluates traced) + model scoring.
+
+    Row mode returns (preds, keep, feats, labels) device arrays flattened
+    over tuples. Aggregate mode returns only (partial_sums, kept_count) —
+    one f32 scalar per aggregate plus a count, reduced on device; XLA
+    dead-code-eliminates the scoring math when no aggregate reads
+    ``prediction``. Nothing syncs until the caller joins.
+    """
     import jax
     import jax.numpy as jnp
 
@@ -160,9 +182,6 @@ def _build_glm_chunk_fn(layout, plan, family, model, where, where_idx,
         [plan.columns.index(c) for c in range(dm)], dtype=jnp.int32
     )
     w = jnp.asarray(model, dtype=jnp.float32)
-    where_pos = (
-        None if where_idx is None else plan.columns.index(where_idx)
-    )
 
     @jax.jit
     def run(pages):
@@ -174,8 +193,11 @@ def _build_glm_chunk_fn(layout, plan, family, model, where, where_idx,
         lab = labels.reshape(p * t)
         keep = mask.reshape(p * t) > 0
         if where is not None:
-            vals = lab if where.column == "label" else f2[:, where_pos]
-            keep = keep & where.mask(vals)
+            def lookup(name):
+                pos = where_pos[name]
+                return lab if pos is None else f2[:, pos]
+
+            keep = keep & where.evaluate(lookup)
         x = jnp.take(f2, model_pos, axis=1)
         if family == "lrmf":
             # prediction = per-row reconstruction error ||x - (xM)Mᵀ||
@@ -187,6 +209,22 @@ def _build_glm_chunk_fn(layout, plan, family, model, where, where_idx,
                 x, w, keep.astype(jnp.float32), act=family,
                 use_kernel=use_kernel,
             )
+        if aggregates is not None:
+            sums = []
+            for a in aggregates:
+                if a.arg is None:  # COUNT(*) — the count output covers it
+                    sums.append(jnp.float32(0.0))
+                    continue
+                if a.arg == "prediction":
+                    val = preds
+                elif a.arg == "label":
+                    val = lab
+                else:
+                    val = f2[:, agg_pos[a.arg]]
+                sums.append(
+                    jnp.sum(jnp.where(keep, val.astype(jnp.float32), 0.0))
+                )
+            return jnp.stack(sums), jnp.sum(keep.astype(jnp.int32))
         return preds, keep, f2, lab
 
     return run
@@ -230,6 +268,228 @@ def _scan_chunks(heap, pool, chunk_pages, run_chunk):
     return outs, exposed, overlapped, compute
 
 
+def combine_aggregates(aggregates, outs) -> tuple[dict, int]:
+    """Host-side combine of per-chunk device partials -> (values, count).
+
+    Accumulates in np.float32 — the same IEEE f32 adds the device would do —
+    so a multi-chunk scan is bit-exact against an oracle performing the same
+    per-chunk combine. AVG over zero kept rows is NaN (SQL would say NULL).
+    """
+    total = np.zeros(len(aggregates), np.float32)
+    count = 0
+    for sums, cnt in outs:
+        total = (total + np.asarray(sums, np.float32)).astype(np.float32)
+        count += int(cnt)
+    values: dict = {}
+    for i, a in enumerate(aggregates):
+        if a.func == "COUNT":
+            values[a.label] = count
+        elif a.func == "SUM":
+            values[a.label] = float(total[i])
+        else:  # AVG — one f32 divide, matching what the device would emit
+            values[a.label] = (
+                float(np.float32(total[i]) / np.float32(count))
+                if count else float("nan")
+            )
+    return values, count
+
+
+class PredictScan:
+    """A prepared GLM/LRMF PREDICT statement: resolved artifacts, projection
+    plan, the jitted chunk program, and the finalizer that turns collected
+    chunk outputs into a QueryResult.
+
+    Two drivers share this: ``execute_predict`` runs the whole scan through
+    the double-buffered ``_scan_chunks`` loop (one device sync), and the
+    concurrent executor (``db/executor.py``) steps ``page_chunks`` itself —
+    one chunk per scheduling unit — so PREDICT scans interleave with TRAIN
+    epochs over the shared pool without changing per-query results.
+    """
+
+    def __init__(self, stmt, catalog, pool=None, *, use_kernel=None,
+                 chunk_pages=None, into=None, or_replace=False):
+        self.stmt = stmt
+        self.catalog = catalog
+        self.into = into
+        self.or_replace = or_replace
+        self.artifact = catalog.udf(stmt.udf)
+        if self.artifact.get("kind") == "lm":
+            raise ValueError(
+                f"UDF {stmt.udf!r} is a language model; PredictScan covers "
+                f"GLM/LRMF scoring (the LM path runs a serving session)"
+            )
+        self.heap = HeapFile(catalog.table(stmt.table)["heap"])
+        layout = self.layout = self.heap.layout
+        self.chunk = chunk_pages or CHUNK_PAGES
+        self.pool = pool or BufferPool(
+            pool_bytes=self.chunk * layout.page_bytes,
+            page_bytes=layout.page_bytes,
+        )
+
+        family = self.family = _glm_family(self.artifact, stmt.udf)
+        model = self.model = _scoring_model(self.artifact, stmt.udf)
+        dm = model.shape[0]
+        if dm > layout.n_features:
+            raise ValueError(
+                f"UDF {stmt.udf!r} reads {dm} feature columns but table "
+                f"{stmt.table!r} has only {layout.n_features}"
+            )
+        if self.into is not None and stmt.aggregates is not None:
+            raise ValueError(
+                "aggregate queries reduce on device and never materialize "
+                "result pages; they cannot be INSERTed into a table"
+            )
+
+        # ---- pushdown plan: model ∪ projection ∪ filter ∪ aggregate cols ---
+        if stmt.aggregates is not None:
+            proj_names: list[str] = []  # reductions project no row columns
+        elif stmt.columns is None:
+            proj_names = [f"c{i}" for i in range(layout.n_features)] + ["label"]
+        else:
+            proj_names = list(stmt.columns)
+        self.proj_names = proj_names
+        proj_idx = self.proj_idx = [
+            _column_index(n, layout) for n in proj_names
+        ]
+        include_label = None in proj_idx
+        decode_cols = set(range(dm)) | {i for i in proj_idx if i is not None}
+        where_map: dict[str, int | None] = {}
+        if stmt.where is not None:
+            for name in stmt.where.columns():
+                where_map[name] = _column_index(name, layout)
+            include_label = include_label or None in where_map.values()
+            decode_cols |= {i for i in where_map.values() if i is not None}
+        agg_map: dict[str, int | None] = {}
+        for a in stmt.aggregates or ():
+            if a.arg is None or a.arg == "prediction":
+                continue
+            agg_map[a.arg] = _column_index(a.arg, layout)
+            include_label = include_label or agg_map[a.arg] is None
+            if agg_map[a.arg] is not None:
+                decode_cols.add(agg_map[a.arg])
+        plan = self.plan = striders.projection_plan(
+            layout, decode_cols, include_label=bool(include_label)
+        )
+        self.pushdown = _pushdown_stats(self.heap, plan)
+
+        # plan positions (not table indices) for the traced tree/aggregates
+        where_pos = {
+            name: (None if idx is None else plan.columns.index(idx))
+            for name, idx in where_map.items()
+        }
+        agg_pos = {
+            name: plan.columns.index(idx)
+            for name, idx in agg_map.items() if idx is not None
+        }
+        self.run_chunk = _build_glm_chunk_fn(
+            layout, plan, family, model, stmt.where, where_pos, use_kernel,
+            aggregates=stmt.aggregates, agg_pos=agg_pos,
+        )
+        self.page_chunks = [
+            np.arange(s, min(s + self.chunk, self.heap.n_pages))
+            for s in range(0, self.heap.n_pages, self.chunk)
+        ]
+
+    # -- finalization --------------------------------------------------------
+    def finalize(self, outs, exposed, overlapped, compute, t_start):
+        """Collected chunk outputs (post-sync) -> QueryResult."""
+        from repro.db import query as q
+
+        stmt, heap, plan = self.stmt, self.heap, self.plan
+        if stmt.aggregates is not None:
+            values, count = combine_aggregates(stmt.aggregates, outs)
+            return q.QueryResult(
+                verb="PREDICT",
+                udf=stmt.udf,
+                table=stmt.table,
+                schema=tuple(a.label for a in stmt.aggregates),
+                n_rows=1,
+                rows_scanned=heap.n_tuples,
+                rows_filtered=heap.n_tuples - count,
+                total_s=time.perf_counter() - t_start,
+                exposed_io_s=exposed,
+                overlapped_io_s=overlapped,
+                compute_s=compute,
+                device_syncs=1,
+                pushdown=self.pushdown,
+                aggregates=values,
+            )
+
+        # ---- host-side result assembly (dynamic row count) -----------------
+        if outs:
+            preds = np.concatenate([np.asarray(o[0]) for o in outs])
+            keep = np.concatenate([np.asarray(o[1]) for o in outs])
+            f2 = np.concatenate([np.asarray(o[2]) for o in outs])
+            lab = np.concatenate([np.asarray(o[3]) for o in outs])
+        else:
+            preds = np.zeros(0, np.float32)
+            keep = np.zeros(0, bool)
+            f2 = np.zeros((0, plan.n_columns), np.float32)
+            lab = np.zeros(0, np.float32)
+        preds, f2, lab = preds[keep], f2[keep], lab[keep]
+        n_kept = int(keep.sum())
+
+        cols = []
+        for idx in self.proj_idx:
+            cols.append(lab if idx is None else f2[:, plan.columns.index(idx)])
+        result_feats = (
+            np.stack(cols, axis=1).astype(np.float32)
+            if cols else np.zeros((n_kept, 0), np.float32)
+        )
+        schema = tuple(self.proj_names) + ("prediction",)
+        result_layout = PageLayout(
+            n_features=len(self.proj_names), page_bytes=self.layout.page_bytes,
+            quantized=False,
+        )
+        if n_kept:
+            from repro.db.page import build_pages
+
+            result_pages = build_pages(result_feats, preds, result_layout)
+        else:
+            result_pages = np.zeros((0, result_layout.page_words), np.uint32)
+
+        if self.into is not None:
+            catalog = self.catalog
+            if not self.or_replace and catalog.has_table(self.into):
+                # refuse BEFORE touching the heap file: the colliding name
+                # may own that very path, and a clobbered heap is data loss
+                raise ValueError(
+                    f"catalog: table {self.into!r} already exists; use "
+                    f"INSERT OR REPLACE INTO (or or_replace=True) to "
+                    f"overwrite"
+                )
+            path = os.path.join(catalog.root, f"{self.into}.heap")
+            if n_kept:
+                write_table(path, result_feats, preds,
+                            page_bytes=self.layout.page_bytes)
+            else:
+                _write_empty_table(path, result_layout)
+            catalog.register_table(
+                self.into, path,
+                {"n_features": len(self.proj_names), "columns": list(schema)},
+                or_replace=self.or_replace,
+            )
+
+        return q.QueryResult(
+            verb="PREDICT",
+            udf=stmt.udf,
+            table=stmt.table,
+            schema=schema,
+            n_rows=n_kept,
+            predictions=preds,
+            rows_scanned=heap.n_tuples,
+            rows_filtered=heap.n_tuples - n_kept,
+            total_s=time.perf_counter() - t_start,
+            exposed_io_s=exposed,
+            overlapped_io_s=overlapped,
+            compute_s=compute,
+            device_syncs=1,
+            pushdown=self.pushdown,
+            result_pages=result_pages,
+            result_layout=result_layout,
+        )
+
+
 def execute_predict(
     stmt,
     catalog,
@@ -240,128 +500,44 @@ def execute_predict(
     max_new_tokens: int = 32,
     batch_slots: int | None = None,
     into: str | None = None,
+    or_replace: bool = False,
 ):
     """Run a parsed PREDICT statement; returns a query.QueryResult.
 
     ``into=`` additionally materializes the result pages as a heap table
     registered in the catalog under that name (token table for LM UDFs), so
-    a scoring query's output is itself queryable.
+    a scoring query's output is itself queryable — an existing name is
+    rejected unless ``or_replace``.
     """
-    from repro.db import query as q
-
     t_start = time.perf_counter()
     artifact = catalog.udf(stmt.udf)
-    heap = HeapFile(catalog.table(stmt.table)["heap"])
-    layout = heap.layout
-    chunk = chunk_pages or CHUNK_PAGES
-    pool = pool or BufferPool(
-        pool_bytes=chunk * layout.page_bytes, page_bytes=layout.page_bytes
-    )
 
     if artifact.get("kind") == "lm":
+        heap = HeapFile(catalog.table(stmt.table)["heap"])
+        layout = heap.layout
+        chunk = chunk_pages or CHUNK_PAGES
+        pool = pool or BufferPool(
+            pool_bytes=chunk * layout.page_bytes, page_bytes=layout.page_bytes
+        )
+        if stmt.aggregates is not None:
+            raise ValueError(
+                "aggregates apply to GLM/LRMF scoring queries; LM PREDICT "
+                "returns generated token sequences"
+            )
         return _predict_lm(
             stmt, catalog, artifact, heap, pool, chunk, t_start,
             use_kernel=use_kernel, max_new_tokens=max_new_tokens,
-            batch_slots=batch_slots, into=into,
+            batch_slots=batch_slots, into=into, or_replace=or_replace,
         )
 
-    family = _glm_family(artifact, stmt.udf)
-    model = _scoring_model(artifact, stmt.udf)
-    dm = model.shape[0]
-    if dm > layout.n_features:
-        raise ValueError(
-            f"UDF {stmt.udf!r} reads {dm} feature columns but table "
-            f"{stmt.table!r} has only {layout.n_features}"
-        )
-
-    # ---- pushdown plan: model cols ∪ projection cols ∪ filter col ----------
-    if stmt.columns is None:
-        proj_names = [f"c{i}" for i in range(layout.n_features)] + ["label"]
-    else:
-        proj_names = list(stmt.columns)
-    proj_idx = [_column_index(n, layout) for n in proj_names]
-    include_label = None in proj_idx
-    where_idx = None
-    if stmt.where is not None:
-        where_idx = _column_index(stmt.where.column, layout)
-        include_label = include_label or where_idx is None
-    decode_cols = set(range(dm)) | {i for i in proj_idx if i is not None}
-    if where_idx is not None:
-        decode_cols.add(where_idx)
-    plan = striders.projection_plan(
-        layout, decode_cols, include_label=bool(include_label)
-    )
-    pushdown = _pushdown_stats(heap, plan)
-
-    # ---- fused scan: decode + filter + score, double-buffered --------------
-    run_chunk = _build_glm_chunk_fn(
-        layout, plan, family, model, stmt.where, where_idx, use_kernel
+    scan = PredictScan(
+        stmt, catalog, pool, use_kernel=use_kernel, chunk_pages=chunk_pages,
+        into=into, or_replace=or_replace,
     )
     outs, exposed, overlapped, compute = _scan_chunks(
-        heap, pool, chunk, run_chunk
+        scan.heap, scan.pool, scan.chunk, scan.run_chunk
     )
-
-    # ---- host-side result assembly (dynamic row count) ---------------------
-    if outs:
-        preds = np.concatenate([np.asarray(o[0]) for o in outs])
-        keep = np.concatenate([np.asarray(o[1]) for o in outs])
-        f2 = np.concatenate([np.asarray(o[2]) for o in outs])
-        lab = np.concatenate([np.asarray(o[3]) for o in outs])
-    else:
-        preds = np.zeros(0, np.float32)
-        keep = np.zeros(0, bool)
-        f2 = np.zeros((0, plan.n_columns), np.float32)
-        lab = np.zeros(0, np.float32)
-    preds, f2, lab = preds[keep], f2[keep], lab[keep]
-    n_kept = int(keep.sum())
-
-    cols = []
-    for idx in proj_idx:
-        cols.append(lab if idx is None else f2[:, plan.columns.index(idx)])
-    result_feats = (
-        np.stack(cols, axis=1).astype(np.float32)
-        if cols else np.zeros((n_kept, 0), np.float32)
-    )
-    schema = tuple(proj_names) + ("prediction",)
-    result_layout = PageLayout(
-        n_features=len(proj_names), page_bytes=layout.page_bytes,
-        quantized=False,
-    )
-    if n_kept:
-        from repro.db.page import build_pages
-
-        result_pages = build_pages(result_feats, preds, result_layout)
-    else:
-        result_pages = np.zeros((0, result_layout.page_words), np.uint32)
-
-    if into is not None:
-        path = os.path.join(catalog.root, f"{into}.heap")
-        if n_kept:
-            write_table(path, result_feats, preds, page_bytes=layout.page_bytes)
-        else:
-            _write_empty_table(path, result_layout)
-        catalog.register_table(
-            into, path, {"n_features": len(proj_names), "columns": list(schema)}
-        )
-
-    return q.QueryResult(
-        verb="PREDICT",
-        udf=stmt.udf,
-        table=stmt.table,
-        schema=schema,
-        n_rows=n_kept,
-        predictions=preds,
-        rows_scanned=heap.n_tuples,
-        rows_filtered=heap.n_tuples - n_kept,
-        total_s=time.perf_counter() - t_start,
-        exposed_io_s=exposed,
-        overlapped_io_s=overlapped,
-        compute_s=compute,
-        device_syncs=1,
-        pushdown=pushdown,
-        result_pages=result_pages,
-        result_layout=result_layout,
-    )
+    return scan.finalize(outs, exposed, overlapped, compute, t_start)
 
 
 def _write_empty_table(path: str, layout: PageLayout) -> None:
@@ -375,14 +551,15 @@ def _write_empty_table(path: str, layout: PageLayout) -> None:
 
 
 def _predict_lm(stmt, catalog, artifact, heap, pool, chunk, t_start, *,
-                use_kernel, max_new_tokens, batch_slots, into):
+                use_kernel, max_new_tokens, batch_slots, into, or_replace):
     """LM PREDICT: decode prompts from a token table via the strider path,
     filter, generate on a short-lived continuous-batching session.
 
-    Filtered rows genuinely never reach the server — the predicate runs on
-    the decoded tuple stream before any request is submitted. Token columns
-    compare as int token ids (the strider streams raw words; the query layer
-    reinterprets), ``label`` compares as the stored prompt length.
+    Filtered rows genuinely never reach the server — the predicate tree runs
+    on the decoded tuple stream before any request is submitted. Token
+    columns compare as int token ids (the strider streams raw words; the
+    query layer reinterprets), ``label`` compares as the stored prompt
+    length.
     """
     import jax
 
@@ -420,9 +597,16 @@ def _predict_lm(stmt, catalog, artifact, heap, pool, chunk, t_start, *,
 
     keep = live.copy()
     if stmt.where is not None:
-        idx = _column_index(stmt.where.column, layout)
-        vals = lengths if idx is None else tokens[:, idx]
-        keep &= np.asarray(stmt.where.mask(vals))
+        idx_map = {
+            name: _column_index(name, layout)
+            for name in stmt.where.columns()
+        }
+
+        def lookup(name):
+            idx = idx_map[name]
+            return lengths if idx is None else tokens[:, idx]
+
+        keep &= np.asarray(stmt.where.evaluate(lookup))
 
     prompts = [
         tokens[i, : lengths[i]].tolist() for i in np.flatnonzero(keep)
@@ -433,12 +617,18 @@ def _predict_lm(stmt, catalog, artifact, heap, pool, chunk, t_start, *,
     )
 
     if into is not None:
+        if not or_replace and catalog.has_table(into):
+            raise ValueError(
+                f"catalog: table {into!r} already exists; use "
+                f"INSERT OR REPLACE INTO (or or_replace=True) to overwrite"
+            )
         path = os.path.join(catalog.root, f"{into}.heap")
         if gen:
             write_token_table(path, gen, page_bytes=layout.page_bytes)
             catalog.register_table(
                 into, path,
                 {"n_features": max(len(g) for g in gen), "kind": "tokens"},
+                or_replace=or_replace,
             )
         # zero-row LM results have no width to materialize; skip registration
 

@@ -1,0 +1,90 @@
+"""Shared CLI flag vocabulary for the launchers.
+
+``train.py`` / ``score.py`` / ``serve.py`` grew their flags independently;
+this module is the single definition each argparser composes from, so the
+same concept is spelled the same way — same name, same default — everywhere:
+
+  mesh flags       ``--mesh none|host`` + ``--model-parallel N``
+                   (``mesh_from_args`` builds the host mesh or returns None)
+  kv flags         ``--kv dense|paged`` + ``--block-size`` + ``--kv-blocks``
+  scheduler flags  ``--scheduler priority|fifo`` + ``--high-frac`` +
+                   ``--deadline-ttft`` / ``--deadline`` (+ the fault knobs
+                   where a chaos plan makes sense)
+  bench output     ``--bench-out PATH`` writing a JSON rollup
+
+Every helper takes the ``argparse.ArgumentParser`` (or a group) and only
+*adds* arguments — launchers keep their workload-specific flags alongside.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+
+def add_mesh_flags(ap: argparse.ArgumentParser, *, default_mesh: str = "none") -> None:
+    """--mesh / --model-parallel: device-mesh topology, shared vocabulary."""
+    ap.add_argument("--mesh", choices=["none", "host"], default=default_mesh,
+                    help="host: build a mesh over all local devices "
+                         "(data x model axes)")
+    ap.add_argument("--model-parallel", type=int, default=1,
+                    help="model-axis size of the host mesh")
+
+
+def mesh_from_args(args):
+    """The mesh the flags asked for: a host mesh, or None (unsharded)."""
+    if getattr(args, "mesh", "none") != "host":
+        return None
+    from repro.dist import meshes
+
+    return meshes.make_host_mesh(model_parallel=args.model_parallel)
+
+
+def add_kv_flags(ap: argparse.ArgumentParser) -> None:
+    """--kv / --block-size / --kv-blocks: KV cache layout (serving)."""
+    ap.add_argument("--kv", choices=["dense", "paged"], default="dense",
+                    help="paged: block-pool KV cache (serve/kv_pool.py)")
+    ap.add_argument("--block-size", type=int, default=16,
+                    help="tokens per KV block (paged only)")
+    ap.add_argument("--kv-blocks", type=int, default=None,
+                    help="total blocks in the paged pool (default: "
+                         "slots * ceil(max_seq/block_size), i.e. dense-"
+                         "equivalent capacity; pass less to oversubscribe)")
+
+
+def add_scheduler_flags(ap: argparse.ArgumentParser, *,
+                        faults: bool = True) -> None:
+    """--scheduler / --high-frac / --deadline-ttft / --deadline (+ fault
+    injection knobs when the launcher drives a chaos-capable engine)."""
+    ap.add_argument("--scheduler", choices=["priority", "fifo"],
+                    default="priority",
+                    help="fifo = submission order, no preemption (ablation)")
+    ap.add_argument("--high-frac", type=float, default=0.0,
+                    help="fraction of the stream in the interactive class "
+                         "(priority 0; the rest are priority 2)")
+    ap.add_argument("--deadline-ttft", type=float, default=None,
+                    help="per-request time-to-first-output budget in "
+                         "seconds (miss = cancel)")
+    ap.add_argument("--deadline", type=float, default=None,
+                    help="per-request end-to-end budget in seconds")
+    if faults:
+        ap.add_argument("--fault-seed", type=int, default=None,
+                        help="replay FaultPlan.random(SEED) against the run "
+                             "(seeded chaos: pool shrinkage, forced "
+                             "preempts, admission stalls)")
+        ap.add_argument("--fault-horizon", type=int, default=24,
+                        help="steps of injected chaos before the plan heals")
+
+
+def add_bench_out_flag(ap: argparse.ArgumentParser) -> None:
+    """--bench-out: where to write the run's JSON metrics rollup."""
+    ap.add_argument("--bench-out", default=None, metavar="PATH",
+                    help="write the run's metrics rollup as JSON to PATH")
+
+
+def write_bench_out(args, payload: dict) -> None:
+    """Write the rollup if --bench-out was given (no-op otherwise)."""
+    path = getattr(args, "bench_out", None)
+    if path:
+        with open(path, "w") as f:
+            json.dump(payload, f, indent=1)
+        print(f"[bench] wrote {path}")

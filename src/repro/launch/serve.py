@@ -34,7 +34,7 @@ import jax
 import numpy as np
 
 from repro.configs import ARCH_IDS, get_config, get_reduced_config
-from repro.dist import meshes
+from repro.launch import common
 from repro.models import model_zoo
 from repro.serve.faults import FaultPlan
 from repro.serve.serving import BatchedServer, Request
@@ -51,41 +51,17 @@ def main(argv=None):
     ap.add_argument("--max-new", type=int, default=32)
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--seed", type=int, default=0)
-    ap.add_argument("--mesh", choices=["none", "host"], default="none",
-                    help="host: shard caches over all local devices")
-    ap.add_argument("--model-parallel", type=int, default=1,
-                    help="model-axis size of the host mesh")
     ap.add_argument("--admission", choices=["continuous", "drain"],
                     default="continuous",
                     help="drain = static-batch ablation (refill only when "
                          "the whole batch finished)")
-    ap.add_argument("--kv", choices=["dense", "paged"], default="dense",
-                    help="paged: block-pool KV cache (serve/kv_pool.py)")
-    ap.add_argument("--block-size", type=int, default=16,
-                    help="tokens per KV block (paged only)")
-    ap.add_argument("--kv-blocks", type=int, default=None,
-                    help="total blocks in the paged pool (default: "
-                         "slots * ceil(max_seq/block_size), i.e. dense-"
-                         "equivalent capacity; pass less to oversubscribe)")
     ap.add_argument("--prefill-chunk", type=int, default=1,
                     help="prompt tokens fed per fused step (chunked prefill)")
     ap.add_argument("--max-steps", type=int, default=None)
-    ap.add_argument("--scheduler", choices=["priority", "fifo"],
-                    default="priority",
-                    help="fifo = submission order, no preemption (ablation)")
-    ap.add_argument("--high-frac", type=float, default=0.0,
-                    help="fraction of requests in the interactive class "
-                         "(priority 0; the rest are priority 2)")
-    ap.add_argument("--deadline-ttft", type=float, default=None,
-                    help="per-request TTFT budget in seconds (miss = cancel)")
-    ap.add_argument("--deadline", type=float, default=None,
-                    help="per-request end-to-end budget in seconds")
-    ap.add_argument("--fault-seed", type=int, default=None,
-                    help="replay FaultPlan.random(SEED) against the run "
-                         "(seeded chaos: pool shrinkage, forced preempts, "
-                         "admission stalls)")
-    ap.add_argument("--fault-horizon", type=int, default=24,
-                    help="steps of injected chaos before the plan heals")
+    common.add_mesh_flags(ap)
+    common.add_kv_flags(ap)
+    common.add_scheduler_flags(ap, faults=True)
+    common.add_bench_out_flag(ap)
     args = ap.parse_args(argv)
 
     cfg = get_reduced_config(args.arch) if args.reduced else get_config(args.arch)
@@ -93,9 +69,7 @@ def main(argv=None):
         raise SystemExit("use examples/seamless decoding path for enc-dec")
     params, specs = model_zoo.init_params(cfg, jax.random.PRNGKey(args.seed))
 
-    mesh = None
-    if args.mesh == "host":
-        mesh = meshes.make_host_mesh(model_parallel=args.model_parallel)
+    mesh = common.mesh_from_args(args)
 
     rng = np.random.default_rng(args.seed)
     max_seq = args.prompt_len + args.max_new + 1
@@ -145,6 +119,7 @@ def main(argv=None):
                  if plan is not None else ""))
     for r in done[:4]:
         print(f"  req {r.rid}: {r.out[:12]}{'...' if len(r.out) > 12 else ''}")
+    common.write_bench_out(args, {"arch": cfg.name, "serving": m.as_dict()})
     return done
 
 

@@ -17,7 +17,7 @@ import jax
 from repro.configs import ARCH_IDS, get_config, get_reduced_config
 from repro.data.pipeline import PageTokenDataset, synthetic_data_fn
 from repro.dist import meshes
-from repro.launch.mesh import make_host_mesh
+from repro.launch import common
 from repro.models import model_zoo
 from repro.train.optimizer import OptConfig
 from repro.train.train_loop import PreemptionGuard, TrainLoopConfig, run
@@ -42,7 +42,9 @@ def main(argv=None):
                     choices=["synthetic", "pages"],
                     help="'pages' = DB-page-backed tokens decoded on-device "
                          "by the strider kernel (the paper's data path)")
-    ap.add_argument("--model-parallel", type=int, default=1)
+    # training always ran over the host mesh; --mesh none opts out
+    common.add_mesh_flags(ap, default_mesh="host")
+    common.add_bench_out_flag(ap)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -61,7 +63,7 @@ def main(argv=None):
     else:
         data_fn = synthetic_data_fn(cfg, args.batch, args.seq)
 
-    mesh = make_host_mesh(args.model_parallel)
+    mesh = common.mesh_from_args(args)
     loop_cfg = TrainLoopConfig(
         total_steps=args.steps,
         ckpt_every=args.ckpt_every,
@@ -89,6 +91,14 @@ def main(argv=None):
         first, last = history[0]["loss"], history[-1]["loss"]
         print(f"[train] loss {first:.4f} -> {last:.4f} "
               f"({'improved' if last < first else 'NOT improved'})")
+    common.write_bench_out(args, {
+        "arch": cfg.name,
+        "steps": len(history),
+        "loss_first": history[0]["loss"] if history else None,
+        "loss_last": history[-1]["loss"] if history else None,
+        "mean_s_per_step": (sum(r["s_per_step"] for r in history)
+                            / len(history)) if history else None,
+    })
     return history
 
 

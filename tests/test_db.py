@@ -85,7 +85,8 @@ def test_catalog_roundtrip(tmp_path, heap):
 
 
 def test_query_end_to_end(tmp_path):
-    from repro.db.query import register_udf_from_trace, run_query
+    from repro.db import connect
+    from repro.db.query import register_udf_from_trace
     from repro.algorithms import linear_regression
 
     rng = np.random.default_rng(0)
@@ -100,10 +101,12 @@ def test_query_end_to_end(tmp_path):
         cat, "linearR", lambda: linear_regression(8, lr=0.2, merge_coef=32, epochs=60),
         layout=heap.layout,
     )
-    res = run_query(
-        "SELECT * FROM dana.linearR('training_data_table');", cat, mode="dana"
-    )
-    assert np.allclose(res.models[0], w_true, atol=0.05)
+    with connect(cat, page_bytes=8192) as sess:
+        res = sess.sql(
+            "SELECT * FROM dana.linearR('training_data_table');", mode="dana"
+        )
+        assert np.allclose(res.coefficients[0], w_true, atol=0.05)
 
-    with pytest.raises(ValueError):
-        run_query("DROP TABLE x;", cat)
+        with pytest.raises(ValueError):
+            sess.sql("DROP TABLE x;")
+    assert sess.pool.resident == 0  # close() flushed the shared pool

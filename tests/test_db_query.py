@@ -13,7 +13,6 @@ from repro.db.query import (
     execute,
     parse,
     register_udf_from_trace,
-    run_query,
 )
 
 
@@ -215,14 +214,23 @@ def test_train_writes_model_back(trained_catalog):
     assert "layout" in stored and "strider_program" in stored
 
 
-def test_run_query_shim_deprecated_but_working(trained_catalog):
-    with pytest.deprecated_call():
-        res = run_query("SELECT * FROM dana.lin('t');", trained_catalog,
-                        max_epochs=2)
-    assert hasattr(res, "models") and res.epochs_run == 2  # old TrainResult
-    with pytest.raises(ValueError):
-        with pytest.deprecated_call():
-            run_query("DROP TABLE x;", trained_catalog)
+def test_run_query_shim_removed():
+    """The deprecated string-in/TrainResult-out shim is gone; Session.sql
+    (or parse/execute) is the query entry point."""
+    import repro.db.query as qmod
+
+    assert not hasattr(qmod, "run_query")
+
+
+def test_catalog_register_table_collision(tmp_path):
+    cat = Catalog(str(tmp_path / "cat"))
+    cat.register_table("t", "a.heap", {"n_features": 1})
+    with pytest.raises(ValueError, match="already exists"):
+        cat.register_table("t", "b.heap", {"n_features": 2})
+    assert cat.table("t")["heap"] == "a.heap"  # collision left it untouched
+    cat.register_table("t", "b.heap", {"n_features": 2}, or_replace=True)
+    assert cat.table("t")["heap"] == "b.heap"
+    assert cat.has_table("t") and not cat.has_table("nope")
 
 
 def test_predict_model_wider_than_table(tmp_path, trained_catalog):

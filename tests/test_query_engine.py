@@ -1,0 +1,364 @@
+"""Mixed-workload SQL engine: predicate-tree parsing and semantics,
+on-device aggregates vs a jitted per-chunk-combine oracle, INSERT…SELECT
+chaining, and the Database/Session facade."""
+import numpy as np
+import pytest
+
+from repro.core import isa, striders
+from repro.db import connect
+from repro.db.catalog import Catalog
+from repro.db.heap import HeapFile, write_table
+from repro.db.query import (
+    Aggregate,
+    And,
+    Not,
+    Or,
+    Predicate,
+    execute,
+    parse,
+    register_udf_from_trace,
+)
+
+PAGE_BYTES = 8192
+
+
+def _tables(tmp_path, rng, d_model, d_extra, n=400):
+    """Train table (d_model cols) + wider scoring table (d_model + d_extra)."""
+    w_true = rng.normal(0, 1, d_model).astype(np.float32)
+    Xtr = rng.normal(0, 1, (n, d_model)).astype(np.float32)
+    z = Xtr @ w_true
+    Xs = rng.normal(0, 1, (n, d_model + d_extra)).astype(np.float32)
+    ys = rng.normal(0, 1, n).astype(np.float32)
+    htr = write_table(str(tmp_path / "train.heap"), Xtr, z, page_bytes=PAGE_BYTES)
+    hs = write_table(str(tmp_path / "score.heap"), Xs, ys, page_bytes=PAGE_BYTES)
+    cat = Catalog(str(tmp_path / "cat"))
+    cat.register_table("train_t", htr.path, {"n_features": d_model})
+    cat.register_table("score_t", hs.path, {"n_features": d_model + d_extra})
+    return cat, htr, Xtr, z, Xs, ys
+
+
+def _train(cat, layout, d, epochs=5):
+    from repro.algorithms import linear_regression
+
+    register_udf_from_trace(
+        cat, "udf",
+        lambda: linear_regression(d, lr=0.1, merge_coef=32, epochs=epochs),
+        layout=layout,
+    )
+    return execute(parse("SELECT * FROM dana.udf('train_t');"), cat)
+
+
+# -- parser: predicate trees and aggregates ----------------------------------
+
+def test_parse_nested_parens():
+    stmt = parse(
+        "SELECT c0 FROM dana.predict('u', 't') "
+        "WHERE ((c1 > 0.0 AND c2 < 1.0) OR NOT (label == 0.0));"
+    )
+    tree = stmt.where
+    assert isinstance(tree, Or)
+    left, right = tree.children
+    assert left == And((Predicate("c1", ">", 0.0), Predicate("c2", "<", 1.0)))
+    assert right == Not(Predicate("label", "==", 0.0))
+    # columns() is the ordered dedup over the whole tree
+    assert tree.columns() == ("c1", "c2", "label")
+
+
+def test_parse_precedence_not_over_and_over_or():
+    """NOT binds tighter than AND binds tighter than OR — so without parens
+    the tree is Or(And(Not(p1), p2), p3)."""
+    stmt = parse(
+        "SELECT c0 FROM dana.predict('u', 't') "
+        "WHERE NOT c1 > 0.0 AND c2 < 1.0 OR c3 == 2.0;"
+    )
+    assert stmt.where == Or((
+        And((Not(Predicate("c1", ">", 0.0)), Predicate("c2", "<", 1.0))),
+        Predicate("c3", "==", 2.0),
+    ))
+
+
+def test_parse_not_over_parenthesized_or():
+    stmt = parse(
+        "SELECT c0 FROM dana.predict('u', 't') "
+        "WHERE NOT (c1 > 0.0 OR c2 < 1.0);"
+    )
+    assert stmt.where == Not(
+        Or((Predicate("c1", ">", 0.0), Predicate("c2", "<", 1.0)))
+    )
+
+
+def test_parse_aggregates_with_where():
+    stmt = parse(
+        "SELECT COUNT(*), AVG(prediction), SUM(c1) "
+        "FROM dana.predict('u', 't') WHERE c1 > 0.0 AND label <= 0.5;"
+    )
+    assert stmt.aggregates == (
+        Aggregate("COUNT", None),
+        Aggregate("AVG", "prediction"),
+        Aggregate("SUM", "c1"),
+    )
+    assert [a.label for a in stmt.aggregates] == [
+        "count(*)", "avg(prediction)", "sum(c1)"]
+    assert not stmt.columns  # aggregate select lists carry no row columns
+    assert isinstance(stmt.where, And)
+
+
+@pytest.mark.parametrize("sql, offending", [
+    # every rejection names the offending token (or end of input)
+    ("SELECT c0 FROM dana.predict('u','t') WHERE c1 >;", "';'"),
+    ("SELECT c0 FROM dana.predict('u','t') WHERE (c1 > 0;", "';'"),
+    ("SELECT c0 FROM dana.predict('u','t') WHERE c1 > 0 GROUP BY c0;",
+     "'GROUP'"),
+    ("SELECT FROM dana.predict('u','t');", "'FROM'"),
+    ("SELECT c0 FROM dana.predict('u','t') WHERE NOT;", "';'"),
+    ("SELECT c0 FROM dana.predict('u','t') WHERE c$ > 0;", "'$'"),
+    ("SELECT COUNT(*), c0 FROM dana.predict('u','t');", "GROUP BY"),
+    ("SELECT MAX(c1) FROM dana.predict('u','t');", "'MAX'"),
+    ("INSERT INTO s SELECT COUNT(*) FROM dana.predict('u','t');",
+     "single logical row"),
+])
+def test_parse_rejections_name_the_problem(sql, offending):
+    with pytest.raises(ValueError) as exc:
+        parse(sql)
+    assert offending in str(exc.value)
+
+
+# -- predicate-tree semantics: bit-exact vs the jitted oracle ----------------
+
+def test_tree_filter_parity_bitexact(tmp_path):
+    """A full AND/OR/NOT tree in the one-jitted chunk keeps exactly the rows
+    the same tree keeps on the host, and the surviving predictions are
+    bit-identical to direct jitted model evaluation."""
+    from repro.kernels.engine import ops as engine_ops
+
+    rng = np.random.default_rng(21)
+    d = 6
+    cat, htr, Xtr, z, Xs, ys = _tables(tmp_path, rng, d, d_extra=4)
+    w = _train(cat, htr.layout, d).coefficients[0]
+
+    res = execute(
+        parse("SELECT c0 FROM dana.predict('udf', 'score_t') "
+              "WHERE (c1 > 0.0 AND c2 <= 0.5) OR NOT (label < 0.0);"),
+        cat,
+    )
+    keep = ((Xs[:, 1] > 0.0) & (Xs[:, 2] <= 0.5)) | ~(ys < 0.0)
+    direct = np.asarray(
+        engine_ops.glm_predict(Xs[keep][:, :d], w, act="linear"))
+    assert res.n_rows == int(keep.sum())
+    np.testing.assert_array_equal(np.asarray(res.predictions), direct)
+    assert 0 < res.n_rows < Xs.shape[0]  # the tree actually filtered
+
+
+def test_tree_pushdown_isa_fifo_crosscheck(tmp_path):
+    """Predicate-tree columns join the projection plan, and the pushdown
+    bookkeeping still matches the ISA interpreter's actual FIFO bytes."""
+    rng = np.random.default_rng(22)
+    d = 4
+    cat, htr, Xtr, z, Xs, ys = _tables(tmp_path, rng, d, d_extra=12)
+    _train(cat, htr.layout, d, epochs=3)
+    hs = HeapFile(cat.table("score_t")["heap"])
+
+    res = execute(
+        parse("SELECT c0 FROM dana.predict('udf', 'score_t') "
+              "WHERE c5 > 0.0 OR NOT c6 < 0.0;"),
+        cat,
+    )
+    pd = res.pushdown
+    # model cols 0..3 + projection c0 + tree cols c5, c6 — not the other 9
+    assert pd.columns_decoded == (0, 1, 2, 3, 5, 6)
+    assert pd.bytes_decoded < pd.bytes_full_decode
+
+    plan = striders.projection_plan(hs.layout, pd.columns_decoded,
+                                    include_label=pd.include_label)
+    assert plan.bytes_per_tuple == pd.bytes_per_tuple
+    prog = striders.compile_strider_program(hs.layout, plan)
+    page = hs.read_page(0)
+    st = isa.StriderInterpreter(prog).run(
+        np.asarray(page, np.uint32).view(np.uint8))
+    tpp = hs.layout.tuples_per_page
+    assert len(st.fifo) == tpp * plan.bytes_per_tuple
+    assert st.cycles == striders.strider_cycles_per_page(hs.layout, plan)
+
+
+# -- on-device aggregates ----------------------------------------------------
+
+def _chunk_partial(vals: np.ndarray, keep: np.ndarray, pad_to: int):
+    """The device's per-chunk partial: jnp.sum over the padded
+    where(keep, val, 0) array — identical contents, identical reduction."""
+    import jax.numpy as jnp
+
+    masked = np.where(keep, vals, 0.0).astype(np.float32)
+    padded = np.concatenate(
+        [masked, np.zeros(pad_to - masked.shape[0], np.float32)])
+    return np.float32(jnp.sum(jnp.asarray(padded)))
+
+
+def test_aggregates_bitexact_vs_jitted_oracle_multichunk(tmp_path):
+    """COUNT/AVG/SUM from a chunked scan are bit-exact against an oracle
+    doing the same jitted per-chunk reduction + f32 host combine — with
+    chunk_pages=1 forcing a many-chunk scan — and the whole scan still
+    syncs the device exactly once."""
+    rng = np.random.default_rng(23)
+    d = 6
+    cat, htr, Xtr, z, Xs, ys = _tables(tmp_path, rng, d, d_extra=2, n=500)
+    _train(cat, htr.layout, d)
+    hs = HeapFile(cat.table("score_t")["heap"])
+
+    where = "WHERE c1 > 0.0 OR label <= -0.5"
+    rows = execute(
+        parse(f"SELECT c0 FROM dana.predict('udf', 'score_t') {where};"),
+        cat, chunk_pages=1,
+    )
+    agg = execute(
+        parse(f"SELECT COUNT(*), AVG(prediction), SUM(c1), AVG(label) "
+              f"FROM dana.predict('udf', 'score_t') {where};"),
+        cat, chunk_pages=1,
+    )
+    assert agg.device_syncs == 1
+    assert agg.n_rows == 1
+    assert agg.result_pages is None  # never materialized
+    assert agg.schema == ("count(*)", "avg(prediction)", "sum(c1)",
+                          "avg(label)")
+
+    keep = (Xs[:, 1] > 0.0) | (ys <= -0.5)
+    n = Xs.shape[0]
+    preds = np.zeros(n, np.float32)
+    preds[keep] = np.asarray(rows.predictions)  # row scan already verified
+
+    # oracle: per-chunk jitted partial sums, combined on host in f32
+    tpp = hs.layout.tuples_per_page
+    totals = {"avg(prediction)": np.float32(0.0),
+              "sum(c1)": np.float32(0.0),
+              "avg(label)": np.float32(0.0)}
+    count = 0
+    for p in range(hs.n_pages):  # chunk_pages=1 -> one page per chunk
+        r0, r1 = p * tpp, min((p + 1) * tpp, n)
+        kc = keep[r0:r1]
+        count += int(kc.sum())
+        for label, vals in (("avg(prediction)", preds[r0:r1]),
+                            ("sum(c1)", Xs[r0:r1, 1]),
+                            ("avg(label)", ys[r0:r1])):
+            totals[label] = np.float32(
+                totals[label] + _chunk_partial(vals, kc, tpp))
+
+    assert agg.aggregates["count(*)"] == count == int(keep.sum())
+    assert agg.aggregates["sum(c1)"] == float(totals["sum(c1)"])
+    assert agg.aggregates["avg(prediction)"] == float(
+        np.float32(totals["avg(prediction)"]) / np.float32(count))
+    assert agg.aggregates["avg(label)"] == float(
+        np.float32(totals["avg(label)"]) / np.float32(count))
+    assert agg.rows_scanned == n
+    assert agg.rows_filtered == n - count
+
+
+def test_aggregates_empty_filter_avg_is_nan(tmp_path):
+    rng = np.random.default_rng(24)
+    d = 4
+    cat, htr, Xtr, z, Xs, ys = _tables(tmp_path, rng, d, d_extra=0)
+    _train(cat, htr.layout, d, epochs=3)
+    res = execute(
+        parse("SELECT COUNT(*), AVG(prediction) FROM "
+              "dana.predict('udf', 'score_t') WHERE c0 > 1e9;"),
+        cat,
+    )
+    assert res.aggregates["count(*)"] == 0
+    assert np.isnan(res.aggregates["avg(prediction)"])
+
+
+# -- INSERT ... SELECT chaining ----------------------------------------------
+
+def test_insert_select_chain_and_collision(tmp_path):
+    """INSERT INTO materializes the scored rows as a catalog table; a second
+    INSERT into the same name collides unless OR REPLACE; and the chained
+    table is a first-class table — a fresh UDF trains on it."""
+    rng = np.random.default_rng(25)
+    d = 4
+    cat, htr, Xtr, z, Xs, ys = _tables(tmp_path, rng, d, d_extra=2)
+    _train(cat, htr.layout, d)
+
+    ins_sql = ("INSERT INTO scored SELECT c0, c1 FROM "
+               "dana.predict('udf', 'score_t') WHERE c1 > 0.0;")
+    res = execute(parse(ins_sql), cat)
+    assert cat.has_table("scored")
+    keep = Xs[:, 1] > 0.0
+    assert res.n_rows == int(keep.sum())
+
+    # collision: rejected before any heap write
+    out_heap = cat.table("scored")["heap"]
+    with pytest.raises(ValueError, match="already exists"):
+        execute(parse(ins_sql), cat)
+    assert HeapFile(out_heap).n_tuples == res.n_rows  # untouched
+
+    replaced = execute(parse(
+        "INSERT OR REPLACE INTO scored SELECT c0 FROM "
+        "dana.predict('udf', 'score_t') WHERE c1 <= 0.0;"), cat)
+    assert replaced.n_rows == int((~keep).sum())
+    assert HeapFile(cat.table("scored")["heap"]).n_tuples == replaced.n_rows
+
+    # chain: train a second model ON the chained table (c0 + prediction
+    # features, label column = the heap's label slot)
+    from repro.algorithms import linear_regression
+
+    out = HeapFile(cat.table("scored")["heap"])
+    n_feat = cat.table("scored")["schema"]["n_features"]
+    register_udf_from_trace(
+        cat, "chained",
+        lambda: linear_regression(n_feat, lr=0.1, merge_coef=32, epochs=3),
+        layout=out.layout,
+    )
+    tr = execute(parse("SELECT * FROM dana.chained('scored');"), cat)
+    assert tr.train.epochs_run >= 1
+
+
+# -- Database / Session facade -----------------------------------------------
+
+def test_session_runs_the_whole_surface(tmp_path):
+    rng = np.random.default_rng(26)
+    d = 4
+    cat, htr, Xtr, z, Xs, ys = _tables(tmp_path, rng, d, d_extra=2)
+    from repro.algorithms import linear_regression
+
+    register_udf_from_trace(
+        cat, "udf",
+        lambda: linear_regression(d, lr=0.1, merge_coef=32, epochs=5),
+        layout=htr.layout,
+    )
+    sess = connect(cat, page_bytes=PAGE_BYTES)
+    tr = sess.sql("SELECT * FROM dana.udf('train_t');")
+    assert tr.train.epochs_run >= 1
+    res = sess.sql("SELECT c0 FROM dana.predict('udf', 'score_t') "
+                   "WHERE c1 > 0.0;")
+    assert res.n_rows == int((Xs[:, 1] > 0.0).sum())
+    agg = sess.sql("SELECT COUNT(*) FROM dana.predict('udf', 'score_t');")
+    assert agg.aggregates["count(*)"] == Xs.shape[0]
+    assert "score_t" in sess.tables() and "udf" in sess.udfs()
+
+    # close() drains and flushes the shared pool
+    assert sess.pool.resident > 0
+    sess.close()
+    assert sess.pool.resident == 0
+    with pytest.raises(RuntimeError, match="closed"):
+        sess.sql("SELECT COUNT(*) FROM dana.predict('udf', 'score_t');")
+
+
+def test_session_context_manager_and_submit(tmp_path):
+    rng = np.random.default_rng(27)
+    d = 4
+    cat, htr, Xtr, z, Xs, ys = _tables(tmp_path, rng, d, d_extra=0)
+    from repro.algorithms import linear_regression
+
+    register_udf_from_trace(
+        cat, "udf",
+        lambda: linear_regression(d, lr=0.1, merge_coef=32, epochs=3),
+        layout=htr.layout,
+    )
+    with connect(cat, page_bytes=PAGE_BYTES, chunk_pages=1) as sess:
+        sess.sql("SELECT * FROM dana.udf('train_t');")
+        sync = sess.sql("SELECT c0 FROM dana.predict('udf', 'score_t');")
+        h = sess.submit("SELECT c0 FROM dana.predict('udf', 'score_t');")
+        res = h.result()
+        assert h.done() and h.status == "FINISHED"
+        np.testing.assert_array_equal(
+            np.asarray(res.predictions), np.asarray(sync.predictions))
+        assert res.device_syncs == 1
+    assert sess.pool.resident == 0

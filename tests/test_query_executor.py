@@ -1,0 +1,223 @@
+"""Concurrent query executor: TRAIN epochs and PREDICT scans interleaving at
+chunk granularity over one shared BufferPool — with results byte-identical
+to the serial schedule, and the solver's one-sync invariants intact."""
+import numpy as np
+import pytest
+
+from repro.db.bufferpool import BufferPool
+from repro.db.catalog import Catalog
+from repro.db.executor import (
+    DEFAULT_CHUNK_PAGES,
+    FAILED,
+    TERMINAL,
+    QueryExecutor,
+)
+from repro.db.heap import HeapFile, write_table
+from repro.db.query import execute, parse, register_udf_from_trace
+from repro.serve.scheduler import CANCELLED_DEADLINE, FINISHED, REJECTED
+
+PAGE_BYTES = 8192
+
+PREDICT_SQL = ("SELECT c0 FROM dana.predict('udf', 'score_t') "
+               "WHERE c1 > 0.0 AND (c2 <= 0.5 OR NOT c3 < 0.0);")
+AGG_SQL = ("SELECT COUNT(*), AVG(prediction) FROM "
+           "dana.predict('udf', 'score_t') WHERE c1 > 0.0;")
+TRAIN_BG_SQL = "SELECT * FROM dana.udf_bg('train_t');"
+
+
+def _catalog(tmp_path, d=6, n=500, seed=31):
+    """Two UDFs over one train table — ``udf`` pre-trained (the PREDICT
+    target), ``udf_bg`` for background TRAIN so write-back can never perturb
+    the predict results — plus a wider scoring table."""
+    from repro.algorithms import linear_regression
+
+    rng = np.random.default_rng(seed)
+    w_true = rng.normal(0, 1, d).astype(np.float32)
+    Xtr = rng.normal(0, 1, (n, d)).astype(np.float32)
+    Xs = rng.normal(0, 1, (n, d + 4)).astype(np.float32)
+    htr = write_table(str(tmp_path / "train.heap"), Xtr, Xtr @ w_true,
+                      page_bytes=PAGE_BYTES)
+    hs = write_table(str(tmp_path / "score.heap"), Xs,
+                     rng.normal(0, 1, n).astype(np.float32),
+                     page_bytes=PAGE_BYTES)
+    cat = Catalog(str(tmp_path / "cat"))
+    cat.register_table("train_t", htr.path, {"n_features": d})
+    cat.register_table("score_t", hs.path, {"n_features": d + 4})
+    for udf in ("udf", "udf_bg"):
+        register_udf_from_trace(
+            cat, udf,
+            lambda: linear_regression(d, lr=0.1, merge_coef=32, epochs=8),
+            layout=htr.layout,
+        )
+    execute(parse("SELECT * FROM dana.udf('train_t');"), cat,
+            pool=BufferPool(page_bytes=PAGE_BYTES), max_epochs=5, seed=0)
+    return cat, Xs
+
+
+def _executor(cat, **kw):
+    kw.setdefault("chunk_pages", 1)
+    return QueryExecutor(cat, BufferPool(page_bytes=PAGE_BYTES), **kw)
+
+
+def _submit_trace(ex, epochs=6):
+    train = ex.submit(TRAIN_BG_SQL, priority=2, max_epochs=epochs, seed=0)
+    pred = ex.submit(PREDICT_SQL, priority=0)
+    agg = ex.submit(AGG_SQL, priority=0)
+    return train, pred, agg
+
+
+def test_interleaved_trace_completes_with_metrics(tmp_path):
+    cat, Xs = _catalog(tmp_path)
+    ex = _executor(cat, max_running=2, policy="priority")
+    train, pred, agg = _submit_trace(ex)
+    m = ex.drain()
+
+    assert all(r.status == FINISHED for r in (train, pred, agg))
+    assert m.submitted == m.admitted == m.finished == 3
+    assert m.failed == m.rejected == m.cancelled_deadline == 0
+    assert m.train_units == 6          # one unit per epoch dispatch
+    assert m.predict_units > 0
+    assert m.units == m.train_units + m.predict_units
+    assert 0 < m.occupancy_pct <= 100.0
+    assert len(m.wait_steps) == len(m.turnaround_steps) == 3
+    # ExecutorMetrics mirrors ServeMetrics: per-priority + dict rollup
+    d = m.as_dict()
+    assert d["finished"] == 3 and "per_priority" in d
+    assert d["per_priority"]["0"]["submitted"] == 2  # JSON-style keys
+
+    # interactive PREDICTs (priority 0) finish before the background TRAIN
+    assert pred.finish_step < train.finish_step
+    assert agg.finish_step < train.finish_step
+    # ttft bookkeeping: first chunk dispatched at/after admission
+    assert pred.first_unit_step >= pred.admit_step >= pred.submit_step
+
+
+def test_serial_vs_interleaved_results_byte_identical(tmp_path):
+    cat, Xs = _catalog(tmp_path)
+    runs = {}
+    for name, kw in (("interleaved", dict(max_running=2, policy="priority")),
+                     ("serial", dict(max_running=1, policy="fifo"))):
+        ex = _executor(cat, **kw)
+        train, pred, agg = _submit_trace(ex)
+        ex.drain()
+        runs[name] = (train, pred, agg)
+
+    ti, pi, ai = runs["interleaved"]
+    ts, ps, as_ = runs["serial"]
+    np.testing.assert_array_equal(
+        np.asarray(pi.result.predictions), np.asarray(ps.result.predictions))
+    assert ai.result.aggregates == as_.result.aggregates
+    np.testing.assert_array_equal(
+        np.asarray(ti.result.coefficients), np.asarray(ts.result.coefficients))
+    # and in serial fifo the first-submitted TRAIN blocks both PREDICTs
+    assert ts.finish_step < ps.finish_step
+    assert ts.finish_step < as_.finish_step
+
+
+def test_executor_train_matches_execute_train(tmp_path):
+    """The executor's chunk-yielding TRAIN (solver.train_units) lands on the
+    same coefficients as the synchronous execute() pipeline — byte-identical,
+    because both drain the same generator."""
+    cat, Xs = _catalog(tmp_path)
+    direct = execute(parse(TRAIN_BG_SQL), cat,
+                     pool=BufferPool(page_bytes=PAGE_BYTES),
+                     max_epochs=6, seed=0)
+
+    cat2 = Catalog(str(tmp_path / "cat"))  # same backing store, fresh handle
+    ex = _executor(cat2, max_running=2, policy="priority")
+    req = ex.submit(TRAIN_BG_SQL, priority=0, max_epochs=6, seed=0)
+    ex.drain()
+    assert req.status == FINISHED
+    np.testing.assert_array_equal(
+        np.asarray(req.result.coefficients), np.asarray(direct.coefficients))
+    assert req.units == 6  # one scheduling unit per epoch
+
+
+def test_predict_one_sync_per_scan_and_aggregates(tmp_path):
+    cat, Xs = _catalog(tmp_path)
+    ex = _executor(cat, max_running=2, policy="priority")
+    pred = ex.submit(PREDICT_SQL, priority=0)
+    agg = ex.submit(AGG_SQL, priority=0)
+    ex.drain()
+    assert pred.result.device_syncs == 1
+    assert agg.result.device_syncs == 1
+    # many chunks, each its own scheduling unit (chunk_pages=1)
+    n_pages = HeapFile(cat.table("score_t")["heap"]).n_pages
+    assert pred.units == n_pages
+    keep = Xs[:, 1] > 0.0
+    assert agg.result.aggregates["count(*)"] == int(keep.sum())
+    # oracle vs direct execute through the synchronous path
+    sync = execute(parse(AGG_SQL), cat, chunk_pages=1)
+    assert agg.result.aggregates == sync.aggregates
+
+
+def test_deadline_cancels_queued_and_running(tmp_path):
+    cat, Xs = _catalog(tmp_path)
+    # a fake clock the test advances: queued query expires before admission
+    now = [0.0]
+    ex = QueryExecutor(cat, BufferPool(page_bytes=PAGE_BYTES),
+                       max_running=1, policy="fifo", chunk_pages=1,
+                       clock=lambda: now[0])
+    run = ex.submit(TRAIN_BG_SQL, priority=0, max_epochs=4, seed=0)
+    late = ex.submit(PREDICT_SQL, priority=0, deadline_s=5.0)
+    ex.step()  # admits TRAIN; PREDICT waits
+    now[0] = 10.0  # past the queued PREDICT's deadline
+    ex.drain()
+    assert run.status == FINISHED
+    assert late.status == CANCELLED_DEADLINE
+    assert late.result is None
+    assert ex.metrics.cancelled_deadline == 1
+
+    # running-side: a deadline that lapses mid-scan cancels cleanly and
+    # leaves the pool quiescent for the remaining queries
+    ex2 = QueryExecutor(cat, BufferPool(page_bytes=PAGE_BYTES),
+                        max_running=2, policy="priority", chunk_pages=1,
+                        clock=lambda: now[0])
+    now[0] = 0.0
+    doomed = ex2.submit(PREDICT_SQL, priority=0, deadline_s=1.0)
+    ok = ex2.submit(AGG_SQL, priority=2)
+    ex2.step()
+    now[0] = 2.0
+    ex2.drain()
+    assert doomed.status == CANCELLED_DEADLINE
+    assert ok.status == FINISHED
+    assert ok.result.aggregates["count(*)"] == int((Xs[:, 1] > 0.0).sum())
+
+
+def test_lm_and_unknown_udfs_rejected_at_submit(tmp_path):
+    cat, Xs = _catalog(tmp_path)
+    # stub LM artifact: rejected at submit, cfg/params never touched
+    cat.register_udf("lm", {"kind": "lm", "cfg": None, "params": None})
+    ex = _executor(cat, max_running=2)
+    with pytest.raises(ValueError, match="language model"):
+        ex.submit("SELECT c0 FROM dana.predict('lm', 'score_t');")
+    with pytest.raises(KeyError):
+        ex.submit("SELECT c0 FROM dana.predict('nope', 'score_t');")
+    assert ex.metrics.rejected == 2
+    assert all(r.status == REJECTED for r in ex.queries)
+    assert ex.drain().units == 0  # nothing was enqueued
+
+
+def test_failed_query_is_terminal_and_isolated(tmp_path):
+    """A query that blows up mid-run goes FAILED without poisoning the other
+    running queries or the shared pool."""
+    cat, Xs = _catalog(tmp_path)
+    ex = _executor(cat, max_running=2, policy="priority")
+    # scoring 'train_t' (6 cols) with a WHERE on c9 fails at plan time
+    bad = ex.submit("SELECT c0 FROM dana.predict('udf', 'train_t') "
+                    "WHERE c9 > 0.0;", priority=0)
+    good = ex.submit(AGG_SQL, priority=0)
+    ex.drain()
+    assert bad.status == FAILED and bad.status in TERMINAL
+    assert isinstance(bad.error, Exception)
+    assert good.status == FINISHED
+    assert ex.metrics.failed == 1 and ex.metrics.finished == 1
+
+
+def test_default_chunk_pages_used_when_unset(tmp_path):
+    cat, Xs = _catalog(tmp_path)
+    ex = QueryExecutor(cat, BufferPool(page_bytes=PAGE_BYTES), max_running=1)
+    req = ex.submit(PREDICT_SQL, priority=0)
+    ex.drain()
+    n_pages = HeapFile(cat.table("score_t")["heap"]).n_pages
+    assert req.units == -(-n_pages // DEFAULT_CHUNK_PAGES)
