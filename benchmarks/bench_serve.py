@@ -48,9 +48,23 @@ preemptive, machine-independent, floor ``PREEMPT_TTFT_RATIO_FLOOR`` — and
 the rung also proves preemption's cost is recompute, never tokens: the
 background outputs must byte-match across both modes.
 
+Rung 5 (``serve_prefix``): the prefix-cache rung. A seeded synthetic
+production trace (``serve.faults.synth_trace``: Poisson tenants with
+bursts, heavy-tailed lengths, most prompts opening with a shared template)
+replays through the SAME server twice at a fixed tight block budget —
+once with the refcounted prefix cache off, once on — under the wdrr
+tenant scheduler. With the cache on, admissions map resident template
+blocks read-only (refcount bump) and prefill only the divergent suffix,
+so the gated numbers are machine-independent token counts: prefill tokens
+per finished request must drop by >= ``PREFIX_PREFILL_RATIO_FLOOR``,
+occupancy must stay >= ``PREFIX_OCCUPANCY_FLOOR_PCT``, KV bytes written
+per generated token must drop, and — the correctness half — every
+request's output must byte-match the unshared run.
+
 Because request lengths vary, ``speedup_x`` (tok/s ratio) is a same-machine
 ratio that transfers across runner generations; occupancy_pct, the TTFT
-step ratio, and the preemption TTFT ratio are machine-independent.
+step ratio, the preemption TTFT ratio, and the prefix prefill ratio are
+machine-independent.
 
     PYTHONPATH=src python -m benchmarks.bench_serve [--quick] \
         [--out BENCH_serve.json]
@@ -68,6 +82,7 @@ import numpy as np
 
 from repro.configs import get_reduced_config
 from repro.models import model_zoo
+from repro.serve.faults import replay_trace, synth_trace
 from repro.serve.serving import BatchedServer, Request
 
 QUICK = dict(arch="internlm2-20b", slots=4, n_requests=16, prompt_lo=4,
@@ -106,12 +121,30 @@ PREEMPT_FULL = dict(arch="internlm2-20b", slots=8, n_bg=16, bg_prompt=12,
                     bg_new=48, n_hi=6, hi_prompt=6, hi_new=3, warm_steps=3,
                     max_seq=96, block_size=8, prefill_chunk=4, seed=0)
 
+# prefix rung: shared-template trace at a tight fixed block budget; the
+# trace shape (high template share, short unique suffixes, enough arrival
+# density that template holders stay resident) is the workload the prefix
+# cache exists for — the floors below are gated on IT, not on adversarial
+# all-unique streams (those get parity coverage in tests/)
+PREFIX_QUICK = dict(arch="internlm2-20b", slots=6, trace_seed=7,
+                    trace_steps=20, tenants=2, rate=0.6, p_shared=0.9,
+                    templates_per_tenant=1, template_len=20, mean_suffix=3,
+                    max_prompt=32, max_new=10, mean_new=6.0, max_seq=48,
+                    block_size=4, prefill_chunk=4, kv_blocks=48)
+PREFIX_FULL = dict(arch="internlm2-20b", slots=8, trace_seed=7,
+                   trace_steps=40, tenants=3, rate=0.5, p_shared=0.9,
+                   templates_per_tenant=2, template_len=24, mean_suffix=4,
+                   max_prompt=40, max_new=16, mean_new=8.0, max_seq=64,
+                   block_size=4, prefill_chunk=4, kv_blocks=80)
+
 OCCUPANCY_FLOOR_PCT = 75.0  # continuous batching must stay this saturated
 PAGED_OCCUPANCY_FLOOR_PCT = 65.0  # reservation deferrals cost a little
 TTFT_RATIO_FLOOR = 2.0  # chunked prefill must at least halve TTFT steps
 TOKBATCH_SPEEDUP_FLOOR = 1.2  # token batching tok/s over chunked gather
 TOKBATCH_PER_TOKEN_FLOOR = 1.5  # tok/s per batched token row, ratio floor
 PREEMPT_TTFT_RATIO_FLOOR = 2.0  # interactive TTFT steps: fifo / preemptive
+PREFIX_PREFILL_RATIO_FLOOR = 1.3  # prefill tokens/request: unshared / shared
+PREFIX_OCCUPANCY_FLOOR_PCT = 65.0  # shared run must stay saturated too
 
 
 def _requests(shape: dict, cfg, rid0: int = 0) -> list[Request]:
@@ -485,16 +518,135 @@ def bench_preempt(shape: dict, quick: bool = False) -> dict:
     return result
 
 
+# ------------- rung 5: refcounted prefix sharing on a trace -------------------
+def bench_prefix(shape: dict, quick: bool = False) -> dict:
+    cfg = get_reduced_config(shape["arch"])
+    params, _ = model_zoo.init_params(cfg, jax.random.PRNGKey(1))
+    trace = synth_trace(
+        shape["trace_seed"], steps=shape["trace_steps"],
+        tenants=shape["tenants"], rate=shape["rate"],
+        p_shared=shape["p_shared"],
+        templates_per_tenant=shape["templates_per_tenant"],
+        template_len=shape["template_len"], mean_suffix=shape["mean_suffix"],
+        max_prompt=shape["max_prompt"], max_new=shape["max_new"],
+        mean_new=shape["mean_new"], vocab=min(64, cfg.vocab_size - 1),
+    )
+
+    def drive(prefix_cache: bool):
+        server = BatchedServer(cfg, params, batch_slots=shape["slots"],
+                               max_seq=shape["max_seq"], kv="paged",
+                               block_size=shape["block_size"],
+                               kv_blocks=shape["kv_blocks"],
+                               prefill_chunk=shape["prefill_chunk"],
+                               scheduler="wdrr",
+                               tenant_weights=trace.tenant_weights,
+                               prefix_cache=prefix_cache, debug_checks=False)
+        # warmup: compile the fused step + reset + COW programs off the clock
+        warm = np.random.default_rng(9)
+        for i in range(2):
+            server.submit(Request(rid=100_000 + i,
+                                  prompt=warm.integers(1, cfg.vocab_size,
+                                                       4).tolist(),
+                                  max_new_tokens=2))
+        server.run()
+        server.reset_metrics()
+        done = replay_trace(server, trace)
+        m = server.metrics
+        if m.finished != len(trace):  # not assert: must survive -O
+            raise SystemExit(
+                f"prefix_cache={prefix_cache}: {m.finished}/{len(trace)} "
+                "finished"
+            )
+        return m, {r.rid: r.out for r in done}
+
+    un, un_out = drive(False)
+    sh, sh_out = drive(True)
+    outputs_match = un_out == sh_out
+    fin = max(sh.finished, 1)
+    prefill_ratio = (un.prompt_tokens / sh.prompt_tokens
+                     if sh.prompt_tokens else 0.0)
+    kv_bytes_ratio = (un.kv_bytes_per_token / sh.kv_bytes_per_token
+                      if sh.kv_bytes_per_token else 0.0)
+    speedup = sh.tok_per_s / un.tok_per_s if un.tok_per_s else 0.0
+
+    result = {
+        "workload": "serve_prefix",
+        "arch": shape["arch"],
+        "slots": shape["slots"],
+        "n_requests": len(trace),
+        "kv_blocks": shape["kv_blocks"],
+        "trace": {
+            "seed": shape["trace_seed"],
+            "steps": shape["trace_steps"],
+            "tenants": shape["tenants"],
+            "shared_fraction": trace.shared_fraction(),
+            "tenant_weights": {str(k): v
+                               for k, v in trace.tenant_weights.items()},
+        },
+        "unshared": un.as_dict(),
+        "shared": sh.as_dict(),
+        "speedup_x": speedup,
+        "outputs_match": outputs_match,
+        "serving": {
+            "tok_s": sh.tok_per_s,
+            "occupancy_pct": sh.occupancy_pct,
+            "occupancy_floor_pct": PREFIX_OCCUPANCY_FLOOR_PCT,
+            "prefill_tokens_per_request": sh.prompt_tokens / fin,
+            "prefill_tokens_per_request_unshared": un.prompt_tokens / fin,
+            "prefix_prefill_ratio": prefill_ratio,
+            "prefix_prefill_ratio_floor": PREFIX_PREFILL_RATIO_FLOOR,
+            "prefix_hits": sh.prefix_hits,
+            "prefix_tokens": sh.prefix_tokens,
+            "cow_splits": sh.cow_splits,
+            "kv_bytes_per_token": sh.kv_bytes_per_token,
+            "kv_bytes_per_token_ratio": kv_bytes_ratio,
+        },
+    }
+    if quick:
+        # SystemExit, not assert: gates CI, must survive python -O
+        if not outputs_match:
+            raise SystemExit(
+                "prefix sharing changed tokens — COW/refcount lifecycle is "
+                "not read-only-safe on this trace"
+            )
+        if sh.prefix_hits == 0:
+            raise SystemExit(
+                "prefix cache never hit on a 90%-shared-template trace — "
+                "the rung is vacuous"
+            )
+        if prefill_ratio < PREFIX_PREFILL_RATIO_FLOOR:
+            raise SystemExit(
+                f"prefill ratio {prefill_ratio:.2f}x below the "
+                f"{PREFIX_PREFILL_RATIO_FLOOR}x floor "
+                f"({un.prompt_tokens} vs {sh.prompt_tokens} prompt tokens)"
+            )
+        if sh.occupancy_pct < PREFIX_OCCUPANCY_FLOOR_PCT:
+            raise SystemExit(
+                f"shared-run occupancy {sh.occupancy_pct:.1f}% below the "
+                f"{PREFIX_OCCUPANCY_FLOOR_PCT}% floor"
+            )
+        if sh.kv_bytes_written >= un.kv_bytes_written:
+            raise SystemExit(
+                f"prefix sharing wrote {sh.kv_bytes_written} KV bytes vs "
+                f"{un.kv_bytes_written} unshared — the bandwidth claim is "
+                "vacuous"
+            )
+    return result
+
+
 def bench_all(quick: bool = False) -> dict:
-    shapes = ((QUICK, PAGED_QUICK, TOKBATCH_QUICK, PREEMPT_QUICK) if quick
-              else (FULL, PAGED_FULL, TOKBATCH_FULL, PREEMPT_FULL))
+    shapes = ((QUICK, PAGED_QUICK, TOKBATCH_QUICK, PREEMPT_QUICK,
+               PREFIX_QUICK) if quick
+              else (FULL, PAGED_FULL, TOKBATCH_FULL, PREEMPT_FULL,
+                    PREFIX_FULL))
     return {
         "devices": jax.device_count(),
         "quick": quick,
         "results": [bench(shapes[0], quick=quick),
                     bench_paged(shapes[1], quick=quick),
                     bench_tokbatch(shapes[2], quick=quick),
-                    bench_preempt(shapes[3], quick=quick)],
+                    bench_preempt(shapes[3], quick=quick),
+                    bench_prefix(shapes[4], quick=quick)],
     }
 
 
@@ -544,6 +696,18 @@ def run(csv_rows: list[str]) -> list[str]:
         f";ratio_x={sp['preempt_ttft_ratio']:.2f}"
         f";preemptions={sp['preemptions']}"
         f";recompute_tok={sp['recompute_tokens']}"
+    )
+    xres = bench_prefix(PREFIX_QUICK, quick=False)
+    xp = xres["serving"]
+    csv_rows.append(
+        f"serve/prefix_{xres['arch']},{xp['prefill_tokens_per_request']:.1f},"
+        f"slots={xres['slots']}"
+        f";prefill_per_req={xp['prefill_tokens_per_request']:.1f}"
+        f";unshared={xp['prefill_tokens_per_request_unshared']:.1f}"
+        f";ratio_x={xp['prefix_prefill_ratio']:.2f}"
+        f";hits={xp['prefix_hits']}"
+        f";cow={xp['cow_splits']}"
+        f";kvB_per_tok={xp['kv_bytes_per_token']:.0f}"
     )
     return csv_rows
 
@@ -596,6 +760,15 @@ def main() -> None:
           f"({rs['preempt_ttft_ratio']:.2f}x, {rs['preemptions']} "
           f"preemptions, {rs['recompute_tokens']} recomputed tokens, "
           f"bg outputs match: {res['results'][3]['bg_outputs_match']})")
+    rx = res["results"][4]
+    xs = rx["serving"]
+    print(f"prefix cache on a {rx['trace']['shared_fraction']:.0%}-shared "
+          f"trace: {xs['prefill_tokens_per_request_unshared']:.1f} -> "
+          f"{xs['prefill_tokens_per_request']:.1f} prefill tokens/request "
+          f"({xs['prefix_prefill_ratio']:.2f}x), {xs['prefix_hits']} hits, "
+          f"{xs['cow_splits']} COW splits, "
+          f"{xs['kv_bytes_per_token_ratio']:.2f}x fewer KV bytes/token, "
+          f"outputs match: {rx['outputs_match']}")
     if args.out:
         with open(args.out, "w") as f:
             json.dump(res, f, indent=2)

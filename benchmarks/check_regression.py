@@ -33,6 +33,12 @@ Default checks per baseline workload:
     class, machine-independent) may not drop below the baseline's
     ``serving.preempt_ttft_ratio_floor`` — preemptive scheduling must keep
     buying the interactive class its latency win.
+  * serving format, prefix rung: ``serving.prefix_prefill_ratio`` (unshared
+    over shared prefill tokens per finished request on the same trace,
+    machine-independent) may not drop below the baseline's
+    ``serving.prefix_prefill_ratio_floor`` — refcounted prefix sharing must
+    keep cutting per-request prefill — and ``outputs_match`` must hold
+    (shared-prefix serving must never change tokens).
   * scoring format (``bench_score``): ``scoring.decode_bytes_ratio`` (static
     strider bookkeeping — full-decode bytes over projected bytes, fully
     machine-independent) may not drop below the baseline's
@@ -141,6 +147,21 @@ def check(current: dict, baseline: dict, tol: float, abs_time: bool) -> list[str
                     failures.append(
                         f"{name}: preemptive interactive-TTFT ratio "
                         f"{ratio:.2f}x below the {float(pre_floor):.1f}x floor"
+                    )
+            pfx_floor = base_serv.get("prefix_prefill_ratio_floor")
+            if pfx_floor is not None:
+                ratio = float(cur_serv.get("prefix_prefill_ratio", 0.0))
+                if ratio < float(pfx_floor):
+                    failures.append(
+                        f"{name}: prefix-cache prefill ratio {ratio:.2f}x "
+                        f"below the {float(pfx_floor):.1f}x floor (sharing "
+                        f"no longer cuts prefill tokens per request)"
+                    )
+                if not cur.get("outputs_match", True):
+                    failures.append(
+                        f"{name}: shared-prefix outputs diverged from the "
+                        f"unshared pool (COW/refcount lifecycle broke "
+                        f"token-exactness)"
                     )
             if abs_time:
                 _ratio_check(

@@ -49,15 +49,47 @@ def add_kv_flags(ap: argparse.ArgumentParser) -> None:
                     help="total blocks in the paged pool (default: "
                          "slots * ceil(max_seq/block_size), i.e. dense-"
                          "equivalent capacity; pass less to oversubscribe)")
+    ap.add_argument("--prefix-cache", choices=["auto", "on", "off"],
+                    default="auto",
+                    help="refcounted prefix-sharing KV blocks (paged, "
+                         "attention-only families). auto = on wherever "
+                         "eligible; on records a fallback when ineligible")
+
+
+def prefix_cache_from_args(args) -> bool | None:
+    """Map the --prefix-cache tri-state onto BatchedServer's argument
+    (None = auto: enabled wherever the model/layout is eligible)."""
+    return {"auto": None, "on": True, "off": False}[args.prefix_cache]
+
+
+def parse_tenant_weights(spec: str | None) -> dict | None:
+    """Parse '0=1,1=2,interactive=4' into a tenant->weight dict (keys become
+    ints when they look like ints, matching Request.tenant defaults)."""
+    if not spec:
+        return None
+    out: dict = {}
+    for part in spec.split(","):
+        k, _, v = part.partition("=")
+        if not _ or not k:
+            raise SystemExit(f"--tenant-weights: bad entry {part!r} "
+                             "(want TENANT=WEIGHT,...)")
+        key = int(k) if k.strip().lstrip("-").isdigit() else k.strip()
+        out[key] = float(v)
+    return out
 
 
 def add_scheduler_flags(ap: argparse.ArgumentParser, *,
                         faults: bool = True) -> None:
     """--scheduler / --high-frac / --deadline-ttft / --deadline (+ fault
     injection knobs when the launcher drives a chaos-capable engine)."""
-    ap.add_argument("--scheduler", choices=["priority", "fifo"],
+    ap.add_argument("--scheduler", choices=["priority", "fifo", "wdrr"],
                     default="priority",
-                    help="fifo = submission order, no preemption (ablation)")
+                    help="fifo = submission order, no preemption (ablation); "
+                         "wdrr = weighted deficit round robin over tenants "
+                         "under the priority classes (--tenant-weights)")
+    ap.add_argument("--tenant-weights", default=None, metavar="T=W,...",
+                    help="per-tenant wdrr weights, e.g. '0=1,1=2,2=4' "
+                         "(unlisted tenants weigh 1)")
     ap.add_argument("--high-frac", type=float, default=0.0,
                     help="fraction of the stream in the interactive class "
                          "(priority 0; the rest are priority 2)")

@@ -15,7 +15,9 @@ fused step (TTFT drops ~C× in steps). Prints the ``serve.metrics`` rollup
 Scheduling knobs: ``--high-frac 0.25`` marks ~25% of the stream as the
 interactive class (priority 0; the rest priority 2) so preemption has
 something to preempt for; ``--scheduler fifo`` is the no-preemption
-ablation; ``--deadline-ttft`` / ``--deadline`` attach wall-clock budgets to
+ablation; ``--scheduler wdrr`` adds weighted deficit-round-robin tenant
+shares under the priority classes (``--tenant-weights 0=1,1=2``);
+``--deadline-ttft`` / ``--deadline`` attach wall-clock budgets to
 every request (misses are cancelled, not served late). ``--fault-seed N``
 replays the seeded chaos schedule ``FaultPlan.random(N)`` against the run
 (``--fault-horizon`` steps of pool shrinkage / forced preemptions /
@@ -25,6 +27,17 @@ asserts on:
     PYTHONPATH=src python -m repro.launch.serve --arch internlm2-20b \\
         --reduced --batch 4 --requests 12 --kv paged --prefill-chunk 4 \\
         --high-frac 0.25 --fault-seed 3
+
+``--trace-seed N`` swaps the homogeneous request stream for a synthetic
+production trace (``serve.faults.synth_trace``: Poisson tenants with
+bursts, heavy-tailed lengths, shared prompt templates) replayed against
+the server's step clock — the workload the prefix cache
+(``--prefix-cache``, on by default for eligible paged shapes) and wdrr
+fairness are measured on:
+
+    PYTHONPATH=src python -m repro.launch.serve --arch internlm2-20b \\
+        --reduced --batch 6 --kv paged --block-size 4 --prefill-chunk 4 \\
+        --scheduler wdrr --trace-seed 7 --trace-tenants 3
 """
 from __future__ import annotations
 
@@ -36,7 +49,7 @@ import numpy as np
 from repro.configs import ARCH_IDS, get_config, get_reduced_config
 from repro.launch import common
 from repro.models import model_zoo
-from repro.serve.faults import FaultPlan
+from repro.serve.faults import FaultPlan, replay_trace, synth_trace
 from repro.serve.serving import BatchedServer, Request
 
 
@@ -58,6 +71,15 @@ def main(argv=None):
     ap.add_argument("--prefill-chunk", type=int, default=1,
                     help="prompt tokens fed per fused step (chunked prefill)")
     ap.add_argument("--max-steps", type=int, default=None)
+    ap.add_argument("--trace-seed", type=int, default=None,
+                    help="replay synth_trace(SEED) instead of the uniform "
+                         "stream (bursty tenants, heavy tails, shared "
+                         "prompt templates)")
+    ap.add_argument("--trace-steps", type=int, default=24,
+                    help="arrival horizon of the synthetic trace in steps")
+    ap.add_argument("--trace-tenants", type=int, default=2,
+                    help="tenants in the synthetic trace (weights default "
+                         "to 2**tenant unless --tenant-weights is given)")
     common.add_mesh_flags(ap)
     common.add_kv_flags(ap)
     common.add_scheduler_flags(ap, faults=True)
@@ -72,7 +94,19 @@ def main(argv=None):
     mesh = common.mesh_from_args(args)
 
     rng = np.random.default_rng(args.seed)
-    max_seq = args.prompt_len + args.max_new + 1
+    weights = common.parse_tenant_weights(args.tenant_weights)
+    trace = None
+    if args.trace_seed is not None:
+        trace = synth_trace(args.trace_seed, steps=args.trace_steps,
+                            tenants=args.trace_tenants,
+                            vocab=min(64, cfg.vocab_size - 1),
+                            max_prompt=args.prompt_len + 16,
+                            max_new=args.max_new, weights=weights)
+        if weights is None:
+            weights = trace.tenant_weights
+        max_seq = args.prompt_len + 16 + args.max_new + 1
+    else:
+        max_seq = args.prompt_len + args.max_new + 1
     plan = (FaultPlan.random(args.fault_seed, horizon=args.fault_horizon)
             if args.fault_seed is not None else None)
     server = BatchedServer(cfg, params, batch_slots=args.batch, max_seq=max_seq,
@@ -81,18 +115,24 @@ def main(argv=None):
                            admission=args.admission, kv=args.kv,
                            block_size=args.block_size, kv_blocks=args.kv_blocks,
                            prefill_chunk=args.prefill_chunk,
-                           scheduler=args.scheduler, fault_plan=plan)
-    n_requests = args.requests if args.requests is not None else args.batch
-    hi = rng.random(n_requests) < args.high_frac
-    for i in range(n_requests):
-        prompt = rng.integers(1, cfg.vocab_size, args.prompt_len).tolist()
-        server.submit(Request(rid=i, prompt=prompt,
-                              max_new_tokens=args.max_new,
-                              priority=0 if hi[i] else 2,
-                              deadline_ttft_s=args.deadline_ttft,
-                              deadline_s=args.deadline))
-
-    done = server.run(max_steps=args.max_steps)
+                           scheduler=args.scheduler, fault_plan=plan,
+                           prefix_cache=common.prefix_cache_from_args(args),
+                           tenant_weights=weights)
+    if trace is not None:
+        n_requests = len(trace)
+        done = replay_trace(server, trace,
+                            max_steps=args.max_steps or 2000)
+    else:
+        n_requests = args.requests if args.requests is not None else args.batch
+        hi = rng.random(n_requests) < args.high_frac
+        for i in range(n_requests):
+            prompt = rng.integers(1, cfg.vocab_size, args.prompt_len).tolist()
+            server.submit(Request(rid=i, prompt=prompt,
+                                  max_new_tokens=args.max_new,
+                                  priority=0 if hi[i] else 2,
+                                  deadline_ttft_s=args.deadline_ttft,
+                                  deadline_s=args.deadline))
+        done = server.run(max_steps=args.max_steps)
     m = server.metrics
     mesh_desc = f" mesh={dict(mesh.shape)} path={server.last_sharded_path}" \
         if mesh is not None else ""
@@ -117,6 +157,17 @@ def main(argv=None):
               f"rejected={m.rejected}{hi_desc}"
               + (f" faults_applied={len(plan.applied)}"
                  if plan is not None else ""))
+    if server.prefix_cache and m.admitted:
+        print(f"[prefix] hits={m.prefix_hits}/{m.admitted} admissions, "
+              f"{m.prefix_tokens} prompt tokens served from resident blocks, "
+              f"{m.cow_splits} COW splits, "
+              f"{m.kv_bytes_per_token / 1024:.1f} KiB of KV written per token")
+    if trace is not None and m.per_tenant:
+        shares = {t: v["tokens_generated"]
+                  for t, v in sorted(m.per_tenant.items())}
+        print(f"[trace] {len(trace)} arrivals over {args.trace_steps} steps "
+              f"(shared-template fraction {trace.shared_fraction():.2f}), "
+              f"tokens by tenant {shares}")
     for r in done[:4]:
         print(f"  req {r.rid}: {r.out[:12]}{'...' if len(r.out) > 12 else ''}")
     common.write_bench_out(args, {"arch": cfg.name, "serving": m.as_dict()})

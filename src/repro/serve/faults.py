@@ -1,4 +1,4 @@
-"""Seeded fault injection for the serving engine: chaos you can replay.
+"""Seeded fault injection + synthetic production traces for the serving engine.
 
 Nothing in a green test suite proves the engine survives the conditions the
 robustness machinery exists for — pool pressure mid-decode, forced evictions,
@@ -27,6 +27,30 @@ Every plan **heals**: at ``heal_step`` (default: one past the last event) all
 quarantined blocks return and stalls clear, so a bounded ``run(max_steps=)``
 always drains — the chaos suite's termination guarantee. ``applied`` logs
 each event's observed effect for debugging a failing seed.
+
+The second half of this module is the **production-trace harness** the
+``serve_prefix`` bench and the fairness tests measure against. Real serving
+traffic is not what ad-hoc test loops generate: arrivals are bursty per
+tenant, lengths are heavy-tailed, and most prompts open with one of a few
+shared templates (system prompts, few-shot preambles — the structure the
+prefix cache exists to exploit). ``synth_trace`` generates exactly that shape
+from a seed:
+
+  * per-tenant Poisson arrivals (requests per server step) with seeded burst
+    windows during which the tenant's rate multiplies;
+  * heavy-tailed (lognormal, clipped) prompt-suffix and output lengths —
+    a few whales among many minnows, the distribution that stresses both
+    block budgets and fairness;
+  * per-tenant template pools: each request opens with one of the tenant's
+    shared prompt templates with probability ``p_shared`` (templates are
+    tenant-private — cross-tenant prompts never collide, so sharing wins
+    come from *within*-tenant traffic, the realistic case).
+
+``replay_trace`` feeds a trace through a ``BatchedServer`` against the
+server's own fused-step clock (``server.step_no``): a request is submitted
+the step it "arrives", so two configurations replaying the same seed see the
+*identical* offered load — the controlled-experiment property every A/B in
+``benchmarks/bench_serve.py`` leans on.
 """
 from __future__ import annotations
 
@@ -153,3 +177,161 @@ class FaultPlan:
                 healed = server._paged.grow(None)
                 self.applied.append((step, "heal", 0.0, float(healed)))
             server._admit_stall = 0
+
+
+# ---------------------------------------------------------------------------
+# Synthetic production traces (see module doc, second half)
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class TraceRequest:
+    """One arrival in a synthetic trace: everything ``replay_trace`` needs to
+    build a ``serve.serving.Request``. ``template_id`` records which of the
+    tenant's shared templates (if any) opens the prompt — analysis metadata,
+    not replayed state."""
+    rid: int
+    arrival_step: int
+    tenant: int
+    priority: int
+    prompt: tuple
+    max_new_tokens: int
+    template_id: int = -1
+
+
+@dataclasses.dataclass(frozen=True)
+class Trace:
+    """A seeded synthetic workload: arrivals sorted by ``arrival_step`` (rid
+    order == arrival order), plus the tenant weights the generator assigned —
+    hand these to ``BatchedServer(tenant_weights=...)`` so the wdrr scheduler
+    competes tenants at the shape the trace was built for."""
+    requests: tuple
+    tenant_weights: dict
+    seed: int
+
+    def __len__(self) -> int:
+        return len(self.requests)
+
+    @property
+    def tenants(self) -> list:
+        return sorted({r.tenant for r in self.requests})
+
+    def shared_fraction(self) -> float:
+        """Fraction of requests opening with a shared template."""
+        if not self.requests:
+            return 0.0
+        return sum(r.template_id >= 0 for r in self.requests) / len(self.requests)
+
+
+def _clipped_lognormal(rng, mean: float, sigma: float, lo: int, hi: int) -> int:
+    """Heavy-tailed length draw: lognormal scaled to ``mean``, clipped into
+    ``[lo, hi]`` — most draws land well under the mean, a few whales push
+    against ``hi`` (the tail the block budget has to survive)."""
+    # median = mean / exp(sigma^2/2) keeps the configured mean after the
+    # lognormal's tail inflation
+    mu = float(np.log(max(mean, 1.0)) - 0.5 * sigma * sigma)
+    return int(np.clip(round(float(rng.lognormal(mu, sigma))), lo, hi))
+
+
+def synth_trace(seed: int, *, steps: int = 48, tenants: int = 3,
+                vocab: int = 64, rate: float = 0.25, burst_mult: float = 4.0,
+                p_burst: float = 0.12, burst_len: int = 4,
+                templates_per_tenant: int = 2, template_len: int = 12,
+                p_shared: float = 0.7, mean_suffix: int = 4,
+                mean_new: float = 6.0, sigma: float = 0.6,
+                max_prompt: int = 32, max_new: int = 16,
+                weights: dict | None = None) -> Trace:
+    """Generate a seeded synthetic production trace (see module doc).
+
+    Each tenant arrives as an independent Poisson process at ``rate``
+    requests per step, multiplied by ``burst_mult`` inside seeded burst
+    windows (each step opens a ``burst_len``-step window with probability
+    ``p_burst``). A request opens with one of the tenant's
+    ``templates_per_tenant`` shared ``template_len``-token templates with
+    probability ``p_shared``, followed by a heavy-tailed unique suffix;
+    non-template prompts are fully unique. Lengths are clipped lognormals
+    (``sigma`` controls the tail). ``weights`` defaults to ``2**t`` — tenant
+    0 lightest — so weighted-fairness runs have real shares to enforce.
+
+    Same seed, same kwargs -> identical trace, independent of the server it
+    later replays through.
+    """
+    if tenants < 1 or steps < 1:
+        raise ValueError(f"need tenants >= 1 and steps >= 1, got "
+                         f"{tenants}, {steps}")
+    if template_len >= max_prompt:
+        raise ValueError(f"template_len {template_len} must leave room under "
+                         f"max_prompt {max_prompt}")
+    rng = np.random.default_rng(seed)
+    # tenant-private template pools: disjoint across tenants by construction
+    # (independent random draws over vocab make cross-tenant collisions
+    # astronomically unlikely; prefix keys are exact, so a collision would
+    # only merge genuinely identical token blocks anyway)
+    pools = [
+        [tuple(int(t) for t in rng.integers(0, vocab, template_len))
+         for _ in range(templates_per_tenant)]
+        for _ in range(tenants)
+    ]
+    burst_until = [0] * tenants
+    reqs: list[TraceRequest] = []
+    rid = 0
+    for step in range(steps):
+        for t in range(tenants):
+            if step >= burst_until[t] and rng.random() < p_burst:
+                burst_until[t] = step + burst_len
+            lam = rate * (burst_mult if step < burst_until[t] else 1.0)
+            for _ in range(int(rng.poisson(lam))):
+                tid = -1
+                head: tuple = ()
+                if rng.random() < p_shared:
+                    tid = int(rng.integers(0, templates_per_tenant))
+                    head = pools[t][tid]
+                suffix_room = max_prompt - len(head)
+                n_suffix = _clipped_lognormal(rng, mean_suffix, sigma,
+                                              1, suffix_room)
+                suffix = tuple(int(x) for x in rng.integers(0, vocab, n_suffix))
+                n_new = _clipped_lognormal(rng, mean_new, sigma, 1, max_new)
+                reqs.append(TraceRequest(
+                    rid=rid, arrival_step=step, tenant=t,
+                    priority=0, prompt=head + suffix,
+                    max_new_tokens=n_new, template_id=tid,
+                ))
+                rid += 1
+    if weights is None:
+        weights = {t: float(2 ** t) for t in range(tenants)}
+    return Trace(requests=tuple(reqs), tenant_weights=dict(weights),
+                 seed=int(seed))
+
+
+def replay_trace(server, trace: Trace, max_steps: int = 2000,
+                 priority: int | None = None) -> list:
+    """Replay ``trace`` through ``server`` against its fused-step clock:
+    each ``TraceRequest`` is submitted at the step it arrives (arrivals for
+    step ``k`` land just before the server takes step ``k``), then the
+    server drains. Returns the terminal requests, rid order.
+
+    The request stream is identical for every server configuration replaying
+    the same trace — offered load is a property of the trace, admission and
+    scheduling decide what happens to it. ``max_steps`` bounds the drain so
+    a wedged configuration fails a test instead of hanging it; raises if the
+    trace did not drain."""
+    from repro.serve.serving import Request
+
+    pending = sorted(trace.requests, key=lambda r: (r.arrival_step, r.rid))
+    i = 0
+    while i < len(pending) or server.queue or \
+            any(r is not None for r in server.active):
+        if server.step_no >= max_steps:
+            raise RuntimeError(
+                f"trace replay did not drain in {max_steps} steps "
+                f"({len(pending) - i} arrivals unsubmitted, "
+                f"{len(server.queue)} queued)"
+            )
+        while i < len(pending) and pending[i].arrival_step <= server.step_no:
+            tr = pending[i]
+            server.submit(Request(
+                rid=tr.rid, prompt=list(tr.prompt),
+                max_new_tokens=tr.max_new_tokens, tenant=tr.tenant,
+                priority=tr.priority if priority is None else priority,
+            ))
+            i += 1
+        server.step()
+    return sorted(server.finished, key=lambda r: r.rid)

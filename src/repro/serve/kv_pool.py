@@ -13,13 +13,27 @@ cache is a pool of fixed-size token blocks:
     and reservation-based admission: a request is admitted only when the pool
     can cover its worst-case block demand, so a running request can never hit
     pool exhaustion mid-flight — OOM surfaces as *deferred admission*, never
-    as a crash. Invariants (``free + in_use == total``, no double allocation,
-    table/length consistency) are pinned by ``tests/test_kv_pool.py``.
+    as a crash. Blocks are *refcounted*: several slots may map the same
+    physical block read-only (``map_prefix``), ``release`` decrements and a
+    block returns to the free list only when its count reaches zero, and a
+    writer splits a shared block first (``cow`` — copy-on-write). Invariants
+    (``free + in_use + quarantined == total`` over *distinct* blocks,
+    refcount == number of table entries mapping a block, zero-refcount
+    blocks live on exactly one free/quarantine list, table/length
+    consistency) are pinned by ``tests/test_kv_pool.py``.
+  * ``PrefixIndex`` — content hash of fully-written *feed* (prompt + carried
+    output) blocks -> resident physical block id. A newly admitted request
+    whose prompt starts with an indexed chain maps those blocks shared with
+    a refcount bump and pays prefill only from its first divergent block.
+    Keys are exact chained token tuples (no hash-collision exposure).
   * ``PagedKV`` — the serving-side composite: one pool for the full-width
     cache regions (GQA K/V, MLA latent) and, for models with sliding-window
     layers, a second pool whose logical rows are *ring* positions
     (``pos % ring_width``), so SWA ring semantics map onto blocks with the
-    same validity story as the dense ring.
+    same validity story as the dense ring. With ``prefix_cache=True`` (full
+    pool only — ring rows wrap, so a shared ring block would be missing the
+    skipped positions' writes) it owns the prefix index and the shared
+    admission / copy-on-write planning.
 
 The device-side layout lives in ``models/attention.py``
 (``gqa_decode_paged`` / ``mla_decode_paged``): cache leaves are block pools
@@ -45,6 +59,66 @@ class PoolExhausted(RuntimeError):
 def blocks_for(n_tokens: int, block_size: int) -> int:
     """Blocks needed to cover ``n_tokens`` token rows (ceil division)."""
     return -(-max(0, n_tokens) // block_size)
+
+
+def prefix_keys(tokens, block_size: int) -> list[tuple]:
+    """Chained content keys for every *full* block of ``tokens``.
+
+    ``keys[j]`` identifies block ``j``'s contents *and* everything before it:
+    ``keys[j] = (keys[j-1], tuple(tokens[j*bs:(j+1)*bs]))``. Chaining means a
+    block id found under ``keys[j]`` is reusable only when the whole prefix
+    matches — exactly the condition under which its KV rows are bit-identical
+    to what the new request would write (KV at a position depends only on the
+    token, the position and the params; see ``tests/test_serve_prefix.py``).
+    Keys are exact nested tuples, not hashes, so collisions are impossible.
+    """
+    out: list[tuple] = []
+    key: tuple = ()
+    for j in range(len(tokens) // block_size):
+        key = (key, tuple(int(t) for t in tokens[j * block_size:(j + 1) * block_size]))
+        out.append(key)
+    return out
+
+
+class PrefixIndex:
+    """Content key -> resident physical block id, maintained by the pool's
+    refcount lifecycle: blocks register once fully written, evict the moment
+    their refcount hits zero (the block id goes back to the free list and its
+    contents will be overwritten by the next mapper). First writer wins —
+    a duplicate key (another slot recomputing the same prefix privately) is
+    ignored, as is a second key for an already-indexed block."""
+
+    def __init__(self) -> None:
+        self._by_key: dict[tuple, int] = {}
+        self._by_block: dict[int, tuple] = {}
+
+    def __len__(self) -> int:
+        return len(self._by_key)
+
+    def lookup(self, keys: list[tuple]) -> list[int]:
+        """Longest chain of resident block ids matching ``keys`` head-first."""
+        hits: list[int] = []
+        for key in keys:
+            bid = self._by_key.get(key)
+            if bid is None:
+                break
+            hits.append(bid)
+        return hits
+
+    def register(self, key: tuple, bid: int) -> bool:
+        if key in self._by_key or bid in self._by_block:
+            return False
+        self._by_key[key] = bid
+        self._by_block[bid] = key
+        return True
+
+    def evict_block(self, bid: int) -> None:
+        key = self._by_block.pop(bid, None)
+        if key is not None:
+            del self._by_key[key]
+
+    def blocks(self) -> set[int]:
+        return set(self._by_block)
 
 
 class KVBlockPool:
@@ -78,6 +152,12 @@ class KVBlockPool:
         # fault-injection quarantine (serve/faults.py): blocks pulled out of
         # the free list by `shrink`, invisible to allocation until `grow`
         self._quarantined: list[int] = []
+        # how many table entries map each physical block: 1 for a private
+        # block, >1 when map_prefix shares it, 0 on the free/quarantine lists
+        self.refcount = np.zeros(num_blocks, np.int32)
+        # called with the block id whenever a refcount hits zero (PagedKV
+        # wires this to PrefixIndex.evict_block: freed contents are dead)
+        self.on_zero = None
 
     # -- accounting ----------------------------------------------------------
     @property
@@ -123,12 +203,23 @@ class KVBlockPool:
         return back
 
     # -- admission -----------------------------------------------------------
+    @property
+    def headroom(self) -> int:
+        """Blocks admission may still promise: free minus outstanding
+        reservations, floored at zero. A fault-plan ``shrink`` can pull
+        ``free`` below ``reserved`` while admitted slots still hold their
+        promises — that deficit must read as *no capacity* (admission stays
+        closed until the server preempts or the plan heals), never as a
+        negative number fed into a comparison."""
+        return max(0, self.free_blocks - self.reserved_blocks)
+
     def can_admit(self, n_blocks: int) -> bool:
         """True iff ``n_blocks`` can be guaranteed on top of every admitted
-        slot's outstanding reservation (so admission never overcommits)."""
+        slot's outstanding reservation (so admission never overcommits).
+        Closed under quarantine pressure: see ``headroom``."""
         if n_blocks > self.blocks_per_slot:
             return False
-        return n_blocks <= self.free_blocks - self.reserved_blocks
+        return n_blocks <= self.headroom
 
     def admit(self, slot: int, n_blocks: int) -> None:
         """Reserve ``n_blocks`` of worst-case demand for ``slot``. Blocks are
@@ -162,23 +253,80 @@ class KVBlockPool:
                 )
             bid = self._free.pop()
             self.table[slot, self.n_mapped[slot]] = bid
+            self.refcount[bid] = 1
             self.n_mapped[slot] += 1
             if self._reserved[slot] > 0:
                 self._reserved[slot] -= 1
             changed = True
         return changed
 
+    # -- prefix sharing ------------------------------------------------------
+    def map_prefix(self, slot: int, block_ids: list[int]) -> None:
+        """Map already-resident blocks at the *front* of ``slot``'s table,
+        read-only shared: each gets a refcount bump, none leaves the owning
+        tables, and nothing is taken from the free list or the slot's
+        reservation. Must run on an empty slot, before any ``ensure`` — the
+        shared prefix is logical blocks ``0..len(block_ids)-1`` and private
+        alloc-on-write continues from there."""
+        if self.n_mapped[slot]:
+            raise ValueError(f"slot {slot} already holds blocks; map_prefix "
+                             "must precede alloc-on-write")
+        if len(block_ids) > self.blocks_per_slot:
+            raise ValueError(f"{len(block_ids)} shared blocks > "
+                             f"blocks_per_slot {self.blocks_per_slot}")
+        for j, bid in enumerate(block_ids):
+            if self.refcount[bid] < 1:
+                raise ValueError(f"block {bid} is not resident (refcount 0); "
+                                 "stale prefix-index entry?")
+            self.table[slot, j] = bid
+            self.refcount[bid] += 1
+        self.n_mapped[slot] = len(block_ids)
+
+    def cow(self, slot: int, logical: int) -> tuple[int, int]:
+        """Copy-on-write split: give ``slot`` a private copy of its shared
+        logical block ``logical`` before a scatter touches it. Pops a free
+        block (consuming the slot's reservation — shared admission reserves
+        one extra block when the first write lands inside the shared prefix),
+        swaps the table entry, and drops the old block's refcount — the other
+        holders keep reading it unchanged. Returns ``(old_bid, new_bid)`` so
+        the server can copy the device rows before the next fused step."""
+        old = int(self.table[slot, logical])
+        if old < 0 or self.refcount[old] < 2:
+            raise ValueError(f"slot {slot} logical block {logical} is not "
+                             "shared; cow() is only for refcount > 1")
+        if not self._free:
+            raise PoolExhausted(
+                f"pool exhausted COW-splitting block {logical} of slot {slot}"
+            )
+        new = self._free.pop()
+        self.table[slot, logical] = new
+        self.refcount[new] = 1
+        self.refcount[old] -= 1
+        if self._reserved[slot] > 0:
+            self._reserved[slot] -= 1
+        return old, new
+
     # -- free-on-finish ------------------------------------------------------
     def release(self, slot: int) -> int:
-        """Return ``slot``'s blocks to the free list and drop its
-        reservation; returns how many blocks were freed."""
+        """Drop ``slot``'s claim on its blocks and its reservation. Each
+        block's refcount is decremented; a block returns to the free list
+        only at zero (another slot sharing it keeps it resident — the old
+        unconditional append was a double-free under sharing). Returns how
+        many blocks actually went back to the free list."""
         n = int(self.n_mapped[slot])
+        freed = 0
         for i in range(n):
-            self._free.append(int(self.table[slot, i]))
+            bid = int(self.table[slot, i])
+            self.refcount[bid] -= 1
+            if self.refcount[bid] == 0:
+                self._free.append(bid)
+                freed += 1
+                if self.on_zero is not None:
+                    self.on_zero(bid)
         self.table[slot] = -1
         self.n_mapped[slot] = 0
         self._reserved[slot] = 0
-        return n
+        return freed
 
     # -- views / invariants --------------------------------------------------
     def table_array(self) -> np.ndarray:
@@ -191,23 +339,37 @@ class KVBlockPool:
 
     def check(self) -> None:
         """Assert the allocator invariants (test hook / ``debug_checks``):
-        free + in_use + quarantined == total, no block id appears twice
-        (across tables, the free list, and the quarantine), mapped entries
-        form a contiguous prefix of each table row, and reservations never
-        exceed free + quarantined capacity. The reservation bound counts
-        quarantined blocks on purpose: a fault-plan ``shrink`` may push
-        ``reserved`` above ``free`` transiently (that is the injected
-        pressure the server must preempt its way out of), but admission
-        itself never promises more than the pool ever held."""
+        distinct-mapped + free + quarantined == total, every block's refcount
+        equals the number of table entries mapping it, zero-refcount blocks
+        sit on exactly one of the free/quarantine lists (and refcounted
+        blocks on neither — a freed shared block would be a double-free),
+        mapped entries form a contiguous prefix of each table row, and
+        reservations never exceed free + quarantined capacity. The
+        reservation bound counts quarantined blocks on purpose: a fault-plan
+        ``shrink`` may push ``reserved`` above ``free`` transiently (that is
+        the injected pressure the server must preempt its way out of), but
+        admission itself never promises more than the pool ever held."""
         mapped = [int(b) for row in self.table for b in row if b >= 0]
+        counts = np.bincount(mapped, minlength=self.num_blocks) if mapped \
+            else np.zeros(self.num_blocks, np.int64)
+        assert (counts == self.refcount).all(), (
+            f"refcount drift: table maps {counts.tolist()} but refcount is "
+            f"{self.refcount.tolist()}"
+        )
+        distinct = set(mapped)
         q = len(self._quarantined)
-        assert len(mapped) + len(self._free) + q == self.num_blocks, (
-            f"conservation broken: {len(mapped)} mapped + "
+        assert len(distinct) + len(self._free) + q == self.num_blocks, (
+            f"conservation broken: {len(distinct)} distinct mapped + "
             f"{len(self._free)} free + {q} quarantined != {self.num_blocks}"
         )
-        seen = mapped + [int(b) for b in self._free] + \
+        idle = [int(b) for b in self._free] + \
             [int(b) for b in self._quarantined]
-        assert len(set(seen)) == len(seen), "block id allocated twice"
+        assert len(set(idle)) == len(idle), (
+            "block id on a free/quarantine list twice (double-free)"
+        )
+        assert not distinct.intersection(idle), (
+            "refcounted block on a free/quarantine list (use-after-free)"
+        )
         for s in range(self.slots):
             n = int(self.n_mapped[s])
             assert (self.table[s, :n] >= 0).all() and (
@@ -230,6 +392,15 @@ class PagedKV:
     rows are token positions ``0..max_seq-1``. ``ring`` (models with
     sliding-window layers only) backs the SWA ring regions: logical rows are
     ring positions ``pos % ring_width`` — a bounded region, sized per slot.
+
+    With ``prefix_cache=True`` the full pool additionally feeds a
+    ``PrefixIndex``: fully-written feed blocks register their content keys,
+    ``admit_shared`` maps a matching resident chain with a refcount bump and
+    returns the first position the new request actually has to compute, and
+    ``cow_step`` splits shared blocks ahead of any write. Incompatible with a
+    ring pool (ring rows wrap: a shared ring block would be missing the
+    skipped positions' window writes), so the server only enables it for
+    attention-only families.
     """
 
     block_size: int
@@ -237,10 +408,24 @@ class PagedKV:
     pool: KVBlockPool
     ring_width: int = 0
     ring: KVBlockPool | None = None
+    prefix_cache: bool = False
+    index: PrefixIndex | None = dataclasses.field(default=None, init=False)
+
+    def __post_init__(self) -> None:
+        if self.prefix_cache:
+            if self.ring is not None:
+                raise ValueError(
+                    "prefix_cache is unsound with a SWA ring pool: ring rows "
+                    "wrap, so a sharer skipping prefill would be missing the "
+                    "skipped positions' ring writes"
+                )
+            self.index = PrefixIndex()
+            self.pool.on_zero = self.index.evict_block
 
     @classmethod
     def for_model(cls, cfg: ModelConfig, slots: int, max_seq: int,
-                  block_size: int, kv_blocks: int | None = None) -> "PagedKV":
+                  block_size: int, kv_blocks: int | None = None,
+                  prefix_cache: bool = False) -> "PagedKV":
         """Build pools sized for ``cfg``. ``kv_blocks`` caps the full-region
         pool (default: ``slots * ceil(max_seq/block_size)``, i.e. dense-
         equivalent capacity — pass less to oversubscribe slots against a
@@ -263,7 +448,8 @@ class PagedKV:
             ring = KVBlockPool(slots * ring_per_slot, block_size, slots,
                                ring_per_slot)
         return cls(block_size=block_size, max_seq=max_seq, pool=pool,
-                   ring_width=ring_width, ring=ring)
+                   ring_width=ring_width, ring=ring,
+                   prefix_cache=prefix_cache)
 
     # -- request lifetime ----------------------------------------------------
     def required(self, prompt_len: int, max_new: int, chunk: int = 1,
@@ -278,18 +464,103 @@ class PagedKV:
         tokens a request needs — prefill rows are capped at the prompt end
         and decode emits one token per step — so no chunk rounding applies
         and the reservation is exactly the written positions."""
-        positions = prompt_len + max_new - 1
-        if not token_step:
-            positions = -(-positions // chunk) * chunk
-        # never reserve less than one step's writes: the engine always runs
-        # at least one chunk for an admitted slot, so a degenerate request
-        # must not slip in with a zero reservation and then steal blocks
-        floor = 1 if token_step else min(chunk, self.max_seq)
-        positions = min(self.max_seq, max(positions, floor))
+        positions = self._end_positions(0, prompt_len, max_new, chunk,
+                                        token_step)
         full = blocks_for(positions, self.block_size)
         ring = blocks_for(min(self.ring_width, positions), self.block_size) \
             if self.ring is not None else 0
         return full, ring
+
+    def _end_positions(self, start: int, prompt_len: int, max_new: int,
+                       chunk: int, token_step: bool) -> int:
+        """Worst-case written horizon of a request stepping from ``start``:
+        chunk rounding counts from ``start`` (the server advances the slot in
+        ``chunk`` increments from wherever prefill begins), and the floor is
+        one step's writes past ``start`` — an admitted slot always runs at
+        least one chunk, so a degenerate request must not slip in with a
+        zero reservation and then steal blocks."""
+        positions = prompt_len + max_new - 1
+        if not token_step:
+            positions = start + -(-(positions - start) // chunk) * chunk
+        floor = start + (1 if token_step else min(chunk, self.max_seq - start))
+        return min(self.max_seq, max(positions, floor))
+
+    def plan_shared(self, keys: list[tuple], prompt_len: int, max_new: int,
+                    chunk: int = 1, token_step: bool = False
+                    ) -> tuple[list[int], int, int]:
+        """Shared-admission plan for a request whose full prompt blocks hash
+        to ``keys``: ``(shared_block_ids, start, reserve)``.
+
+        ``start`` is the first position the request computes itself,
+        ``min(shared_tokens, prompt_len - 1)`` — the *final* prompt position
+        is always recomputed so the first-token emission (and greedy
+        sampling) runs through the normal step path. ``reserve`` is the
+        worst-case demand net of the shared blocks, plus one extra when
+        ``start`` lands *inside* the shared prefix: that first write must
+        COW-split the block it touches (the split consumes the reservation).
+        Sharing never reserves more than the unshared ``required``."""
+        hits = self.index.lookup(keys) if self.index is not None else []
+        k = len(hits)
+        start = min(k * self.block_size, prompt_len - 1)
+        end = self._end_positions(start, prompt_len, max_new, chunk,
+                                  token_step)
+        total = blocks_for(end, self.block_size)
+        reserve = total - k + (1 if start < k * self.block_size else 0)
+        return hits, start, reserve
+
+    def can_admit_shared(self, keys: list[tuple], prompt_len: int,
+                         max_new: int, chunk: int = 1,
+                         token_step: bool = False) -> bool:
+        if self.index is None:
+            return self.can_admit(prompt_len, max_new, chunk, token_step)
+        _, _, reserve = self.plan_shared(keys, prompt_len, max_new, chunk,
+                                         token_step)
+        return self.pool.can_admit(reserve)
+
+    def admit_shared(self, slot: int, keys: list[tuple], prompt_len: int,
+                     max_new: int, chunk: int = 1, token_step: bool = False
+                     ) -> tuple[int, int]:
+        """Admit ``slot`` mapping the longest resident prefix chain shared;
+        returns ``(start, n_shared_blocks)``. Falls back to a plain unshared
+        admission (``start=0``) when the prefix cache is off."""
+        if self.index is None:
+            self.admit(slot, prompt_len, max_new, chunk, token_step)
+            return 0, 0
+        hits, start, reserve = self.plan_shared(keys, prompt_len, max_new,
+                                                chunk, token_step)
+        self.pool.admit(slot, reserve)
+        self.pool.map_prefix(slot, hits)
+        return start, len(hits)
+
+    def cow_step(self, slot: int, pos: int, n_tokens: int,
+                 out: list | None = None) -> list[tuple[int, int]]:
+        """Copy-on-write for one fused step: split every *shared* block
+        covering the rows ``pos .. pos+n_tokens-1`` that ``slot`` is about to
+        write. Appends ``(old_bid, new_bid)`` pairs to ``out`` (so a caller
+        looping ensure-or-preempt keeps the pairs already split when a later
+        split raises ``PoolExhausted``) and returns it; the server must copy
+        those device rows before the step's scatter runs."""
+        pairs = out if out is not None else []
+        if self.index is None:
+            return pairs
+        last = min(pos + n_tokens - 1, self.max_seq - 1)
+        for j in range(pos // self.block_size, last // self.block_size + 1):
+            if j >= int(self.pool.n_mapped[slot]):
+                break
+            bid = int(self.pool.table[slot, j])
+            if int(self.pool.refcount[bid]) > 1:
+                pairs.append(self.pool.cow(slot, j))
+        return pairs
+
+    def register_blocks(self, slot: int, keys: list[tuple], j0: int,
+                        j1: int) -> int:
+        """Register ``slot``'s fully-written feed blocks ``j0..j1-1`` in the
+        prefix index (first writer wins; re-registering a key or an indexed
+        block is a no-op). Returns ``j1`` as the caller's new watermark."""
+        if self.index is not None:
+            for j in range(j0, min(j1, len(keys))):
+                self.index.register(keys[j], int(self.pool.table[slot, j]))
+        return j1
 
     def can_admit(self, prompt_len: int, max_new: int, chunk: int = 1,
                   token_step: bool = False) -> bool:
@@ -332,10 +603,17 @@ class PagedKV:
         return self.pool.grow(n)
 
     def check(self) -> None:
-        """Assert both pools' allocator invariants (``debug_checks`` hook)."""
+        """Assert both pools' allocator invariants (``debug_checks`` hook),
+        plus the prefix-index lifecycle: an indexed block is always resident
+        (refcount >= 1 — eviction-on-zero must never lag a free)."""
         self.pool.check()
         if self.ring is not None:
             self.ring.check()
+        if self.index is not None:
+            for bid in self.index.blocks():
+                assert int(self.pool.refcount[bid]) >= 1, (
+                    f"prefix index holds freed block {bid}"
+                )
 
     def tables(self) -> tuple[np.ndarray, np.ndarray | None]:
         return (self.pool.table_array(),

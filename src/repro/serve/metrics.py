@@ -42,6 +42,25 @@ derives the numbers the benchmarks and tests gate on:
     (steps since *submission*, queue wait included — the number the
     ``serve_preempt`` bench ratio gates on, since it is what preemptive
     scheduling buys the interactive class).
+  * ``prefix_hits`` / ``prefix_tokens`` — prefix-cache wins: requests
+    admitted with at least one shared KV block, and the total prompt
+    positions those admissions skipped (prefill the pool served from
+    resident blocks instead of recomputing). ``prefix_tokens`` is why
+    ``prompt_tokens`` drops under shared-prefix traffic — the
+    ``serve_prefix`` bench gates on the prefill-per-request ratio.
+  * ``kv_bytes_written`` — bytes of KV cache the engine scattered: written
+    positions (prefill + decode, all cache regions) times the per-row byte
+    cost, plus copy-on-write block splits (a split copies a whole block).
+    ``kv_bytes_per_token`` normalises by generated tokens — the
+    memory-bandwidth-per-user number; prefix sharing lowers it by not
+    re-writing shared prompt KV. ``cow_splits`` counts the splits.
+  * ``per_tenant`` — per-tenant rollup mirroring ``per_priority``
+    (``admitted`` / ``finished`` / ``preemptions`` / ``deadline_misses`` /
+    ``prefix_hits`` counters, ``prompt_tokens`` / ``tokens_generated`` /
+    ``prefix_tokens`` token counts, raw ``ttft_e2e_steps``) — what the
+    weighted-fairness tests assert shares on. JSON object keys are strings
+    (tenant ids may be ints or strings; ``from_dict`` keeps them as the
+    JSON gave them).
 
 Zero-request edge cases are defined, not exceptions: with nothing finished,
 ``tok_per_s``/``occupancy_pct`` report 0.0 and the TTFT means report None.
@@ -75,17 +94,31 @@ class ServeMetrics:
     recompute_tokens: int = 0
     deadline_misses: int = 0
     rejected: int = 0
+    prefix_hits: int = 0
+    prefix_tokens: int = 0
+    kv_bytes_written: int = 0
+    cow_splits: int = 0
     ttft_s: list[float] = dataclasses.field(default_factory=list)
     ttft_steps: list[int] = dataclasses.field(default_factory=list)
     # priority class -> counters dict (see `prio`); int-keyed here, str-keyed
     # in the JSON rollup
     per_priority: dict = dataclasses.field(default_factory=dict)
+    # tenant id -> counters dict (see `tenant`); keyed by the raw tenant id
+    per_tenant: dict = dataclasses.field(default_factory=dict)
 
     def prio(self, priority: int) -> dict:
         """The rollup dict for one priority class, created on first touch."""
         return self.per_priority.setdefault(int(priority), {
             "admitted": 0, "finished": 0, "preemptions": 0,
             "deadline_misses": 0, "ttft_steps": [], "ttft_e2e_steps": [],
+        })
+
+    def tenant(self, tenant) -> dict:
+        """The rollup dict for one tenant, created on first touch."""
+        return self.per_tenant.setdefault(tenant, {
+            "admitted": 0, "finished": 0, "preemptions": 0,
+            "deadline_misses": 0, "prefix_hits": 0, "prompt_tokens": 0,
+            "tokens_generated": 0, "prefix_tokens": 0, "ttft_e2e_steps": [],
         })
 
     def mean_prio_ttft_e2e_steps(self, priority: int) -> float | None:
@@ -136,6 +169,15 @@ class ServeMetrics:
         return 100.0 * self.kv_blocks_peak / self.kv_blocks_total \
             if self.kv_blocks_total else 0.0
 
+    @property
+    def kv_bytes_per_token(self) -> float:
+        """KV bytes written per *generated* token — memory traffic per unit
+        of useful output. Prefill writes are amortised over the request's
+        decode, so prefix sharing (skipping shared prompt writes) pushes
+        this down even though each written row costs the same."""
+        return self.kv_bytes_written / self.tokens_generated \
+            if self.tokens_generated else 0.0
+
     def as_dict(self) -> dict:
         return {
             "slots": self.slots,
@@ -166,11 +208,18 @@ class ServeMetrics:
             "recompute_tokens": self.recompute_tokens,
             "deadline_misses": self.deadline_misses,
             "rejected": self.rejected,
+            "prefix_hits": self.prefix_hits,
+            "prefix_tokens": self.prefix_tokens,
+            "kv_bytes_written": self.kv_bytes_written,
+            "kv_bytes_per_token": self.kv_bytes_per_token,
+            "cow_splits": self.cow_splits,
             "ttft_s": list(self.ttft_s),
             "ttft_steps": list(self.ttft_steps),
             # JSON object keys are strings; from_dict restores the int keys
             "per_priority": {str(k): dict(v)
                              for k, v in self.per_priority.items()},
+            "per_tenant": {str(k): dict(v)
+                           for k, v in self.per_tenant.items()},
         }
 
     @classmethod
@@ -183,4 +232,8 @@ class ServeMetrics:
         kw["ttft_steps"] = list(d.get("ttft_steps", ()))
         kw["per_priority"] = {int(k): dict(v)
                               for k, v in d.get("per_priority", {}).items()}
+        # tenant ids may be ints or strings; JSON stringified them and there
+        # is no way back, so the restored rollup keeps the string keys
+        kw["per_tenant"] = {k: dict(v)
+                            for k, v in d.get("per_tenant", {}).items()}
         return cls(**kw)

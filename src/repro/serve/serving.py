@@ -85,10 +85,33 @@ deployment needs, vLLM-style but reduced to its core:
     suite (``tests/test_serve_chaos.py``); ``debug_checks=`` (default: on
     under pytest, off in benches) asserts the block-pool invariants after
     every step so corruption fails at the step that caused it;
+  * **prefix sharing** (``prefix_cache``, paged + attention-only families):
+    fully-written feed blocks register content keys in the pool's
+    ``PrefixIndex``; a new request whose prompt starts with a resident
+    chain maps those blocks *shared* (refcount bump, no copy, no free-list
+    pop) and starts prefill at its first divergent position — the final
+    prompt position is always recomputed, so emission and sampling run the
+    unchanged step path. Writes into a still-shared block COW-split it
+    first (``cow_step`` swaps in a private copy; the device rows are
+    duplicated by a tiny jitted scatter before the fused step), so sharers
+    never observe another request's scatters — token-exact vs the unshared
+    pool (pinned in ``tests/test_serve_prefix.py`` across GQA/MLA x
+    gather/pallas x chunked/tokens, including preempt-then-resume).
+    Ineligible shapes (SWA ring pools — ring rows wrap, so a sharer would
+    be missing skipped window writes — and families with per-slot
+    recurrent/MoE state, whose skipped positions carry state KV blocks
+    don't) fall back with a recorded fallback;
+  * **multi-tenant fairness** (``scheduler="wdrr"`` + ``tenant_weights``):
+    weighted deficit round robin over ``Request.tenant`` queues inside
+    each priority class (serve/scheduler.py) — tenants get admission
+    shares proportional to weight under saturation, with per-tenant
+    rollups in ``metrics.per_tenant``;
   * a ``serve.metrics.ServeMetrics`` rollup (occupancy %, admitted/finished/
     deferrals, tok/s, TTFT, prefill vs decode tokens, blocks-in-use %,
-    preemptions/recompute/deadline-miss counters and per-priority rollups),
-    so benchmarks and tests assert saturation and robustness.
+    prefix hits/skipped prefill tokens, KV bytes written (COW splits
+    included), preemptions/recompute/deadline-miss counters and
+    per-priority / per-tenant rollups), so benchmarks and tests assert
+    saturation and robustness.
 """
 from __future__ import annotations
 
@@ -107,7 +130,7 @@ from repro.models import model_zoo
 from repro.models.config import ModelConfig
 from repro.models.transformer import segments_for
 from repro.serve import scheduler as sched
-from repro.serve.kv_pool import PagedKV, PoolExhausted
+from repro.serve.kv_pool import PagedKV, PoolExhausted, prefix_keys
 from repro.serve.metrics import ServeMetrics
 
 # cache leaves that stay per-slot (B at axis 1 of the layer-stacked leaf)
@@ -145,11 +168,49 @@ class Request:
     seq: int = -1  # submission order (scheduler-assigned; kept across resumes)
     admit_seq: int = -1  # admission order — drives victim selection
     submit_step: int | None = None  # server step counter at submission
+    # tenant id for weighted fairness (scheduler="wdrr") and the per-tenant
+    # metrics rollup; the default folds everything into one tenant
+    tenant: int | str = 0
+    # prompt positions the prefix cache served from resident shared blocks
+    # at the LAST admission (prefill starts at this offset)
+    prefix_shared_tokens: int = 0
 
 
 def _leaf_key(path) -> str | None:
     k = path[-1] if path else None
     return getattr(k, "key", None)
+
+
+def _cow_copy_blocks(cache, src, dst):
+    """Duplicate block rows ``src -> dst`` across the block-pool cache
+    leaves (copy-on-write split: the writer got a private physical block and
+    the shared original must be byte-identical in it before the next step's
+    scatter). Leaves are layer-stacked ``(L, num_blocks, block_size, ...)``
+    — blocks live on axis 1. Padding entries carry ``dst == num_blocks``
+    (out of range: jax drops OOB scatter updates, same gating the paged
+    write path uses), so one compiled program serves any pad bucket."""
+
+    def one(path, c):
+        if _leaf_key(path) in _PER_SLOT_KEYS:
+            return c
+        return c.at[:, dst].set(c[:, src])
+
+    return jax.tree_util.tree_map_with_path(one, cache)
+
+
+def _cache_row_bytes(cache) -> int:
+    """Bytes of cache one written position costs, summed over every
+    non-per-slot leaf and all layers: leaves are layer-stacked ``(L, B_or_NB,
+    S_or_bs, tail...)``, so one row is ``L * prod(tail)`` elements per leaf.
+    Recurrent per-slot leaves are O(1) state updates, not per-token KV —
+    excluded (a pure-recurrent family reports 0)."""
+    total = 0
+    for path, c in jax.tree_util.tree_leaves_with_path(cache):
+        if _leaf_key(path) in _PER_SLOT_KEYS or c.ndim < 3:
+            continue
+        total += int(c.shape[0]) * int(np.prod(c.shape[3:], dtype=np.int64)) \
+            * c.dtype.itemsize
+    return total
 
 
 def _reset_slot_rows(cache, idx, paged: bool):
@@ -220,7 +281,8 @@ class BatchedServer:
                  step_mode: str = "chunked", attn_impl: str = "gather",
                  scheduler: str = "priority", preemption: bool | None = None,
                  debug_checks: bool | None = None, fault_plan=None,
-                 clock=None):
+                 clock=None, prefix_cache: bool | None = None,
+                 tenant_weights: dict | None = None):
         if cfg.family == "encdec":
             raise ValueError(
                 "BatchedServer serves decoder-only families; enc-dec decode "
@@ -255,9 +317,29 @@ class BatchedServer:
         self.prefill_chunk = int(prefill_chunk)
         # pure-recurrent models have no per-token cache to page
         self.kv_mode = kv if not (kv == "paged" and cfg.family == "ssm") else "dense"
+        # prefix sharing needs (a) a paged pool without a SWA ring (ring rows
+        # wrap: a sharer skipping prefill would be missing the skipped
+        # positions' window writes) and (b) attention-only segments (skipped
+        # positions carry recurrent/MoE-capacity state that blocks don't
+        # hold). None = on wherever eligible; an explicit True on an
+        # ineligible shape records a fallback instead of serving wrong KV.
+        kinds = {s.kind for s in segments_for(cfg)}
+        prefix_ok = (self.kv_mode == "paged" and kinds == {"attn_mlp"})
+        if prefix_cache is None:
+            prefix_cache = prefix_ok
+        elif prefix_cache and not prefix_ok:
+            meshes.record_fallback(
+                "serve_prefix", "prefix_cache", 0,
+                f"prefix sharing needs paged KV over attention-only segments "
+                f"(kv={self.kv_mode!r}, kinds={sorted(kinds)}); serving "
+                "unshared",
+            )
+            prefix_cache = False
+        self.prefix_cache = bool(prefix_cache)
         if self.kv_mode == "paged":
             self._paged = PagedKV.for_model(cfg, batch_slots, max_seq,
-                                            block_size, kv_blocks)
+                                            block_size, kv_blocks,
+                                            prefix_cache=self.prefix_cache)
             ring = self._paged.ring
             self.cache = model_zoo.make_paged_cache(
                 cfg, batch_slots, self._paged.pool.num_blocks, block_size,
@@ -293,13 +375,18 @@ class BatchedServer:
         # old list); `finished` holds every TERMINAL request — FINISHED and
         # CANCELLED_DEADLINE both land here so run() drains
         self.scheduler = scheduler
-        self.preemption = (scheduler == "priority") if preemption is None \
-            else bool(preemption)
-        self.queue = sched.AdmissionScheduler(scheduler)
+        self.preemption = (scheduler in ("priority", "wdrr")) \
+            if preemption is None else bool(preemption)
+        self.queue = sched.AdmissionScheduler(scheduler,
+                                              tenant_weights=tenant_weights)
         self.finished: list[Request] = []
-        # head-of-line request currently blocked by the pool: one deferral
-        # *episode* per request, however many steps it stays blocked
-        self._deferring_rid: int | None = None
+        # rids of requests in an OPEN deferral episode: blocked at the head
+        # at least once since they last entered a slot. One deferral
+        # *episode* per request per blocked period — the episode ends on
+        # admission or cancellation, NOT when another head takes over the
+        # blockage (two heads alternating under preemption is two episodes,
+        # not one per alternation; pinned in tests/test_serve_scheduler.py)
+        self._deferring: set[int] = set()
         # fault injection + timekeeping: the clock is THE time source for
         # submit/TTFT/deadline/wall accounting, so a fault plan's
         # VirtualClock makes deadline pressure deterministic
@@ -341,6 +428,10 @@ class BatchedServer:
         self._no_table = jnp.zeros((0,), jnp.int32)
         self._table_dev = self._ring_dev = self._no_table
         self._tables_fresh = False
+        # prefix-sharing bookkeeping: each occupied slot's feed-block content
+        # keys and the watermark of blocks already registered in the index
+        self._slot_keys: list[list | None] = [None] * batch_slots
+        self._reg_upto = np.zeros(batch_slots, np.int32)
 
         self.mesh = mesh
         self.last_sharded_path: tuple | None = None
@@ -376,6 +467,12 @@ class BatchedServer:
             functools.partial(_reset_slot_rows, paged=self._paged is not None),
             donate_argnums=(0,),
         )
+        self._cow_fn = (jax.jit(_cow_copy_blocks, donate_argnums=(0,))
+                        if self.prefix_cache else None)
+        # bytes one written cache row costs across every non-per-slot leaf
+        # (all layers; paged: full + ring regions both scatter per position)
+        # — the unit behind metrics.kv_bytes_written
+        self._kv_row_bytes = _cache_row_bytes(self.cache)
 
     # -- sharding ------------------------------------------------------------
     def sharded_path(self, mesh) -> tuple:
@@ -496,14 +593,28 @@ class BatchedServer:
     def _head_admissible(self, head: Request) -> bool:
         """Can the paged pool cover ``head``'s worst-case reservation right
         now? Resumes reserve for ``prompt + carried output`` — the same
-        positions the original reservation covered."""
+        positions the original reservation covered. With the prefix cache
+        the reservation is net of resident shared blocks (never more than
+        the unshared demand), re-planned on every check: evictions between
+        checks can free shared blocks out of the index."""
         if self._paged is None:
             return True
-        return self._paged.can_admit(
-            len(head.prompt) + len(head.out),
-            head.max_new_tokens - len(head.out), self.prefill_chunk,
-            token_step=self.step_mode == "tokens",
-        )
+        feed_len = len(head.prompt) + len(head.out)
+        max_new = head.max_new_tokens - len(head.out)
+        token_step = self.step_mode == "tokens"
+        if self.prefix_cache:
+            return self._paged.can_admit_shared(
+                self._feed_keys(head), feed_len, max_new,
+                self.prefill_chunk, token_step=token_step,
+            )
+        return self._paged.can_admit(feed_len, max_new, self.prefill_chunk,
+                                     token_step=token_step)
+
+    def _feed_keys(self, req: Request) -> list[tuple]:
+        """Content keys of ``req``'s full feed blocks (prompt + carried
+        output — a resume shares whatever prefix of its recompute is still
+        resident, its own pre-eviction blocks included)."""
+        return prefix_keys(req.prompt + req.out, self._paged.block_size)
 
     def _admit_into(self, slot: int, req: Request, now: float):
         """Bind ``req`` to ``slot``. A resumed (preempted) request feeds
@@ -513,10 +624,29 @@ class BatchedServer:
         right after the carried tokens — token-exact under greedy."""
         feed = req.prompt + req.out
         plen = len(feed)
+        start = 0
         if self._paged is not None:
-            self._paged.admit(slot, plen, req.max_new_tokens - len(req.out),
-                              self.prefill_chunk,
-                              token_step=self.step_mode == "tokens")
+            max_new = req.max_new_tokens - len(req.out)
+            token_step = self.step_mode == "tokens"
+            if self.prefix_cache:
+                keys = self._feed_keys(req)
+                start, n_shared = self._paged.admit_shared(
+                    slot, keys, plen, max_new, self.prefill_chunk,
+                    token_step=token_step,
+                )
+                self._slot_keys[slot] = keys
+                self._reg_upto[slot] = n_shared
+                self._tables_fresh = False  # shared blocks mapped host-side
+                if n_shared:
+                    self.metrics.prefix_hits += 1
+                    self.metrics.prefix_tokens += start
+                    ten = self.metrics.tenant(req.tenant)
+                    ten["prefix_hits"] += 1
+                    ten["prefix_tokens"] += start
+            else:
+                self._paged.admit(slot, plen, max_new, self.prefill_chunk,
+                                  token_step=token_step)
+        req.prefix_shared_tokens = start
         self.active[slot] = req
         req.steps = 0
         req.status = sched.RUNNING
@@ -528,7 +658,11 @@ class BatchedServer:
             req.admit_s = now
             self.metrics.admitted += 1
             self.metrics.prio(req.priority)["admitted"] += 1
-        self._positions[slot] = 0
+            self.metrics.tenant(req.tenant)["admitted"] += 1
+        # prefill starts past the shared prefix; the final prompt position is
+        # never shared (plan_shared caps start at plen-1), so the emission
+        # boundary (positions + 1 >= prompt_len) is reached by computation
+        self._positions[slot] = start
         self._prompt_buf[slot] = 0
         self._prompt_buf[slot, :plen] = feed
         self._prompt_len[slot] = plen
@@ -544,12 +678,14 @@ class BatchedServer:
         if self._paged is not None:
             self._paged.release(slot)
             self._tables_fresh = False
+        self._slot_keys[slot] = None
         self.active[slot] = None
         self._active_mask[slot] = False
         req.status = sched.PREEMPTED
         req.preemptions += 1
         self.metrics.preemptions += 1
         self.metrics.prio(req.priority)["preemptions"] += 1
+        self.metrics.tenant(req.tenant)["preemptions"] += 1
         self.metrics.recompute_tokens += int(self._positions[slot])
         self.queue.push(req)  # keeps its original seq: front of its class
 
@@ -560,14 +696,15 @@ class BatchedServer:
             if self._paged is not None:
                 self._paged.release(slot)
                 self._tables_fresh = False
+            self._slot_keys[slot] = None
             self.active[slot] = None
             self._active_mask[slot] = False
         req.status = sched.CANCELLED_DEADLINE
         self.finished.append(req)
         self.metrics.deadline_misses += 1
         self.metrics.prio(req.priority)["deadline_misses"] += 1
-        if self._deferring_rid == req.rid:
-            self._deferring_rid = None
+        self.metrics.tenant(req.tenant)["deadline_misses"] += 1
+        self._deferring.discard(req.rid)  # episode over: cancelled
 
     def _sweep_deadlines(self, now: float):
         """Cancel every queued or running request past a deadline (one
@@ -586,10 +723,10 @@ class BatchedServer:
         rollup["ttft_steps"].append(req.steps)
         # e2e steps: fused steps since SUBMISSION, queue wait included — the
         # number preemptive scheduling improves for the interactive class
-        rollup["ttft_e2e_steps"].append(
-            self._step_no - req.submit_step + 1
-            if req.submit_step is not None else req.steps
-        )
+        e2e = (self._step_no - req.submit_step + 1
+               if req.submit_step is not None else req.steps)
+        rollup["ttft_e2e_steps"].append(e2e)
+        self.metrics.tenant(req.tenant)["ttft_e2e_steps"].append(e2e)
 
     def _finish(self, req: Request, slot: int):
         req.done = True
@@ -599,6 +736,8 @@ class BatchedServer:
         self._active_mask[slot] = False
         self.metrics.finished += 1
         self.metrics.prio(req.priority)["finished"] += 1
+        self.metrics.tenant(req.tenant)["finished"] += 1
+        self._slot_keys[slot] = None
         if self._paged is not None:
             self._paged.release(slot)  # free-on-finish
             self._tables_fresh = False
@@ -631,17 +770,20 @@ class BatchedServer:
                     # pool-blocked with nobody to evict: defer (head-of-line —
                     # skipping ahead would starve long prompts) until
                     # finish-time releases free capacity. Never admit into a
-                    # future OOM. One deferral *episode* per request (a
-                    # request blocked for ten steps is one deferred request,
-                    # not ten); deferral_steps counts every blocked step.
-                    if self._deferring_rid != head.rid:
-                        self._deferring_rid = head.rid
+                    # future OOM. One deferral *episode* per request per
+                    # blocked period (a request blocked for ten steps is one
+                    # deferred request, not ten) — tracked as a SET of open
+                    # episodes, ended only by admission or cancellation:
+                    # when two heads alternate under preemption (A blocked,
+                    # B blocked, A blocked again), A's episode is still the
+                    # same blockage and must not re-count.
+                    if head.rid not in self._deferring:
+                        self._deferring.add(head.rid)
                         self.metrics.deferrals += 1
                     self.metrics.deferral_steps += 1
                 break
             req = self.queue.pop()
-            if req.rid == self._deferring_rid:
-                self._deferring_rid = None  # episode over: admitted
+            self._deferring.discard(req.rid)  # episode over: admitted
             self._admit_into(free, req, now)
             newly.append(free)
         if newly:
@@ -800,6 +942,12 @@ class BatchedServer:
         return step
 
     # -- stepping ---------------------------------------------------------------
+    @property
+    def step_no(self) -> int:
+        """Monotonic fused-step count so far — the clock trace replay
+        (``serve.faults.replay_trace``) schedules arrivals against."""
+        return self._step_no
+
     def step(self):
         """Apply scheduled faults, admit into free slots (unless stalled),
         then one fused decode step. Wall time (``metrics.wall_s``) covers
@@ -826,18 +974,29 @@ class BatchedServer:
             # steps later when a recycled block shows up in two tables
             self._paged.check()
 
-    def _ensure_or_preempt(self, slot: int, pos: int, n: int) -> bool:
-        """``ensure_step`` that never lets ``PoolExhausted`` escape: mid-run
-        pressure (a fault plan shrinking the pool out from under admission's
-        reservations) evicts victims until the write fits, the failing slot
-        itself last. Returns True when any table changed (mapping OR
+    def _ensure_or_preempt(self, slot: int, pos: int, n: int,
+                           cow_pairs: list | None = None) -> bool:
+        """``ensure_step`` + copy-on-write that never lets ``PoolExhausted``
+        escape: mid-run pressure (a fault plan shrinking the pool out from
+        under admission's reservations) evicts victims until the write fits,
+        the failing slot itself last. Shared blocks in the write range are
+        COW-split here — ``cow_pairs`` accumulates the (old, new) splits the
+        caller must device-copy before the step (splits that landed before a
+        mid-loop eviction stay in the list: copying a row that was since
+        freed is harmless, unwritten rows are masked invalid for any later
+        owner). Returns True when any table changed (mapping, split OR
         eviction)."""
         changed = False
         while True:
             try:
-                return self._paged.ensure_step(slot, pos, n) or changed
+                changed |= self._paged.ensure_step(slot, pos, n)
+                if cow_pairs is not None and self.prefix_cache:
+                    before = len(cow_pairs)
+                    self._paged.cow_step(slot, pos, n, out=cow_pairs)
+                    changed |= len(cow_pairs) > before
+                return changed
             except PoolExhausted:
-                # a partial mapping may have landed before the raise
+                # a partial mapping/split may have landed before the raise
                 changed = True
                 victim = sched.pick_victim(self.active, below=None)
                 if victim is None or victim == slot:
@@ -846,6 +1005,45 @@ class BatchedServer:
                     self._preempt(slot)
                     return changed
                 self._preempt(victim)
+
+    def _apply_cow(self, pairs: list[tuple[int, int]]):
+        """Run the device-side half of the COW splits: copy each old block's
+        rows into the new private block before the fused step scatters into
+        it. Index vectors pad to 4-entry buckets (src clamps to a real
+        block, dst pads out-of-range so the scatter drops it) to bound the
+        compiled-shape set."""
+        nb = self._paged.pool.num_blocks
+        self.metrics.cow_splits += len(pairs)
+        self.metrics.kv_bytes_written += (
+            len(pairs) * self._paged.block_size * self._kv_row_bytes
+        )
+        for k in range(0, len(pairs), 4):
+            batch = pairs[k:k + 4]
+            src = np.zeros(4, np.int32)
+            dst = np.full(4, nb, np.int32)
+            src[:len(batch)] = [p[0] for p in batch]
+            dst[:len(batch)] = [p[1] for p in batch]
+            ctx = (meshes.use_mesh(self.mesh) if self.mesh is not None
+                   else contextlib.nullcontext())
+            with ctx:
+                self.cache = self._cow_fn(self.cache, jnp.asarray(src),
+                                          jnp.asarray(dst))
+
+    def _register_prefix(self, slot: int):
+        """Advance ``slot``'s prefix-index registration watermark: feed
+        blocks whose last row the slot's position has passed are fully
+        written (shared ones were already valid) and become shareable. Runs
+        before any finish-time release — a released block is evicted from
+        the index by the refcount-zero hook, never registered dead."""
+        keys = self._slot_keys[slot]
+        if keys is None:
+            return
+        upto = min(int(self._positions[slot]) // self._paged.block_size,
+                   len(keys))
+        if upto > self._reg_upto[slot]:
+            self._reg_upto[slot] = self._paged.register_blocks(
+                slot, keys, int(self._reg_upto[slot]), upto
+            )
 
     def _step_chunked(self, t0: float):
         """C uniform masked sub-steps across all slots (the reference)."""
@@ -856,15 +1054,19 @@ class BatchedServer:
             # alloc-on-write: map blocks for the rows each slot writes this
             # step (guaranteed to succeed when the pool is unfaulted —
             # admission reserved the worst case; under injected shrinkage
-            # _ensure_or_preempt evicts to fit)
+            # _ensure_or_preempt evicts to fit), COW-splitting any block
+            # still shared with another slot before the scatter lands
             changed = False
+            cow_pairs: list[tuple[int, int]] = []
             for i in range(self.slots):
                 if self.active[i] is None:
                     continue
                 pos = int(self._positions[i])
                 n = min(self.prefill_chunk, self.max_seq - pos)
                 if n > 0:
-                    changed |= self._ensure_or_preempt(i, pos, n)
+                    changed |= self._ensure_or_preempt(i, pos, n, cow_pairs)
+            if cow_pairs:
+                self._apply_cow(cow_pairs)
             if changed or not self._tables_fresh:
                 tf, tr = self._paged.tables()
                 self._table_dev = jnp.asarray(tf)
@@ -904,18 +1106,26 @@ class BatchedServer:
             plen = int(self._prompt_len[i])
             # prefill vs decode token split: prompt tokens fed this step
             # (chunked stepping feeds up to C), generations counted on emit
-            self.metrics.prompt_tokens += (
-                min(int(self._positions[i]), plen) - min(int(old_pos[i]), plen)
-            )
+            fed = (min(int(self._positions[i]), plen)
+                   - min(int(old_pos[i]), plen))
+            self.metrics.prompt_tokens += fed
+            ten = self.metrics.tenant(req.tenant)
+            ten["prompt_tokens"] += fed
+            emitted = 0
             for j in range(toks.shape[0]):
                 # truncate at max_new: the device may over-generate up to
                 # C-1 tokens in the final chunk of a request
                 if not emits[j, i] or len(req.out) >= req.max_new_tokens:
                     continue
                 req.out.append(int(toks[j, i]))
-                generated += 1
+                emitted += 1
                 if req.ttft_s is None:
                     self._record_first_token(req, now)
+            generated += emitted
+            ten["tokens_generated"] += emitted
+            # index the newly completed feed blocks BEFORE any finish-time
+            # release: freed blocks must never enter the index
+            self._register_prefix(i)
             if (len(req.out) >= req.max_new_tokens
                     or int(self._positions[i]) >= self.max_seq):
                 self._finish(req, i)
@@ -925,6 +1135,11 @@ class BatchedServer:
         # chunked honesty: the fused program computes every slot row for all
         # C sub-steps, live or not
         self.metrics.batched_tokens += self.slots * self.prefill_chunk
+        # KV traffic: every advanced position scattered one row into each
+        # cache region (COW copy bytes were added by _apply_cow)
+        self.metrics.kv_bytes_written += (
+            int((self._positions - old_pos).sum()) * self._kv_row_bytes
+        )
         self.metrics.wall_s += now - t0
 
     def _step_tokens(self, t0: float):
@@ -948,10 +1163,14 @@ class BatchedServer:
         if self._paged is not None:
             # map blocks BEFORE building the flat batch: under injected pool
             # shrinkage _ensure_or_preempt may evict slots, and an evicted
-            # slot must not schedule rows this step
+            # slot must not schedule rows this step. COW splits land here
+            # too — before the per-token tables are gathered
+            cow_pairs: list[tuple[int, int]] = []
             for i, p, n in work:
                 if self.active[i] is not None:
-                    self._ensure_or_preempt(i, p, n)
+                    self._ensure_or_preempt(i, p, n, cow_pairs)
+            if cow_pairs:
+                self._apply_cow(cow_pairs)
             work = [(i, p, n) for i, p, n in work
                     if self.active[i] is not None]
         t_live = sum(n for _, _, n in work)
@@ -1011,7 +1230,10 @@ class BatchedServer:
             plen = int(self._prompt_len[i])
             new_p = p + n
             self._positions[i] = new_p
-            self.metrics.prompt_tokens += min(new_p, plen) - min(p, plen)
+            fed = min(new_p, plen) - min(p, plen)
+            self.metrics.prompt_tokens += fed
+            ten = self.metrics.tenant(req.tenant)
+            ten["prompt_tokens"] += fed
             if new_p >= plen:
                 # the slot's last scheduled row sits at the final prompt
                 # position or beyond: its sample is a real generation
@@ -1020,8 +1242,12 @@ class BatchedServer:
                 if len(req.out) < req.max_new_tokens:
                     req.out.append(tok)
                     generated += 1
+                    ten["tokens_generated"] += 1
                     if req.ttft_s is None:
                         self._record_first_token(req, now)
+            # index the newly completed feed blocks BEFORE any finish-time
+            # release: freed blocks must never enter the index
+            self._register_prefix(i)
             if (len(req.out) >= req.max_new_tokens
                     or new_p >= self.max_seq):
                 self._finish(req, i)
@@ -1029,6 +1255,9 @@ class BatchedServer:
         self.metrics.active_slot_steps += n_active
         self.metrics.tokens_generated += generated
         self.metrics.batched_tokens += t_live
+        # KV traffic: every live row scattered once into each cache region
+        # (COW copy bytes were added by _apply_cow)
+        self.metrics.kv_bytes_written += t_live * self._kv_row_bytes
         self.metrics.wall_s += now - t0
 
     def reset_metrics(self):

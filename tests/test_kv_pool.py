@@ -5,13 +5,21 @@ interleavings driven by a seeded RNG — must preserve the allocator
 invariants after EVERY operation:
 
   * no double allocation: a physical block id is mapped by at most one
-    (slot, logical-block) entry, and never while also on the free list;
-  * conservation: ``free + in_use == total``, always;
+    (slot, logical-block) entry, and never while also on the free list —
+    generalised under prefix sharing to: a block's refcount equals the
+    number of table entries mapping it, blocks with refcount > 0 are never
+    on a free/quarantine list, and zero-refcount blocks sit on exactly one;
+  * conservation: ``free + distinct-in_use + quarantined == total``, always;
   * table/length consistency: each slot's mapped entries are a contiguous
     prefix of its table row, exactly ``ceil(covered_rows / block_size)`` long;
   * OOM is deferral, not a crash: when ``can_admit`` says no, admitting
     raises ``PoolExhausted`` *without corrupting state*, and a request that
-    was admitted can always map every block its reservation covers.
+    was admitted can always map every block its reservation covers —
+    including the copy-on-write split when its first private write lands
+    inside the shared prefix;
+  * the refcount lifecycle (``map_prefix``/``cow``/``release``) keeps the
+    prefix index honest: indexed blocks are resident, a refcount hitting
+    zero evicts the index entry before the block id recycles.
 
 Runs under real ``hypothesis`` when installed, else the deterministic
 ``tests/_hypothesis_fallback.py`` shim conftest.py registers.
@@ -22,7 +30,8 @@ import pytest
 from hypothesis import given, settings
 from hypothesis import strategies as st
 
-from repro.serve.kv_pool import KVBlockPool, PagedKV, PoolExhausted, blocks_for
+from repro.serve.kv_pool import (KVBlockPool, PagedKV, PoolExhausted,
+                                 PrefixIndex, blocks_for, prefix_keys)
 
 
 # ------------------------------ unit edges ------------------------------------
@@ -87,6 +96,123 @@ def test_table_array_clamps_unmapped():
     t = pool.table_array()
     assert t.min() >= 0, "unmapped entries must clamp to block 0 (jax gathers wrap -1)"
     assert t[0, 0] == pool.table[0, 0]
+
+
+# ------------------------- refcounted prefix sharing --------------------------
+def test_map_prefix_shares_resident_blocks():
+    pool = KVBlockPool(8, 2, 3, 4)
+    pool.admit(0, 2)
+    pool.ensure(0, 3)  # slot 0 writes two blocks privately
+    shared = [int(b) for b in pool.table[0, :2]]
+    pool.admit(1, 1)
+    pool.map_prefix(1, shared)
+    assert int(pool.n_mapped[1]) == 2
+    assert [int(b) for b in pool.table[1, :2]] == shared
+    assert all(int(pool.refcount[b]) == 2 for b in shared)
+    # sharing takes nothing from the free list or the slot's reservation
+    assert pool.free_blocks == 6 and int(pool._reserved[1]) == 1
+    pool.check()
+    # private alloc-on-write continues from the first divergent block
+    pool.ensure(1, 5)
+    assert int(pool.n_mapped[1]) == 3
+    assert int(pool.refcount[int(pool.table[1, 2])]) == 1
+    pool.check()
+
+
+def test_map_prefix_rejects_occupied_slot_and_stale_blocks():
+    pool = KVBlockPool(8, 2, 2, 4)
+    pool.admit(0, 2)
+    pool.ensure(0, 1)
+    bid = int(pool.table[0, 0])
+    pool.admit(1, 2)
+    pool.ensure(1, 1)
+    with pytest.raises(ValueError, match="map_prefix"):
+        pool.map_prefix(1, [bid])  # sharing must precede alloc-on-write
+    pool.release(1)
+    pool.release(0)  # bid back on the free list: refcount 0
+    pool.admit(1, 1)
+    with pytest.raises(ValueError, match="stale"):
+        pool.map_prefix(1, [bid])  # a freed block must never be re-shared
+    pool.check()
+
+
+def test_release_shared_blocks_frees_only_at_zero():
+    """Double-free regression: the pre-refcount ``release`` unconditionally
+    appended every mapped block to the free list — under sharing the second
+    holder's release would push the same id twice, and the allocator would
+    then hand one physical block to two writers. Freeing must happen exactly
+    once, at refcount zero, with the eviction hook fired right there."""
+    evicted: list[int] = []
+    pool = KVBlockPool(8, 2, 3, 4)
+    pool.on_zero = evicted.append
+    pool.admit(0, 2)
+    pool.ensure(0, 3)
+    shared = [int(b) for b in pool.table[0, :2]]
+    pool.admit(1, 0)
+    pool.map_prefix(1, shared)
+    assert pool.release(0) == 0  # holder 1 keeps both blocks resident
+    assert evicted == [] and pool.free_blocks == 6
+    pool.check()
+    assert pool.release(1) == 2  # last holder out: each block freed ONCE
+    assert sorted(evicted) == sorted(shared)
+    assert pool.free_blocks == 8
+    pool.check()
+
+
+def test_cow_splits_shared_block_before_write():
+    pool = KVBlockPool(8, 2, 2, 4)
+    pool.admit(0, 2)
+    pool.ensure(0, 3)
+    shared = [int(b) for b in pool.table[0, :2]]
+    pool.admit(1, 1)  # the +1 reservation the COW split will consume
+    pool.map_prefix(1, shared)
+    old, new = pool.cow(1, 1)
+    assert old == shared[1] and new not in shared
+    # the writer got a private copy; the other holder reads the old block
+    assert int(pool.table[1, 1]) == new and int(pool.table[0, 1]) == old
+    assert int(pool.refcount[old]) == 1 and int(pool.refcount[new]) == 1
+    assert int(pool._reserved[1]) == 0  # split consumed the reservation
+    pool.check()
+    with pytest.raises(ValueError, match="not .*shared"):
+        pool.cow(1, 1)  # now private: nothing to split
+    with pytest.raises(ValueError, match="not .*shared"):
+        pool.cow(1, 3)  # unmapped logical block
+    pool.check()
+
+
+def test_headroom_floors_at_zero_after_shrink():
+    """Admission-closure regression: ``can_admit`` used to compare demand
+    against raw ``free - reserved``. A fault-plan ``shrink`` can pull free
+    below the outstanding reservations while admitted slots still hold their
+    promises — the deficit must read as *zero* capacity (admission closed),
+    never as a negative number fed into the comparison."""
+    pool = KVBlockPool(8, 2, 2, 4)
+    pool.admit(0, 4)
+    assert pool.headroom == 4 and pool.can_admit(4)
+    assert pool.shrink(6) == 6  # free 2 < reserved 4: 2-block deficit
+    assert pool.free_blocks == 2 and pool.reserved_blocks == 4
+    assert pool.headroom == 0
+    assert not pool.can_admit(1)
+    pool.check()  # the reservation bound counts quarantined capacity
+    assert pool.grow() == 6
+    assert pool.headroom == 4 and pool.can_admit(4)
+    pool.check()
+
+
+def test_prefix_index_longest_chain_and_first_writer_wins():
+    toks = [1, 2, 3, 4, 5, 6, 7]
+    keys = prefix_keys(toks, 2)
+    assert len(keys) == 3  # only FULL blocks get content keys
+    idx = PrefixIndex()
+    assert idx.register(keys[0], 10) and idx.register(keys[1], 11)
+    assert not idx.register(keys[0], 12)  # first writer wins on the key...
+    assert not idx.register(keys[2], 11)  # ...and on the block id
+    assert idx.lookup(keys) == [10, 11]  # longest resident chain, head-first
+    # same block tokens under a different head: chained key, so no false hit
+    assert idx.lookup(prefix_keys([9, 9, 3, 4], 2)) == []
+    idx.evict_block(11)
+    assert idx.lookup(keys) == [10]
+    assert idx.blocks() == {10} and len(idx) == 1
 
 
 # --------------------------- property: lifecycles -----------------------------
@@ -177,6 +303,104 @@ def test_block_ids_unique_across_slots(seed, block_size, num_blocks):
     mapped = [int(b) for r in pool.table for b in r if b >= 0]
     assert len(mapped) == len(set(mapped))
     assert len(mapped) + pool.free_blocks == num_blocks
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    seed=st.integers(0, 10_000),
+    num_blocks=st.integers(4, 28),
+    block_size=st.integers(1, 4),
+    slots=st.integers(2, 5),
+    n_ops=st.integers(10, 70),
+)
+def test_random_shared_lifecycles_preserve_invariants(seed, num_blocks,
+                                                      block_size, slots,
+                                                      n_ops):
+    """Random admit/step/release/preempt interleavings WITH prefix sharing,
+    through the PagedKV shared-admission protocol: requests drawn from a
+    small template pool (so prompts overlap), token-level stepping with the
+    server's write order (COW-split, then alloc-on-write), registration of
+    fully-written feed blocks, and mid-flight preemption. After every op the
+    refcount invariants must hold (``check()``: refcount == table mappings,
+    zero-refcount blocks on exactly one idle list, conservation over
+    *distinct* blocks) and a row about to be scattered must always live in a
+    refcount-1 block — a write into a shared block would corrupt another
+    request's cache."""
+    rng = random.Random(seed)
+    max_seq = 8 * block_size
+    kv = PagedKV(block_size=block_size, max_seq=max_seq,
+                 pool=KVBlockPool(num_blocks, block_size, slots,
+                                  blocks_for(max_seq, block_size)),
+                 prefix_cache=True)
+    templates = [[rng.randrange(30) for _ in range(3 * block_size)]
+                 for _ in range(2)]
+    live: dict[int, dict] = {}
+
+    def admit(slot):
+        if rng.random() < 0.75:
+            feed = list(rng.choice(templates))
+            feed += [rng.randrange(30)
+                     for _ in range(rng.randint(0, 2 * block_size))]
+        else:
+            feed = [rng.randrange(30)
+                    for _ in range(rng.randint(1, 3 * block_size))]
+        plen, max_new = len(feed), rng.randint(1, 4)
+        keys = prefix_keys(feed, block_size)
+        if kv.can_admit_shared(keys, plen, max_new, token_step=True):
+            start, n_shared = kv.admit_shared(slot, keys, plen, max_new,
+                                              token_step=True)
+            # the final prompt position is always recomputed, so emission
+            # goes through the normal step path even on a full prefix hit
+            assert start == min(n_shared * block_size, plen - 1)
+            live[slot] = dict(pos=start, plen=plen, max_new=max_new, out=0,
+                              keys=keys, reg=n_shared)
+        else:
+            # OOM defers: forcing the admit must raise, not corrupt
+            with pytest.raises(PoolExhausted):
+                kv.admit_shared(slot, keys, plen, max_new, token_step=True)
+
+    def step(slot):
+        stt = live[slot]
+        # the server's token-level write path: COW-split any shared block
+        # the scatter would touch, then alloc-on-write — the shared
+        # reservation guarantees neither ever raises here
+        kv.cow_step(slot, stt["pos"], 1)
+        kv.ensure_step(slot, stt["pos"], 1)
+        bid = int(kv.pool.table[slot, stt["pos"] // block_size])
+        assert int(kv.pool.refcount[bid]) == 1, "write into a shared block"
+        stt["pos"] += 1
+        if stt["pos"] >= stt["plen"]:
+            stt["out"] += 1
+        upto = min(stt["pos"] // block_size, len(stt["keys"]))
+        if upto > stt["reg"]:  # feed blocks register once fully written
+            stt["reg"] = kv.register_blocks(slot, stt["keys"], stt["reg"],
+                                            upto)
+        if stt["out"] >= stt["max_new"] or stt["pos"] >= max_seq:
+            kv.release(slot)
+            del live[slot]
+
+    for _ in range(n_ops):
+        op = rng.choice(("admit", "step", "step", "release"))
+        if op == "admit":
+            idle = [s for s in range(slots) if s not in live]
+            if idle:
+                admit(rng.choice(idle))
+        elif op == "step" and live:
+            step(rng.choice(list(live)))
+        elif op == "release" and live:
+            # preemption: a mid-flight holder drops its blocks + reservation;
+            # blocks it shared stay resident for (and via) the other holders
+            slot = rng.choice(list(live))
+            kv.release(slot)
+            del live[slot]
+        kv.check()
+
+    for slot in list(live):
+        kv.release(slot)
+    kv.check()
+    assert kv.pool.blocks_in_use == 0 and kv.pool.reserved_blocks == 0
+    assert kv.pool.free_blocks == num_blocks
+    assert len(kv.index) == 0, "index must drain when the last holder leaves"
 
 
 # ------------------------------ PagedKV composite -----------------------------

@@ -21,7 +21,10 @@ contracts to hold under fire:
 
 14 seeds x both step modes = 28 randomized replays, plus scripted plans
 pinning the individual fault paths (mid-run shrink, admission stall,
-deadline storm, dense-mode faults).
+deadline storm, dense-mode faults). Paged runs exercise the *refcounted*
+pool throughout (prefix sharing auto-enables for this family), and the
+headroom regression pins that a shrink-induced free-below-reserved deficit
+closes admission instead of comparing negative.
 """
 import jax
 import numpy as np
@@ -181,6 +184,40 @@ def test_dense_mode_chaos(seed):
     plan = FaultPlan.random(seed, horizon=16, max_blocks=3)
     srv, reqs, done = _chaos_run(plan, kv="dense")
     _assert_contracts(srv, reqs, done)
+
+
+def test_headroom_deficit_closes_admission_and_recovers():
+    """Admission-closure regression (kv_pool.headroom): a shrink that pulls
+    ``free`` below the outstanding reservations used to make the raw
+    ``free - reserved`` comparison go *negative* — here the deficit must
+    read as zero headroom (admission closed, new arrivals defer cleanly),
+    the allocator invariants must keep holding, and healing the pool must
+    reopen admission and drain everything token-exact."""
+    st = _setup()
+    srv = BatchedServer(st["cfg"], st["params"], batch_slots=2, max_seq=48,
+                        kv="paged", block_size=8, prefill_chunk=4,
+                        debug_checks=True)
+    srv.submit(Request(rid=0, prompt=list(st["prompts"][0]),
+                       max_new_tokens=_MIX[0][1]))
+    srv.step()  # slot 0 mid-prefill: some blocks mapped, some still reserved
+    pool = srv._paged.pool
+    assert pool.reserved_blocks > 0
+    assert srv._paged.shrink(pool.num_blocks) > 0
+    assert pool.free_blocks < pool.reserved_blocks, "not in deficit: resize mix"
+    assert pool.headroom == 0, "deficit must floor at zero, not go negative"
+    assert not pool.can_admit(1)
+    pool.check()
+    # a new arrival under the deficit defers — no crash, no overcommit
+    srv.submit(Request(rid=1, prompt=list(st["prompts"][1]),
+                       max_new_tokens=_MIX[1][1]))
+    srv.step()
+    assert srv.metrics.deferrals >= 1
+    assert all(r is None or r.rid == 0 for r in srv.active)
+    # heal: admission reopens and both requests finish with oracle tokens
+    srv._paged.grow(None)
+    done = {r.rid: r.out for r in srv.run(max_steps=200)}
+    assert done == {0: _oracle(0), 1: _oracle(1)}
+    assert pool.blocks_in_use == 0 and pool.reserved_blocks == 0
 
 
 def test_fault_plan_validation():

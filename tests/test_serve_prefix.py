@@ -1,0 +1,336 @@
+"""Refcounted prefix-sharing KV blocks (serve/kv_pool.py x BatchedServer).
+
+The acceptance bar for prefix sharing is *token-exactness*: a server with
+``prefix_cache=True`` — requests mapping resident prompt blocks read-only,
+paying prefill only from their first divergent block, COW-splitting shared
+blocks ahead of any write — must emit exactly the tokens the unshared pool
+emits, for every request, across:
+
+  * cache families (GQA full-KV, MLA absorbed-latent) x step modes
+    (chunked, token-level) x paged-attention backends (gather, pallas);
+  * full-prompt hits, where the recomputed final prompt position lands
+    *inside* the shared prefix and the write must COW-split first;
+  * preempt-then-resume under a tight block budget while the victim's
+    blocks are shared with (and kept resident by) another request;
+  * block id 0 shared while other slots' unmapped table entries clamp to 0
+    (``table_array``): masked reads + write-ok gating must keep the clamp
+    from ever corrupting or leaking the shared block;
+  * a full synthetic production trace (``serve.faults.synth_trace``)
+    replayed through the wdrr scheduler — determinism and on/off parity.
+
+Plus the policy surface: eligibility (paged + attention-only segments; the
+SWA-ring composition is rejected at the kv_pool layer and gracefully falls
+back at the server layer, recorded via ``dist.meshes.record_fallback``),
+trace-generator validation, and a negative test of the
+``benchmarks/check_regression.py`` prefix gate (the CI floor must actually
+fire on a doctored regression).
+"""
+import dataclasses
+import importlib.util
+import json
+import os
+
+import jax
+import pytest
+
+from repro.configs import get_reduced_config
+from repro.dist import meshes
+from repro.models import model_zoo
+from repro.serve.faults import replay_trace, synth_trace
+from repro.serve.kv_pool import KVBlockPool, PagedKV
+from repro.serve.serving import BatchedServer, Request
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+# the two paged cache families (recurrent/hybrid families are ineligible for
+# sharing and covered by the eligibility test instead)
+FAMILIES = ["internlm2-20b", "minicpm3-4b"]
+
+# a 3-full-block (block_size 4) shared template; requests diverge on token 13
+_SHARED = [7, 3, 9, 1, 4, 2, 8, 5, 6, 1, 3, 7]
+# staggered lengths: rid 0 is a long-running holder, so its registered
+# template blocks are still resident when rids 2/3 are admitted into the
+# slot rids 1/2 freed (2 slots x 4 requests = guaranteed concurrency overlap)
+_STREAM = [(0, _SHARED + [10], 20), (1, _SHARED + [11], 4),
+           (2, _SHARED + [12], 5), (3, _SHARED + [13], 6)]
+
+
+def _params(arch, seed=2):
+    if arch == "hymba-swa":
+        cfg = dataclasses.replace(get_reduced_config("hymba-1.5b"),
+                                  n_global_layers=1)
+    else:
+        cfg = get_reduced_config(arch)
+    params, _ = model_zoo.init_params(cfg, jax.random.PRNGKey(seed))
+    return cfg, params
+
+
+def _serve(cfg, params, stream, prefix, **kw):
+    kw.setdefault("batch_slots", 2)
+    kw.setdefault("max_seq", 40)
+    kw.setdefault("kv", "paged")
+    kw.setdefault("block_size", 4)
+    kw.setdefault("prefill_chunk", 4)
+    srv = BatchedServer(cfg, params, prefix_cache=prefix, **kw)
+    for rid, p, n in stream:
+        srv.submit(Request(rid, list(p), n))
+    done = srv.run(max_steps=500)
+    return {r.rid: r.out for r in done}, srv
+
+
+# ------------------------- token-exactness: the bar ---------------------------
+@pytest.mark.parametrize("attn_impl", ["gather", "pallas"])
+@pytest.mark.parametrize("step_mode", ["chunked", "tokens"])
+@pytest.mark.parametrize("arch", FAMILIES)
+def test_shared_prefix_token_exact(arch, step_mode, attn_impl):
+    """Shared-prefix serving emits exactly the unshared pool's tokens while
+    actually sharing (hits > 0) and actually skipping prefill work."""
+    cfg, params = _params(arch)
+    kw = dict(step_mode=step_mode, attn_impl=attn_impl)
+    ref, srv_off = _serve(cfg, params, _STREAM, prefix=False, **kw)
+    got, srv_on = _serve(cfg, params, _STREAM, prefix=True, **kw)
+    assert srv_on.prefix_cache and not srv_off.prefix_cache
+    assert got == ref, (arch, step_mode, attn_impl)
+    m_on, m_off = srv_on.metrics, srv_off.metrics
+    assert m_on.finished == len(_STREAM) == m_off.finished
+    assert m_on.prefix_hits > 0 and m_on.prefix_tokens > 0
+    # skipped prefill shows up in the fed-token accounting, and fewer KV
+    # bytes hit the device per generated token
+    assert m_on.prompt_tokens < m_off.prompt_tokens
+    assert 0 < m_on.kv_bytes_written < m_off.kv_bytes_written
+    # free-on-finish drained the refcounted pool and the index with it
+    pool = srv_on._paged.pool
+    assert pool.blocks_in_use == 0 and pool.reserved_blocks == 0
+    assert len(srv_on._paged.index) == 0
+    srv_on._paged.check()
+
+
+@pytest.mark.parametrize("step_mode", ["chunked", "tokens"])
+def test_full_prompt_hit_cow_splits_before_write(step_mode):
+    """A prompt that IS the template hits every block, so its recomputed
+    final position lands inside the shared prefix — the first write must
+    COW-split that block (never scatter into it) and stay token-exact."""
+    cfg, params = _params("internlm2-20b")
+    stream = [(0, list(_SHARED), 16), (1, list(_SHARED), 4),
+              (2, list(_SHARED), 5)]
+    ref, _ = _serve(cfg, params, stream, prefix=False, step_mode=step_mode)
+    got, srv = _serve(cfg, params, stream, prefix=True, step_mode=step_mode)
+    assert got == ref, step_mode
+    m = srv.metrics
+    assert m.prefix_hits > 0
+    assert m.cow_splits > 0, "full-prompt hit must exercise the COW path"
+    srv._paged.check()
+
+
+def test_preempt_then_resume_holding_shared_blocks_token_exact():
+    """A tight pool forces preemption while the victim's template blocks are
+    shared: eviction decrements refcounts (blocks stay resident for the
+    other holder), resume re-admits through the shared path, and every
+    request still byte-matches the roomy unshared reference."""
+    cfg, params = _params("internlm2-20b")
+    lo = [(0, _SHARED + [10], 16, 2), (1, _SHARED + [11], 12, 2)]
+    hi = [(2, _SHARED + [12], 6, 0), (3, [9, 9, 2, 1, 8], 6, 0)]
+    ref, _ = _serve(cfg, params, [(r, p, n) for r, p, n, _ in lo + hi],
+                    prefix=False)
+
+    srv = BatchedServer(cfg, params, batch_slots=2, max_seq=40, kv="paged",
+                        block_size=4, prefill_chunk=4, kv_blocks=14,
+                        scheduler="priority", prefix_cache=True)
+    for rid, p, n, prio in lo:
+        srv.submit(Request(rid, list(p), n, priority=prio))
+    srv.step()
+    srv.step()  # the low-priority pair is mid-flight, blocks registered
+    for rid, p, n, prio in hi:
+        srv.submit(Request(rid, list(p), n, priority=prio))
+    done = {r.rid: r.out for r in srv.run(max_steps=500)}
+    m = srv.metrics
+    assert m.preemptions > 0, "tight pool must force at least one eviction"
+    assert m.prefix_hits > 0
+    assert done == ref, (done, ref)
+    srv._paged.check()
+    assert srv._paged.pool.blocks_in_use == 0
+
+
+def test_block_zero_shared_clamp_is_harmless():
+    """The LIFO free list hands out block id 0 FIRST, so the first template
+    block lands in physical block 0 and gets shared — while every other
+    slot's unmapped table entries clamp to 0 (``table_array``: jax gathers
+    wrap -1 to the *last* block otherwise). Masked reads and write-ok gating
+    must keep those clamped aliases from reading or corrupting the shared
+    block: served tokens stay exact and the refcount audit stays clean."""
+    cfg, params = _params("internlm2-20b")
+    srv = BatchedServer(cfg, params, batch_slots=2, max_seq=40, kv="paged",
+                        block_size=4, prefill_chunk=4, prefix_cache=True)
+    srv.submit(Request(0, _SHARED + [10], 14))
+    for _ in range(4):  # prefill past the template: blocks registered
+        srv.step()
+    pool = srv._paged.pool
+    assert int(pool.table[0, 0]) == 0, "LIFO pool must hand out block 0 first"
+    assert 0 in srv._paged.index.blocks()
+    srv.submit(Request(1, _SHARED + [11], 8))
+    srv.step()  # admission maps the shared chain — block 0 now refcount 2
+    assert any(r is not None and r.rid == 1 for r in srv.active)
+    assert int(pool.refcount[0]) == 2
+    # the idle/unmapped entries of BOTH slots clamp onto that shared block
+    assert pool.table_array().min() == 0
+    done = {r.rid: r.out for r in srv.run(max_steps=300)}
+    ref, _ = _serve(cfg, params, [(0, _SHARED + [10], 14),
+                                  (1, _SHARED + [11], 8)], prefix=False)
+    assert done == ref
+    srv._paged.check()
+
+
+# ------------------------------ eligibility -----------------------------------
+def test_prefix_cache_eligibility_and_fallback():
+    # the unsound composition is rejected at the kv_pool layer outright
+    with pytest.raises(ValueError, match="ring"):
+        PagedKV(block_size=4, max_seq=16, pool=KVBlockPool(8, 4, 2, 4),
+                ring_width=8, ring=KVBlockPool(8, 4, 2, 4), prefix_cache=True)
+    # hybrid family (SWA ring + mamba segments): explicit opt-in degrades to
+    # off, with the fallback recorded for the sharding/telemetry report
+    cfg_h, params_h = _params("hymba-swa")
+    meshes.clear_fallbacks()
+    srv = BatchedServer(cfg_h, params_h, batch_slots=2, max_seq=24,
+                        kv="paged", block_size=4, prefix_cache=True)
+    assert srv.prefix_cache is False
+    assert any(t == "serve_prefix" for t, _, _ in meshes.fallbacks())
+    # dense KV has no block identity to share
+    cfg_g, params_g = _params("internlm2-20b")
+    meshes.clear_fallbacks()
+    dense = BatchedServer(cfg_g, params_g, batch_slots=2, max_seq=24,
+                          prefix_cache=True)
+    assert dense.prefix_cache is False
+    assert any(t == "serve_prefix" for t, _, _ in meshes.fallbacks())
+    # auto (prefix_cache=None): on for eligible paged shapes, quietly off
+    # for ineligible ones — no fallback noise when nothing was requested
+    auto = BatchedServer(cfg_g, params_g, batch_slots=2, max_seq=24,
+                         kv="paged", block_size=4)
+    assert auto.prefix_cache is True
+    meshes.clear_fallbacks()
+    auto_h = BatchedServer(cfg_h, params_h, batch_slots=2, max_seq=24,
+                           kv="paged", block_size=4)
+    assert auto_h.prefix_cache is False
+    assert not meshes.fallbacks()
+
+
+# --------------------------- trace replay harness -----------------------------
+_TRACE_KW = dict(steps=10, tenants=2, vocab=32, rate=0.5, p_shared=0.9,
+                 templates_per_tenant=1, template_len=12, mean_suffix=3,
+                 max_prompt=20, max_new=6)
+
+
+def test_trace_replay_determinism_and_prefix_parity():
+    """The production-trace harness end to end: a bursty multi-tenant trace
+    replayed through the wdrr scheduler drains deterministically, and the
+    prefix cache changes the *cost* of the replay (prefill tokens, hits)
+    while never changing a single served token."""
+    cfg, params = _params("internlm2-20b")
+    trace = synth_trace(7, **_TRACE_KW)
+    assert len(trace) > 3 and trace.shared_fraction() > 0.5
+
+    def replay(prefix):
+        srv = BatchedServer(cfg, params, batch_slots=3, max_seq=32,
+                            kv="paged", block_size=4, prefill_chunk=4,
+                            scheduler="wdrr",
+                            tenant_weights=trace.tenant_weights,
+                            prefix_cache=prefix)
+        done = replay_trace(srv, trace, max_steps=600)
+        return {r.rid: r.out for r in done}, srv
+
+    out_on, srv_on = replay(True)
+    out_on2, _ = replay(True)
+    out_off, srv_off = replay(False)
+    assert out_on == out_on2, "same trace, same server config, same tokens"
+    assert out_on == out_off, "sharing must never change served tokens"
+    m_on, m_off = srv_on.metrics, srv_off.metrics
+    assert m_on.finished == len(trace) == m_off.finished
+    assert m_on.prefix_hits > 0 and m_on.prompt_tokens < m_off.prompt_tokens
+    # per-tenant rollups partition the totals
+    per = m_on.per_tenant
+    assert sorted(per) == trace.tenants
+    assert sum(v["finished"] for v in per.values()) == m_on.finished
+    assert sum(v["tokens_generated"] for v in per.values()) \
+        == m_on.tokens_generated
+    assert sum(v["prefix_hits"] for v in per.values()) == m_on.prefix_hits
+
+
+def test_synth_trace_validation_and_determinism():
+    with pytest.raises(ValueError, match="template_len"):
+        synth_trace(0, template_len=32, max_prompt=32)
+    with pytest.raises(ValueError, match="tenants"):
+        synth_trace(0, tenants=0)
+    a, b = synth_trace(3, steps=6), synth_trace(3, steps=6)
+    assert a.requests == b.requests and a.tenant_weights == b.tenant_weights
+    assert a.tenant_weights == {0: 1.0, 1: 2.0, 2: 4.0}  # default 2**t
+    assert 0.0 <= a.shared_fraction() <= 1.0
+    assert all(1 <= len(r.prompt) <= 32 and r.max_new_tokens >= 1
+               for r in a.requests)
+    # templated prompts really open with their tenant's template
+    by_head = [r for r in a.requests if r.template_id >= 0]
+    for r in by_head:
+        assert len(r.prompt) > 12  # template + at least one suffix token
+
+
+def test_replay_trace_bounded_drain_raises():
+    cfg, params = _params("internlm2-20b")
+    trace = synth_trace(1, steps=6, tenants=2, rate=1.0, max_prompt=16,
+                        max_new=4)
+    assert len(trace) > 0
+    srv = BatchedServer(cfg, params, batch_slots=2, max_seq=24, kv="paged",
+                        block_size=4)
+    with pytest.raises(RuntimeError, match="did not drain"):
+        replay_trace(srv, trace, max_steps=0)
+
+
+# --------------------------- CI gate (negative test) --------------------------
+def _load_check_regression():
+    spec = importlib.util.spec_from_file_location(
+        "_check_regression",
+        os.path.join(REPO, "benchmarks", "check_regression.py"))
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def test_regression_gate_flags_prefix_failures():
+    """The serve_prefix CI rung must actually fire: a prefill ratio under
+    the checked-in floor and a token divergence are each a failure."""
+    cr = _load_check_regression()
+    base = {"results": [{"workload": "serve_prefix",
+                         "serving": {"prefix_prefill_ratio_floor": 1.3}}]}
+
+    def cur(ratio, match):
+        return {"results": [{"workload": "serve_prefix",
+                             "outputs_match": match,
+                             "serving": {"prefix_prefill_ratio": ratio}}]}
+
+    assert cr.check(cur(1.9, True), base, 0.25, False) == []
+    fails = cr.check(cur(1.0, True), base, 0.25, False)
+    assert len(fails) == 1 and "prefix-cache prefill ratio" in fails[0]
+    fails = cr.check(cur(1.9, False), base, 0.25, False)
+    assert len(fails) == 1 and "diverged" in fails[0]
+    fails = cr.check(cur(1.0, False), base, 0.25, False)
+    assert len(fails) == 2
+    # and the checked-in baseline really carries the floor CI gates on
+    with open(os.path.join(REPO, "benchmarks", "baselines",
+                           "BENCH_serve.json")) as f:
+        entry = {r["workload"]: r for r in json.load(f)["results"]}
+    serv = entry["serve_prefix"]["serving"]
+    assert serv["prefix_prefill_ratio_floor"] == pytest.approx(1.3)
+    assert entry["serve_prefix"]["outputs_match"] is True
+
+
+# ------------------------------- CLI smoke ------------------------------------
+def test_launch_serve_cli_trace_smoke(capsys):
+    from repro.launch import serve as serve_cli
+
+    done = serve_cli.main([
+        "--arch", "internlm2-20b", "--reduced", "--batch", "2",
+        "--prompt-len", "8", "--max-new", "4", "--kv", "paged",
+        "--block-size", "4", "--prefill-chunk", "4", "--scheduler", "wdrr",
+        "--trace-seed", "7", "--trace-steps", "8",
+    ])
+    assert len(done) > 0
+    msg = capsys.readouterr().out
+    assert "[trace]" in msg and "[prefix]" in msg
+    assert "tokens by tenant" in msg

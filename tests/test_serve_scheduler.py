@@ -20,6 +20,14 @@
   priority-2 victim (strictly-lower-priority only: fifo and peer-priority
   loads never preempt), and the interactive class's submission-to-first-token
   step count beats the same load served FIFO;
+* **weighted deficit round robin** (``"wdrr"``) — proportional 2:1
+  interleaving at quantum == cost, equal-weight alternation, single-tenant
+  FIFO degeneration, priority classes dominating tenant shares, deficit
+  banking without starvation when cost > quantum, peek == pop determinism,
+  and drain-time deficit forfeiture (no hoarding);
+* deferral *episodes* — one per request per blocked period: two heads
+  alternating in front of the same full pool count two episodes, not one
+  per head swap (the A -> B -> A regression);
 * ``debug_checks`` default resolution (env var beats the pytest default).
 """
 import jax
@@ -119,6 +127,92 @@ def test_expired_pulls_from_queue_middle():
 def test_scheduler_policy_validation():
     with pytest.raises(ValueError, match="policy"):
         sched.AdmissionScheduler("lifo")
+    with pytest.raises(ValueError, match="quantum"):
+        sched.AdmissionScheduler("wdrr", quantum=0)
+    with pytest.raises(ValueError, match="weights"):
+        sched.AdmissionScheduler("wdrr", tenant_weights={0: 1.0, 1: 0.0})
+
+
+# --------------------- weighted deficit round robin ---------------------------
+def _treq(rid, tenant, priority=1, cost=2):
+    # cost = len(prompt) + max_new_tokens; split 1 / cost-1
+    return Request(rid=rid, prompt=[1], max_new_tokens=cost - 1,
+                   priority=priority, tenant=tenant)
+
+
+def test_wdrr_weighted_two_to_one_interleaving():
+    """Weight 2 vs 1 with quantum == request cost: tenant 0 gets exactly two
+    admissions per rotation lap, tenant 1 one — the [0, 0, 1, ...] pattern
+    proportional shares promise under saturation."""
+    q = sched.AdmissionScheduler("wdrr", tenant_weights={0: 2.0, 1: 1.0},
+                                 quantum=2)
+    for rid in range(9):
+        q.push(_treq(rid, tenant=rid % 2))  # 5 of t0, 4 of t1, interleaved
+    order = [q.pop().tenant for _ in range(9)]
+    assert order == [0, 0, 1, 0, 0, 1, 0, 1, 1], order
+    assert q.pop() is None
+
+
+def test_wdrr_equal_weights_alternate():
+    q = sched.AdmissionScheduler("wdrr", quantum=2)  # default weight 1.0
+    for rid in range(6):
+        q.push(_treq(rid, tenant=rid % 2))
+    assert [q.pop().tenant for _ in range(6)] == [0, 1, 0, 1, 0, 1]
+
+
+def test_wdrr_single_tenant_degenerates_to_fifo():
+    q = sched.AdmissionScheduler("wdrr", quantum=1)
+    for rid in (3, 1, 4):
+        q.push(_treq(rid, tenant=7))
+    assert [q.pop().rid for _ in range(3)] == [3, 1, 4]
+
+
+def test_wdrr_priority_classes_dominate_tenant_shares():
+    """wdrr runs *inside* the most important backlogged class: a priority-0
+    arrival from any tenant is admitted before every priority-1 request,
+    whatever the deficits say."""
+    q = sched.AdmissionScheduler("wdrr", tenant_weights={0: 100.0, 1: 1.0},
+                                 quantum=8)
+    q.push(_treq(0, tenant=0, priority=1))
+    q.push(_treq(1, tenant=0, priority=1))
+    q.push(_treq(2, tenant=1, priority=0))
+    assert q.pop().rid == 2
+    assert [q.pop().rid for _ in range(2)] == [0, 1]
+
+
+def test_wdrr_heavy_cost_banks_deficit_without_starvation():
+    """cost > quantum: a light tenant must bank deficit over several laps
+    while the heavy tenant is served each lap — and still be served within
+    ceil(cost / (quantum * weight)) laps (starvation freedom)."""
+    q = sched.AdmissionScheduler("wdrr", tenant_weights={0: 1.0, 1: 3.0},
+                                 quantum=2)
+    for rid in range(6):
+        q.push(_treq(rid, tenant=rid % 2, cost=6))
+    order = [q.pop().tenant for _ in range(6)]
+    # t1 (weight 3) covers cost 6 in one lap; t0 needs 3 laps of +2
+    assert order[:2] == [1, 1] and 0 in order[:4], order
+    assert sorted(order) == [0, 0, 0, 1, 1, 1]
+
+
+def test_wdrr_peek_always_shows_what_pop_admits():
+    q = sched.AdmissionScheduler("wdrr", tenant_weights={0: 2.0, 2: 1.0},
+                                 quantum=3)
+    rng = np.random.default_rng(4)
+    for rid in range(12):
+        q.push(_treq(rid, tenant=int(rng.integers(0, 3)),
+                     priority=int(rng.integers(0, 2)),
+                     cost=int(rng.integers(2, 9))))
+    while q:
+        head = q.peek()
+        assert q.pop() is head  # peek is the pure preview of pop's scan
+    assert q.peek() is None
+
+
+def test_wdrr_drain_resets_deficit_no_hoarding():
+    q = sched.AdmissionScheduler("wdrr", quantum=50)
+    q.push(_treq(0, tenant=0))
+    q.pop()  # backlog drained: big replenished deficit must be forfeited
+    assert q._deficit[0] == 0.0
 
 
 # ------------------------- server integration ---------------------------------
@@ -252,6 +346,37 @@ def test_admission_preemption_needs_strictly_lower_victim():
         srv.step()
         assert srv.metrics.preemptions == expect, (policy, peer_prio)
         srv.run()
+
+
+def test_deferral_episodes_count_blocked_requests_not_head_swaps():
+    """Episode-counting regression: deferrals used to re-count whenever the
+    blocked head changed, so two heads alternating in front of the same full
+    pool (A blocked, B arrives and outranks it, A surfaces again) read as
+    three episodes. An episode is one request's blocked period — it ends on
+    admission or cancellation, never on another head taking over — so the
+    A -> B -> A sequence is exactly two."""
+    cfg, params = _params("internlm2-20b")
+    # occupant reserves 5 of 6 blocks and is priority 0: later arrivals have
+    # nobody to evict and 1 block of headroom — pool-blocked until it ends
+    srv = BatchedServer(cfg, params, batch_slots=2, max_seq=24, kv="paged",
+                        block_size=4, prefill_chunk=1, kv_blocks=6)
+    srv.submit(Request(rid=0, prompt=[5, 6, 7, 8], max_new_tokens=16,
+                       priority=0))
+    srv.step()
+    a = Request(rid=1, prompt=[1, 2, 3, 4], max_new_tokens=4, priority=2)
+    srv.submit(a)
+    for _ in range(3):  # A is the blocked head for three steps: ONE episode
+        srv.step()
+    assert srv.metrics.deferrals == 1 and srv.metrics.deferral_steps == 3
+    b = Request(rid=2, prompt=[4, 3, 2, 1], max_new_tokens=4, priority=1)
+    srv.submit(b)  # B outranks A: the blocked head changes, A still waiting
+    for _ in range(3):
+        srv.step()
+    assert srv.metrics.deferrals == 2  # B opened its episode; A did NOT recount
+    done = {r.rid: r.status for r in srv.run(max_steps=100)}
+    assert done == {0: sched.FINISHED, 1: sched.FINISHED, 2: sched.FINISHED}
+    assert srv.metrics.deferrals == 2, "episodes must not recount on head swaps"
+    assert srv.metrics.deferral_steps > srv.metrics.deferrals
 
 
 def test_deadline_cancels_running_and_queued():
